@@ -1,0 +1,52 @@
+"""Shared benchmark helpers: CSV emission + workload construction."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+_ROWS: list[tuple] = []
+
+
+def emit(bench: str, metric: str, value, **tags):
+    tag = ";".join(f"{k}={v}" for k, v in sorted(tags.items()))
+    _ROWS.append((bench, metric, tag, value))
+    print(f"{bench},{metric},{tag},{value}")
+
+
+def rows():
+    return list(_ROWS)
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0
+
+
+def build_snb_setup(scale=1, n_servers=6, n_queries=1500, sharding="hash",
+                    seed=0):
+    from repro.graph import make_sharding, snb_like
+    from repro.workload import snb_workload_materialized, trace_objects
+
+    snb = snb_like(scale, seed=seed)
+    ps = snb_workload_materialized(snb, n_queries=n_queries, seed=seed)
+    traces = trace_objects(ps) if sharding in ("hypergraph",) else None
+    shard = make_sharding(sharding, snb.graph, n_servers, traces, seed=seed)
+    return snb, ps, shard
+
+
+def build_gnn_setup(n_nodes=20000, n_servers=6, n_seeds=300,
+                    sharding="mincut", seed=0):
+    from repro.graph import make_sharding, ogb_like
+    from repro.workload import gnn_workload_materialized
+
+    g = ogb_like(n_nodes, seed=seed)
+    rng = np.random.default_rng(seed)
+    seeds = rng.integers(0, g.n_nodes, n_seeds)
+    ps = gnn_workload_materialized(g, seeds, (25, 10), seed=seed)
+    shard = make_sharding(sharding, g, n_servers, seed=seed)
+    return g, ps, shard

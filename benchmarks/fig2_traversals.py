@@ -1,0 +1,46 @@
+"""Paper Fig 2: distributed traversals + the cost of single-site execution.
+
+  2a — query latency vs #distributed traversals (executor latency model)
+  2b — CDF of traversals per query, hash sharding, |S| in {3, 6, 12}
+  2c — CDF with min-cut sharding
+  2d — single-site oracle replication overhead per placement scheme
+"""
+import numpy as np
+
+from benchmarks.common import build_snb_setup, emit
+from repro.core import ReplicationScheme, query_latencies, single_site_oracle
+from repro.distsys import Cluster, LatencyModel, execute_workload
+
+
+def run():
+    # --- 2a: latency vs traversal count
+    snb, ps, shard = build_snb_setup(sharding="hash")
+    scheme = ReplicationScheme.from_sharding(shard, 6)
+    rep = execute_workload(Cluster(scheme), ps, LatencyModel(), seed=0)
+    trav = rep.query_traversals
+    lat = rep.query_latency_us
+    for k in range(0, int(trav.max()) + 1):
+        sel = trav == k
+        if sel.sum() < 5:
+            continue
+        emit("fig2a", "mean_us", round(float(lat[sel].mean()), 1), k=k)
+        emit("fig2a", "p99_us",
+             round(float(np.percentile(lat[sel], 99)), 1), k=k)
+
+    # --- 2b/2c: traversal CDFs per sharding and cluster size
+    for fig, kind in (("fig2b", "hash"), ("fig2c", "mincut")):
+        for n_srv in (3, 6, 12):
+            snb, ps, shard = build_snb_setup(n_servers=n_srv, sharding=kind)
+            scheme = ReplicationScheme.from_sharding(shard, n_srv)
+            lq = query_latencies(ps, scheme)
+            for k in (0, 1, 2, 4):
+                frac = float((lq <= k).mean())
+                emit(fig, "cdf", round(frac, 4), servers=n_srv, k=k)
+
+    # --- 2d: oracle single-site overhead per placement
+    for kind in ("hash", "mincut", "hypergraph"):
+        snb, ps, shard = build_snb_setup(sharding=kind)
+        f = snb.graph.object_sizes()
+        oracle = single_site_oracle(ps, shard, 6)
+        emit("fig2d", "oracle_overhead",
+             round(oracle.replication_overhead(f), 4), sharding=kind)

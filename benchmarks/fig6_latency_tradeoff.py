@@ -1,0 +1,55 @@
+"""Paper Fig 6: fine-tuning latency vs replication with the constraint t.
+
+  6a/6b — SNB: mean + p99 latency (and normalized slowdown) vs t,
+          replication overhead vs t
+  6c     — SNB relative throughput vs t
+  6d/6e  — GNN sampling: the same
+  6f     — GNN relative throughput vs t
+"""
+import numpy as np
+
+from benchmarks.common import build_gnn_setup, build_snb_setup, emit, timer
+from repro.core import is_latency_feasible, replicate_workload
+from repro.distsys import Cluster, LatencyModel, execute_workload
+
+TS = [0, 1, 2, 3, 4, -1]  # -1 = no constraint (t = inf)
+
+
+def _sweep(tag, ps, shard, n_servers, f):
+    base = {}
+    for t in TS:
+        if t < 0:
+            from repro.core import ReplicationScheme
+
+            scheme = ReplicationScheme.from_sharding(shard, n_servers)
+            feasible = True
+        else:
+            scheme, stats = replicate_workload(
+                ps, shard, n_servers, t, f=f.astype(np.float32))
+            feasible = is_latency_feasible(ps, scheme, t)
+        rep = execute_workload(Cluster(scheme, f=f), ps, LatencyModel(),
+                               seed=0)
+        s = rep.summary()
+        tstr = "inf" if t < 0 else t
+        emit(tag, "feasible", feasible, t=tstr)
+        emit(tag, "mean_us", round(s["mean_us"], 1), t=tstr)
+        emit(tag, "p99_us", round(s["p99_us"], 1), t=tstr)
+        emit(tag, "overhead", round(scheme.replication_overhead(f), 4),
+             t=tstr)
+        emit(tag, "qps", round(s["throughput_qps"], 0), t=tstr)
+        if t == 0:
+            base["mean"] = s["mean_us"]
+            base["qps"] = s["throughput_qps"]
+        if base:
+            emit(tag, "slowdown_vs_t0",
+                 round(s["mean_us"] / base["mean"], 2), t=tstr)
+            emit(tag, "rel_qps", round(s["throughput_qps"] / base["qps"], 3),
+                 t=tstr)
+
+
+def run():
+    snb, ps, shard = build_snb_setup(sharding="hash")
+    _sweep("fig6_snb", ps, shard, 6, snb.graph.object_sizes())
+
+    g, gps, gshard = build_gnn_setup(sharding="mincut")
+    _sweep("fig6_gnn", gps, gshard, 6, g.object_sizes())

@@ -1,0 +1,54 @@
+"""Paper Fig 7: replication cost across initial data placements (SNB) +
+the dangling-edges comparison (7d / Table 3)."""
+import numpy as np
+
+from benchmarks.common import build_snb_setup, emit
+from repro.core import dangling_edge_replication, replicate_workload
+from repro.graph import hash_partition, ldg_partition, ogb_like
+
+
+def run():
+    # --- 7a-c: replication overhead vs t per sharding scheme
+    for kind in ("hash", "mincut", "hypergraph"):
+        for n_srv in (3, 6):
+            snb, ps, shard = build_snb_setup(n_servers=n_srv, sharding=kind)
+            f = snb.graph.object_sizes()
+            for t in (0, 1, 2, 3):
+                scheme, _ = replicate_workload(
+                    ps, shard, n_srv, t, f=f.astype(np.float32))
+                emit("fig7", "overhead",
+                     round(scheme.replication_overhead(f), 4),
+                     sharding=kind, servers=n_srv, t=t)
+
+    # --- 7d/Table 3: greedy (t = floor(n/2)) vs dangling-edge replication
+    for kind in ("hash", "mincut"):
+        snb, ps, shard = build_snb_setup(sharding=kind)
+        g = snb.graph
+        f = g.object_sizes()
+        # dangling-edge k=1 enforces t = floor(max_hops/2); max path len
+        # in the short-read mix is ~5 -> t = 2
+        dang = dangling_edge_replication(g.indptr, g.indices, shard, 6, k=1)
+        greedy, _ = replicate_workload(ps, shard, 6, t=2,
+                                       f=f.astype(np.float32))
+        emit("table3", "dangling_overhead",
+             round(dang.replication_overhead(f), 4), sharding=kind)
+        emit("table3", "greedy_overhead",
+             round(greedy.replication_overhead(f), 4), sharding=kind)
+
+    # GNN variant of Table 3 (OGB-like)
+    from repro.workload import gnn_workload_materialized
+
+    g = ogb_like(15000, seed=0)
+    rng = np.random.default_rng(0)
+    ps = gnn_workload_materialized(
+        g, rng.integers(0, g.n_nodes, 200), (25, 10), seed=0)
+    f = g.object_sizes()
+    for kind, shard in (("hash", hash_partition(g.n_nodes, 6)),
+                        ("mincut", ldg_partition(g, 6, passes=1))):
+        dang = dangling_edge_replication(g.indptr, g.indices, shard, 6, k=1)
+        greedy, _ = replicate_workload(ps, shard, 6, t=1,
+                                       f=f.astype(np.float32))
+        emit("table3_gnn", "dangling_overhead",
+             round(dang.replication_overhead(f), 4), sharding=kind)
+        emit("table3_gnn", "greedy_overhead",
+             round(greedy.replication_overhead(f), 4), sharding=kind)

@@ -1,0 +1,58 @@
+"""Perf-iteration driver for the §Perf hillclimb.
+
+Runs one (arch x shape) cell on the single-pod mesh with optional config
+overrides, printing the three roofline terms + collective breakdown so
+every hypothesis->change->measure cycle is one command:
+
+  PYTHONPATH=src python -m benchmarks.perf_iterate qwen3-moe-235b-a22b \
+      train_4k moe_chunk=65536 remat_block=2
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import dataclasses
+import json
+import sys
+
+import jax
+
+
+def parse_override(s: str):
+    k, v = s.split("=", 1)
+    for cast in (int, float):
+        try:
+            return k, cast(v)
+        except ValueError:
+            pass
+    if v in ("True", "False"):
+        return k, v == "True"
+    return k, v
+
+
+def run(arch: str, shape: str, overrides: dict, multi_pod=False) -> dict:
+    from repro.configs import get_arch
+    from repro.launch import dryrun
+
+    bundle = get_arch(arch)
+    if overrides:
+        bundle.config = dataclasses.replace(bundle.config, **overrides)
+    row = dryrun.run_cell(arch, shape, multi_pod, verbose=False)
+    keep = {k: row[k] for k in (
+        "t_compute_s", "t_memory_s", "t_collective_s", "bottleneck",
+        "peak_mem_gb", "useful_frac", "t_compile_s")}
+    keep["collectives"] = {
+        k: round(v / 2**20, 1) for k, v in row["collectives"].items()
+        if k.endswith("bytes")}
+    return keep
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    overrides = dict(parse_override(s) for s in sys.argv[3:])
+    out = run(arch, shape, overrides)
+    print(json.dumps(out, indent=2, default=str))
+
+
+if __name__ == "__main__":
+    main()

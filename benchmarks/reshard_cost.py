@@ -1,0 +1,45 @@
+"""§5.4 / §6: incremental replication-scheme update cost on reshard.
+
+Compares the incremental path (RM transfer + repair of violated paths)
+against re-running the full replication from scratch, for a server drain.
+"""
+import numpy as np
+
+from benchmarks.common import build_snb_setup, emit, timer
+from repro.core import (
+    ReshardingMap,
+    is_latency_feasible,
+    repair_paths,
+    replicate_workload,
+)
+from repro.core.reshard import drain_server
+
+
+def run():
+    t = 1
+    snb, ps, shard = build_snb_setup(sharding="hash")
+    f = snb.graph.object_sizes()
+
+    scheme, stats = replicate_workload(
+        ps, shard.copy(), 6, t, f=f.astype(np.float32), track_rm=True)
+    rmap = ReshardingMap.from_entries(stats.rm, scheme.shard)
+    emit("reshard", "initial_runtime_s", round(stats.runtime_s, 2))
+    emit("reshard", "initial_replicas", scheme.replica_count())
+
+    # incremental: drain one server (partition-preserving) + repair
+    with timer() as tm:
+        moves, rep = drain_server(scheme, rmap, 5, f, strategy="single")
+        repair = repair_paths(scheme, rmap, ps, t, f)
+    emit("reshard", "incremental_s", round(tm.dt, 2))
+    emit("reshard", "transferred_replicas", rep.replicas_transferred)
+    emit("reshard", "repaired_paths", repair["repaired_paths"])
+    emit("reshard", "feasible_after", is_latency_feasible(ps, scheme, t))
+
+    # from-scratch baseline on the new sharding
+    new_shard = scheme.shard.copy()
+    with timer() as tm2:
+        scheme2, stats2 = replicate_workload(
+            ps, new_shard, 6, t, f=f.astype(np.float32))
+    emit("reshard", "scratch_s", round(tm2.dt, 2))
+    emit("reshard", "speedup_vs_scratch",
+         round(tm2.dt / max(tm.dt, 1e-9), 1))

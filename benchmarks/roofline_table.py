@@ -1,0 +1,81 @@
+"""Generate the §Roofline table: raw + scan-corrected terms per cell.
+
+Reads the raw sweep (benchmarks/results/dryrun.jsonl), adds the
+unroll-delta corrected terms (repro.analysis.corrected), recomputes the
+three roofline times and the dominant bottleneck from the corrected
+values, and writes benchmarks/results/roofline.jsonl + a markdown table.
+
+  PYTHONPATH=src python -m benchmarks.roofline_table
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import json
+import sys
+
+
+def main():
+    from repro.analysis import roofline as R
+    from repro.analysis.corrected import corrected_cell
+    from repro.configs import get_arch
+    from repro.launch.dryrun import model_flops_for
+
+    raw = {}
+    for line in open("benchmarks/results/dryrun.jsonl"):
+        r = json.loads(line)
+        if r.get("status") == "ok" and r["mesh"] == "pod16x16":
+            raw[(r["arch"], r["shape"])] = r
+
+    rows = []
+    only = sys.argv[1:] or None
+    for (arch, shape), r in sorted(raw.items()):
+        if only and arch not in only:
+            continue
+        try:
+            corr = corrected_cell(arch, shape)
+        except Exception as e:
+            print(f"# corrected failed for {arch}/{shape}: {e}",
+                  file=sys.stderr)
+            corr = None
+        bundle = get_arch(arch)
+        model = model_flops_for(bundle, shape)
+        if corr is None:
+            flops = r["hlo_flops"]
+            bytes_ = r["t_memory_s"] * R.HBM_BW
+            t_coll = r["t_collective_s"]
+        else:
+            flops, bytes_, coll = (corr["flops"], corr["bytes"],
+                                   corr["coll_bytes"])
+            t_coll = coll / R.ICI_BW
+        t_comp = flops / R.PEAK_FLOPS_BF16
+        t_mem = bytes_ / R.HBM_BW
+        terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+        bneck = max(terms, key=terms.get)
+        useful = model / (flops * 256) if flops else 0.0
+        roofline_frac = t_comp / max(t_comp, t_mem, t_coll)
+        row = {
+            "arch": arch, "shape": shape, "mesh": "pod16x16", "chips": 256,
+            "t_compute_s": t_comp, "t_memory_s": t_mem,
+            "t_collective_s": t_coll, "bottleneck": bneck,
+            "useful_frac": useful, "roofline_frac": roofline_frac,
+            "peak_mem_gb": r["peak_mem_gb"],
+            "raw_t_compute_s": r["t_compute_s"],
+            "raw_t_memory_s": r["t_memory_s"],
+            "raw_t_collective_s": r["t_collective_s"],
+            "corrected": corr is not None,
+            "notes": corr.get("notes", "") if corr else "raw-only",
+        }
+        rows.append(row)
+        print(f"{arch:24s} {shape:14s} comp={t_comp:9.3e} mem={t_mem:9.3e} "
+              f"coll={t_coll:9.3e} {bneck:10s} useful={useful:6.3f} "
+              f"rf={roofline_frac:6.3f}")
+
+    with open("benchmarks/results/roofline.jsonl", "w") as fh:
+        for row in rows:
+            fh.write(json.dumps(row) + "\n")
+    print(f"# wrote {len(rows)} rows")
+
+
+if __name__ == "__main__":
+    main()

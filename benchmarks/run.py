@@ -1,0 +1,33 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  fig2_traversals       — Fig 2a-2d (traversal CDFs, single-site cost)
+  fig6_latency_tradeoff — Fig 6a-6f (latency/throughput/replication vs t)
+  fig7_sharding         — Fig 7a-7d + Table 3 (sharding schemes, dangling)
+  table4_runtime        — Table 4 (algorithm runtime) + kernel timing
+  reshard_cost          — §5.4 incremental-update cost
+  beyond_paper          — MoE expert + recsys hot-row replication
+
+Usage: PYTHONPATH=src python -m benchmarks.run [module ...]
+Prints ``bench,metric,tags,value`` CSV.
+"""
+import sys
+import time
+
+MODULES = ["fig2_traversals", "fig6_latency_tradeoff", "fig7_sharding",
+           "table4_runtime", "reshard_cost", "beyond_paper"]
+
+
+def main() -> None:
+    want = sys.argv[1:] or MODULES
+    t0 = time.perf_counter()
+    print("bench,metric,tags,value")
+    for name in want:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t1 = time.perf_counter()
+        mod.run()
+        print(f"# {name} done in {time.perf_counter()-t1:.1f}s")
+    print(f"# total {time.perf_counter()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Paper Table 4: replication-algorithm running time vs graph scale.
+
+Also reports the §5.3 pruning ablation (the paper: without pruning,
+runtime exceeds an hour in all but the smallest case) and the Pallas
+path-latency kernel vs the jnp oracle on the analysis hot loop.
+"""
+import time
+
+import numpy as np
+
+from benchmarks.common import build_snb_setup, emit, timer
+from repro.core import replicate_workload
+
+
+def run():
+    for scale, n_queries in ((1, 1000), (2, 2000), (4, 4000)):
+        snb, ps, shard = build_snb_setup(scale=scale, n_queries=n_queries)
+        f = snb.graph.object_sizes().astype(np.float32)
+        for t in (1, 3):
+            scheme, stats = replicate_workload(ps, shard, 6, t, f=f)
+            emit("table4", "runtime_s", round(stats.runtime_s, 2),
+                 scale=scale, t=t, paths=stats.paths_processed)
+        # pruning ablation at t=1
+        with timer() as tm:
+            replicate_workload(ps, shard, 6, 1, f=f, prune=False)
+        emit("table4", "runtime_noprune_s", round(tm.dt, 2), scale=scale)
+
+    # kernel vs oracle on the latency-evaluation hot loop
+    from repro.core import ReplicationScheme, path_latencies
+    from repro.kernels import ops
+
+    snb, ps, shard = build_snb_setup(scale=2, n_queries=3000)
+    scheme = ReplicationScheme.from_sharding(shard, 6)
+    with timer() as t_core:
+        core = path_latencies(ps, scheme)
+    with timer() as t_kern:
+        kern = ops.path_latency(ps, scheme)
+    assert np.array_equal(core, kern)
+    emit("kernel_path_latency", "jnp_oracle_s", round(t_core.dt, 3),
+         paths=ps.n_paths)
+    emit("kernel_path_latency", "pallas_interpret_s", round(t_kern.dt, 3),
+         paths=ps.n_paths)

@@ -1,0 +1,47 @@
+"""Elastic scaling drill: lose half the devices mid-training, continue
+bit-exact; and patch the serving tier's replication scheme (§5.4).
+
+Run:  PYTHONPATH=src python examples/elastic_reshard.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    ReshardingMap,
+    is_latency_feasible,
+    repair_paths,
+    replicate_workload,
+)
+from repro.core.reshard import drain_server
+from repro.graph import hash_partition, snb_like
+from repro.launch.elastic import elastic_drill
+from repro.models.transformer import TransformerConfig
+from repro.workload import snb_workload_materialized
+
+print("== 1) tensor-program elasticity: scale-in mid-training ==")
+cfg = TransformerConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                        d_ff=128, vocab=512, dtype=jnp.float32, remat=False)
+out = elastic_drill(cfg, steps_before=3, steps_after=3)
+print(f"losses before fail : {[round(l, 4) for l in out['losses_before']]}")
+print(f"losses after scale-in: {[round(l, 4) for l in out['losses_after']]}")
+print(f"reference (no fail): {[round(l, 4) for l in out['reference']]}")
+print(f"bit-exact continuation: {out['bit_exact']}")
+assert out["bit_exact"]
+
+print("\n== 2) replication-scheme elasticity: server loss (§5.4) ==")
+snb = snb_like(1, seed=0)
+ps = snb_workload_materialized(snb, n_queries=800, seed=0)
+shard = hash_partition(snb.graph.n_nodes, 6)
+t = 1
+scheme, stats = replicate_workload(ps, shard, 6, t=t, track_rm=True)
+rmap = ReshardingMap.from_entries(stats.rm, scheme.shard)
+print(f"initial: feasible={is_latency_feasible(ps, scheme, t)}, "
+      f"replicas={scheme.replica_count():,}")
+moves, rep = drain_server(scheme, rmap, 5, strategy="single")
+stats2 = repair_paths(scheme, rmap, ps, t)
+print(f"drained server 5: moved {rep.moved_originals:,} originals, "
+      f"transferred {rep.replicas_transferred:,} replicas, repaired "
+      f"{stats2['repaired_paths']} paths")
+print(f"post-drain feasible: {is_latency_feasible(ps, scheme, t)}")
+assert is_latency_feasible(ps, scheme, t)
+print("\nelastic drills OK")

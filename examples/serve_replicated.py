@@ -1,0 +1,22 @@
+"""Serve a replicated graph store with a latency SLO + survive a failure.
+
+The paper's end-to-end story: pick an SLO (t distributed traversals),
+replicate to meet it, serve batched requests, lose a server, patch the
+scheme incrementally (§5.4), keep serving within the SLO.
+
+Run:  PYTHONPATH=src python examples/serve_replicated.py
+"""
+from repro.launch.serve import serve
+
+print("== serving with latency SLO t=1 (hash sharding, 6 servers) ==")
+rep = serve(t=1, n_servers=6, n_queries=2000, sharding="hash",
+            fail_server=4, hedge=True)
+print(f"feasible pre-fault : {rep.feasible}")
+print(f"replication overhead: {rep.overhead:.3f}x original data")
+print(f"mean latency        : {rep.mean_us:.0f} us")
+print(f"p99 latency         : {rep.p99_us:.0f} us")
+print(f"throughput          : {rep.qps:,.0f} qps")
+print(f"feasible post-fault : {rep.post_fault_feasible} "
+      f"(server 4 drained via the §5.4 incremental update)")
+assert rep.feasible and rep.post_fault_feasible
+print("\nserving + fault drill OK")

@@ -1,0 +1,21 @@
+"""repro: latency-bound replication for distributed queries (Ng, Le,
+Serafini 2022) as a first-class placement layer of a multi-pod JAX
+training/inference framework.
+
+Subpackages:
+  core      — the paper's algorithms (causal paths, greedy replication,
+              latency-robustness, baselines, NP-hardness gadget, §5.4)
+  graph     — CSR storage, generators, partitioners, neighbor sampling
+  workload  — causal-access-path analyzers per query family
+  distsys   — simulated cluster, executor + RPC latency model, faults,
+              checkpointing
+  models    — transformer LM family, GNN family, MIND recsys
+  optim     — AdamW, schedules, gradient compression
+  data      — synthetic sharded pipelines with prefetch
+  kernels   — Pallas TPU kernels (+ jnp oracles)
+  configs   — the 10 assigned architectures
+  launch    — meshes, dry-run, train/serve drivers, elasticity
+  analysis  — roofline terms + HLO collective parsing
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,30 @@
+"""Roofline + HLO analysis of compiled dry-run artifacts."""
+from repro.analysis.hlo import CollectiveStats, collective_stats, op_census
+from repro.analysis.roofline import (
+    DCN_BW,
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+    Roofline,
+    analyze,
+    gnn_model_flops,
+    lm_model_flops,
+    lm_param_count,
+    mind_model_flops,
+)
+
+__all__ = [
+    "CollectiveStats",
+    "collective_stats",
+    "op_census",
+    "Roofline",
+    "analyze",
+    "lm_model_flops",
+    "lm_param_count",
+    "gnn_model_flops",
+    "mind_model_flops",
+    "PEAK_FLOPS_BF16",
+    "HBM_BW",
+    "ICI_BW",
+    "DCN_BW",
+]

@@ -1,0 +1,100 @@
+"""HLO-text analysis: collective bytes + op census.
+
+``cost_analysis()`` reports FLOPs and memory traffic but NOT collective
+bytes, so we parse the (stable-)HLO text of the lowered/compiled module
+and sum operand sizes of every communication op:
+
+  all-gather, all-reduce, reduce-scatter, all-to-all, collective-permute
+  (+ their -start async forms).
+
+Shapes are parsed from the HLO result type of the op.  Bytes counted are
+the op *output* bytes (the data each collective materializes), the
+standard first-order proxy for link traffic; ring-algorithm multipliers
+are applied in the roofline layer where they belong.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# e.g.  %ag = bf16[4,128,16]{2,1,0} all-gather(%x), replica_groups=...
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|((?:[a-z0-9]+)\[[^\]]*\](?:\{[^}]*\})?))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    count_by_kind: dict
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def summary(self) -> dict:
+        return {
+            "total_bytes": self.total_bytes,
+            **{f"{k}_bytes": v for k, v in sorted(self.bytes_by_kind.items())},
+            **{f"{k}_count": v for k, v in sorted(self.count_by_kind.items())},
+        }
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum output bytes of every collective in an HLO module text.
+
+    Works on ``lowered.as_text()`` (StableHLO is first converted by the
+    caller via ``compiled.as_text()``; prefer the compiled text — it is
+    post-SPMD-partitioning, so collectives are explicit).
+    """
+    by_bytes: dict[str, int] = defaultdict(int)
+    by_count: dict[str, int] = defaultdict(int)
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        tuple_shapes, single_shape, kind = m.group(1), m.group(2), m.group(3)
+        # async pairs appear as op-start + op-done; count -start only
+        # (the regex strips the suffix, so dedupe by span of "-done(")
+        tail = hlo_text[m.end() - 1 - len("("):m.end()]
+        if "-done" in hlo_text[m.start():m.end()]:
+            continue
+        shape_str = tuple_shapes if tuple_shapes else single_shape
+        # all-gather-start tuples carry (input, output); output dominates
+        b = _shape_bytes(shape_str or "")
+        by_bytes[kind] += b
+        by_count[kind] += 1
+    return CollectiveStats(dict(by_bytes), dict(by_count))
+
+
+def op_census(hlo_text: str, ops=("fusion", "dot", "convolution", "scatter",
+                                  "gather", "sort", "while")) -> dict:
+    """Rough op-count census — used to spot remat recompute and redundant
+    collectives when hillclimbing (duplicate op names = recompute)."""
+    out = {}
+    for op in ops:
+        out[op] = len(re.findall(rf"\b{op}\(", hlo_text))
+    return out

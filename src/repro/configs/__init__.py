@@ -1,0 +1,21 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_arch(id)`` returns the ArchBundle; ``arch_ids()`` lists all ten.
+"""
+from repro.configs.base import ArchBundle, ShapeCell, arch_ids, get_arch
+
+# importing registers each architecture
+from repro.configs import (  # noqa: F401
+    chatglm3_6b,
+    deepseek_v2_236b,
+    egnn,
+    graphcast,
+    graphsage_reddit,
+    h2o_danube_3_4b,
+    mind,
+    qwen2_7b,
+    qwen3_moe_235b_a22b,
+    schnet,
+)
+
+__all__ = ["ArchBundle", "ShapeCell", "arch_ids", "get_arch"]

@@ -1,0 +1,108 @@
+"""Architecture bundles: the uniform interface the launcher/dry-run uses.
+
+An ArchBundle binds a model family to one assigned architecture and
+exposes, for each of its input shapes:
+
+  * ``abstract_args(shape, mesh_shape)``   — ShapeDtypeStruct pytrees for
+    every argument of the step function (params, optimizer state, batch /
+    cache), built WITHOUT allocating anything;
+  * ``shardings(shape, mesh_axes)``        — matching PartitionSpec pytrees;
+  * ``step_fn(shape)``                     — the jittable step
+    (train_step / prefill / decode / serve scoring);
+  * ``smoke()``                            — a reduced config + tiny batch
+    that runs a real step on CPU (shape + finiteness asserted in tests).
+
+Conventions: dp = data-parallel mesh axes (("data",) single-pod,
+("pod", "data") multi-pod); tp = "model".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def pad_up(n: int, multiple: int) -> int:
+    return ((n + multiple - 1) // multiple) * multiple
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One (architecture x input-shape) dry-run cell."""
+
+    shape_id: str
+    kind: str              # train | prefill | decode | serve | retrieval
+    meta: dict
+
+
+@dataclasses.dataclass
+class ArchBundle:
+    arch_id: str
+    family: str                       # lm | gnn | recsys
+    config: Any                       # full-size model config
+    smoke_config: Any                 # reduced config
+    cells: dict[str, ShapeCell]
+    skip_shapes: dict[str, str]       # shape_id -> reason (DESIGN.md note)
+    # family implementations (injected by the family module)
+    _abstract_args: Callable = None
+    _shardings: Callable = None
+    _step_fn: Callable = None
+    _smoke_batch: Callable = None
+    _smoke_step: Callable = None
+
+    def shape_ids(self) -> list[str]:
+        return list(self.cells.keys())
+
+    def abstract_args(self, shape_id: str, multi_pod: bool = False):
+        return self._abstract_args(self, shape_id, multi_pod)
+
+    def shardings(self, shape_id: str, multi_pod: bool = False):
+        return self._shardings(self, shape_id, multi_pod)
+
+    def step_fn(self, shape_id: str, multi_pod: bool = False):
+        try:
+            return self._step_fn(self, shape_id, multi_pod)
+        except TypeError:
+            return self._step_fn(self, shape_id)
+
+    def smoke_batch(self, rng: np.random.Generator):
+        return self._smoke_batch(self, rng)
+
+    def smoke_step(self):
+        return self._smoke_step(self)
+
+
+_REGISTRY: dict[str, Callable[[], ArchBundle]] = {}
+
+
+def register(arch_id: str):
+    def deco(fn):
+        _REGISTRY[arch_id] = fn
+        return fn
+
+    return deco
+
+
+def get_arch(arch_id: str) -> ArchBundle:
+    if arch_id not in _REGISTRY:
+        raise KeyError(
+            f"unknown arch '{arch_id}'; available: {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]()
+
+
+def arch_ids() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def dp_axes(multi_pod: bool) -> tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def dp_size(multi_pod: bool) -> int:
+    return 32 if multi_pod else 16
+
+
+TP_AXIS = "model"
+TP_SIZE = 16

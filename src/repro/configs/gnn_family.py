@@ -1,0 +1,277 @@
+"""GNN-family bundle implementation (4 archs x 4 shapes).
+
+Shapes (input-feature dim / labels follow the public dataset each shape
+names; padded to mesh-divisible sizes for the dry-run):
+  full_graph_sm — cora-size full-batch: N=2708, E=10556, F=1433, 7 classes
+  minibatch_lg  — reddit-size sampled training: 1024 seeds, fanout 15-10,
+                  F=602, 41 classes (real neighbor-sampler blocks)
+  ogb_products  — full-batch large: N=2449029, E=61859140, F=100, 47 cls
+  molecule      — 128 graphs x 30 nodes x 64 edges, regression
+
+Geometric archs (egnn/schnet) receive synthetic 3-D positions on
+non-molecular graphs — the arch runs on every shape per the assignment;
+see DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import base
+from repro.models import gnn as G
+from repro.optim import AdamW, AdamWState, cosine_schedule
+
+OPT = AdamW(lr=cosine_schedule(1e-3, 100, 10_000), weight_decay=0.0)
+
+SHAPES = {
+    "full_graph_sm": base.ShapeCell(
+        "full_graph_sm", "train",
+        {"n": 2708, "e": 10556, "f": 1433, "classes": 7, "pad": 1}),
+    "minibatch_lg": base.ShapeCell(
+        "minibatch_lg", "train",
+        {"batch": 1024, "fanouts": (15, 10), "f": 602, "classes": 41,
+         "n_table": 232965}),
+    "ogb_products": base.ShapeCell(
+        "ogb_products", "train",
+        {"n": 2449029, "e": 61859140, "f": 100, "classes": 47, "pad": 512}),
+    "molecule": base.ShapeCell(
+        "molecule", "train",
+        {"batch": 128, "n": 30, "e": 64, "f": 32, "classes": 1}),
+}
+
+
+def _abs(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _opt_abstract(params_abs) -> AdamWState:
+    f32 = lambda s: _abs(s.shape, jnp.float32)
+    return AdamWState(step=_abs((), jnp.int32),
+                      m=jax.tree.map(f32, params_abs),
+                      v=jax.tree.map(f32, params_abs))
+
+
+def cfg_for_cell(bundle, shape_id: str, multi_pod: bool = False) -> G.GNNConfig:
+    cell = SHAPES[shape_id]
+    big = shape_id == "ogb_products"
+    kw = dict(d_in=cell.meta["f"], n_classes=cell.meta["classes"], remat=big)
+    if big:
+        # shard_map aggregation over the edge axes (see GNNConfig)
+        dp = base.dp_axes(multi_pod)
+        kw["agg_axes"] = dp + (base.TP_AXIS,)
+        kw["node_axes"] = dp
+    return dataclasses.replace(bundle.config, **kw)
+
+
+def _needs_pos(arch: str) -> bool:
+    return arch in ("egnn", "schnet")
+
+
+def make_train_step(cfg: G.GNNConfig):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: G.loss_fn(p, batch, cfg))(params)
+        params, opt_state, gnorm = OPT.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def _graph_batch_abstract(cell, arch: str):
+    m = cell.meta
+    pad = m.get("pad", 1)
+    N, E, F = base.pad_up(m["n"], pad), base.pad_up(m["e"], pad), m["f"]
+    batch = {
+        "x": _abs((N, F), jnp.float32),
+        "senders": _abs((E,), jnp.int32),
+        "receivers": _abs((E,), jnp.int32),
+        "labels": _abs((N,), jnp.int32),
+    }
+    if _needs_pos(arch):
+        batch["pos"] = _abs((N, 3), jnp.float32)
+    if arch == "graphcast":
+        batch["edge_feat"] = _abs((E, 4), jnp.float32)
+    return batch
+
+
+def abstract_args(bundle, shape_id: str, multi_pod: bool):
+    cfg = cfg_for_cell(bundle, shape_id)
+    cell = bundle.cells[shape_id]
+    params = G.init_abstract(cfg)
+    arch = cfg.arch
+    m = cell.meta
+    if shape_id in ("full_graph_sm", "ogb_products"):
+        batch = _graph_batch_abstract(cell, arch)
+    elif shape_id == "minibatch_lg":
+        B = m["batch"]
+        f1, f2 = m["fanouts"]
+        batch = {
+            "seed_x": _abs((B, m["f"]), jnp.float32),
+            "layer_x": [_abs((B, f1, m["f"]), jnp.float32),
+                        _abs((B, f1 * f2, m["f"]), jnp.float32)],
+            "layer_mask": [_abs((B, f1), jnp.bool_),
+                           _abs((B, f1 * f2), jnp.bool_)],
+            "labels": _abs((B,), jnp.int32),
+        }
+        if arch != "graphsage":
+            # non-sampling archs run the flat (gathered) graph form:
+            # blocks flattened to a node set + block-local edges
+            batch = _minibatch_flat_abstract(cell, arch)
+    else:  # molecule
+        B, n, e, F = m["batch"], m["n"], m["e"], m["f"]
+        batch = {
+            "x": _abs((B, n, F), jnp.float32),
+            "senders": _abs((B, e), jnp.int32),
+            "receivers": _abs((B, e), jnp.int32),
+            "labels": _abs((B,), jnp.float32),
+        }
+        if _needs_pos(arch):
+            batch["pos"] = _abs((B, n, 3), jnp.float32)
+        if arch == "graphcast":
+            batch["edge_feat"] = _abs((B, e, 4), jnp.float32)
+    return (params, _opt_abstract(params), batch)
+
+
+def _minibatch_flat_abstract(cell, arch: str):
+    """Sampled neighborhood as a flat graph (egnn/schnet/graphcast path):
+    node set = seeds + sampled frontier; edges = sampling tree edges."""
+    m = cell.meta
+    B = m["batch"]
+    f1, f2 = m["fanouts"]
+    N = B * (1 + f1 + f1 * f2)
+    E = B * (f1 + f1 * f2)
+    batch = {
+        "x": _abs((N, m["f"]), jnp.float32),
+        "senders": _abs((E,), jnp.int32),
+        "receivers": _abs((E,), jnp.int32),
+        "labels": _abs((N,), jnp.int32),
+    }
+    if _needs_pos(arch):
+        batch["pos"] = _abs((N, 3), jnp.float32)
+    if arch == "graphcast":
+        batch["edge_feat"] = _abs((E, 4), jnp.float32)
+    return batch
+
+
+def shardings(bundle, shape_id: str, multi_pod: bool):
+    cfg = cfg_for_cell(bundle, shape_id)
+    cell = bundle.cells[shape_id]
+    dp = base.dp_axes(multi_pod)
+    dpn = base.dp_size(multi_pod)
+    pspecs = G.param_specs(cfg, dp, base.TP_AXIS, base.TP_SIZE)
+    ospecs = OPT.state_specs(pspecs)
+    m = cell.meta
+
+    def node_spec(n):  # shard node arrays over dp when divisible
+        return dp if n % dpn == 0 else None
+
+    def edge_spec(e):  # edges over dp x tp (independent work)
+        full = dp + (base.TP_AXIS,)
+        if e % (dpn * base.TP_SIZE) == 0:
+            return full
+        return dp if e % dpn == 0 else None
+
+    arch = cfg.arch
+    if shape_id in ("full_graph_sm", "ogb_products"):
+        pad = m.get("pad", 1)
+        N, E = base.pad_up(m["n"], pad), base.pad_up(m["e"], pad)
+        ns, es = node_spec(N), edge_spec(E)
+        bspec = {
+            "x": P(ns, None), "senders": P(es), "receivers": P(es),
+            "labels": P(ns),
+        }
+        if _needs_pos(arch):
+            bspec["pos"] = P(ns, None)
+        if arch == "graphcast":
+            bspec["edge_feat"] = P(es, None)
+    elif shape_id == "minibatch_lg":
+        B = m["batch"]
+        bs = node_spec(B)
+        if arch == "graphsage":
+            # the minibatch model is pure data parallelism (its 128-wide
+            # hiddens are below min_tp_dim, so params replicate): shard
+            # the seed batch over EVERY mesh axis — 256-way instead of
+            # 16-way (EXPERIMENTS.md §Perf graphsage iter 1)
+            full = dp + (base.TP_AXIS,)
+            if B % (dpn * base.TP_SIZE) == 0:
+                bs = full
+            bspec = {
+                "seed_x": P(bs, None),
+                "layer_x": [P(bs, None, None), P(bs, None, None)],
+                "layer_mask": [P(bs, None), P(bs, None)],
+                "labels": P(bs),
+            }
+        else:
+            f1, f2 = m["fanouts"]
+            N = B * (1 + f1 + f1 * f2)
+            E = B * (f1 + f1 * f2)
+            ns, es = node_spec(N), edge_spec(E)
+            bspec = {"x": P(ns, None), "senders": P(es),
+                     "receivers": P(es), "labels": P(ns)}
+            if _needs_pos(arch):
+                bspec["pos"] = P(ns, None)
+            if arch == "graphcast":
+                bspec["edge_feat"] = P(es, None)
+    else:  # molecule: shard the graph batch dim
+        B = m["batch"]
+        bs = node_spec(B)
+        bspec = {"x": P(bs, None, None), "senders": P(bs, None),
+                 "receivers": P(bs, None), "labels": P(bs)}
+        if _needs_pos(arch):
+            bspec["pos"] = P(bs, None, None)
+        if arch == "graphcast":
+            bspec["edge_feat"] = P(bs, None, None)
+
+    in_s = (pspecs, ospecs, bspec)
+    out_s = (pspecs, ospecs, {"loss": P(), "grad_norm": P()})
+    return in_s, out_s
+
+
+def step_fn(bundle, shape_id: str, multi_pod: bool = False):
+    return make_train_step(cfg_for_cell(bundle, shape_id, multi_pod))
+
+
+def smoke_batch(bundle, rng: np.random.Generator):
+    cfg = bundle.smoke_config
+    N, E, F = 24, 60, cfg.d_in
+    batch = {
+        "x": jnp.asarray(rng.normal(size=(N, F)), jnp.float32),
+        "senders": jnp.asarray(rng.integers(0, N, E), jnp.int32),
+        "receivers": jnp.asarray(rng.integers(0, N, E), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.n_classes, N), jnp.int32),
+    }
+    if _needs_pos(cfg.arch):
+        batch["pos"] = jnp.asarray(rng.normal(size=(N, 3)), jnp.float32)
+    if cfg.arch == "graphcast":
+        batch["edge_feat"] = jnp.asarray(rng.normal(size=(E, 4)), jnp.float32)
+    return batch
+
+
+def smoke_step(bundle):
+    cfg = bundle.smoke_config
+
+    def run(batch):
+        params = G.init(cfg, jax.random.key(0))
+        opt_state = OPT.init(params)
+        step = make_train_step(cfg)
+        params, opt_state, metrics = step(params, opt_state, batch)
+        logits = G.forward(params, batch, cfg)
+        return {"loss": metrics["loss"], "logits": logits}
+
+    return run
+
+
+def make_bundle(arch_id: str, config: G.GNNConfig,
+                smoke_config: G.GNNConfig) -> base.ArchBundle:
+    config.validate()
+    smoke_config.validate()
+    return base.ArchBundle(
+        arch_id=arch_id, family="gnn", config=config,
+        smoke_config=smoke_config, cells=dict(SHAPES), skip_shapes={},
+        _abstract_args=abstract_args, _shardings=shardings,
+        _step_fn=step_fn, _smoke_batch=smoke_batch, _smoke_step=smoke_step,
+    )

@@ -1,0 +1,189 @@
+"""LM-family bundle implementation (5 transformer archs x 4 shapes).
+
+Shapes:
+  train_4k    — train_step (fwd + bwd + AdamW) on [256, 4096] tokens
+  prefill_32k — serve prefill on [32, 32768] tokens -> (KV cache, logits)
+  decode_32k  — one-token decode with a 32k KV cache, batch 128
+  long_500k   — one-token decode with a 524288-position context; only
+                lowered for sub-quadratic (SWA) archs — pure full-attention
+                archs skip it (see DESIGN.md §4)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import base
+from repro.models import transformer as T
+from repro.optim import AdamW, AdamWState, cosine_schedule
+
+OPT = AdamW(lr=cosine_schedule(3e-4, 2000, 100_000), weight_decay=0.1)
+
+SHAPES = {
+    "train_4k": base.ShapeCell("train_4k", "train",
+                               {"seq": 4096, "batch": 256}),
+    "prefill_32k": base.ShapeCell("prefill_32k", "prefill",
+                                  {"seq": 32768, "batch": 32}),
+    "decode_32k": base.ShapeCell("decode_32k", "decode",
+                                 {"seq": 32768, "batch": 128}),
+    "long_500k": base.ShapeCell("long_500k", "decode",
+                                {"seq": 524288, "batch": 1}),
+}
+
+
+def _abs(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _opt_abstract(params_abs) -> AdamWState:
+    f32 = lambda s: _abs(s.shape, jnp.float32)
+    return AdamWState(
+        step=_abs((), jnp.int32),
+        m=jax.tree.map(f32, params_abs),
+        v=jax.tree.map(f32, params_abs),
+    )
+
+
+def make_train_step(cfg: T.TransformerConfig):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: T.loss_fn(p, batch["tokens"], batch["labels"], cfg)
+        )(params)
+        params, opt_state, gnorm = OPT.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def abstract_args(bundle, shape_id: str, multi_pod: bool):
+    cfg: T.TransformerConfig = bundle.config
+    cell = bundle.cells[shape_id]
+    params = T.init_abstract(cfg)
+    B, S = cell.meta["batch"], cell.meta["seq"]
+    if cell.kind == "train":
+        return (
+            params,
+            _opt_abstract(params),
+            {"tokens": _abs((B, S), jnp.int32),
+             "labels": _abs((B, S), jnp.int32)},
+        )
+    if cell.kind == "prefill":
+        return (params, {"tokens": _abs((B, S), jnp.int32)})
+    # decode: cache of S positions + one token per sequence
+    cache = T.cache_abstract(cfg, B, S)
+    return (params, cache, {"tokens": _abs((B,), jnp.int32)})
+
+
+def _serve_needs_fsdp(cfg: T.TransformerConfig) -> bool:
+    """Serving holds bf16 weights only (no optimizer moments): keep them
+    RESIDENT per chip when they fit the TP shard (dense 4-8B archs), and
+    FSDP-shard them only when they don't (the MoE archs) — per-layer
+    weight gathers at decode cost ~1 GB/chip/layer otherwise
+    (EXPERIMENTS.md §Perf, decode iteration)."""
+    from repro.analysis.roofline import lm_param_count
+
+    resident_gb = lm_param_count(cfg) * 2 / base.TP_SIZE / 2**30
+    return resident_gb > 12.0
+
+
+def shardings(bundle, shape_id: str, multi_pod: bool):
+    cfg: T.TransformerConfig = bundle.config
+    cell = bundle.cells[shape_id]
+    dp = base.dp_axes(multi_pod)
+    dpn = base.dp_size(multi_pod)
+    tp = base.TP_AXIS
+    fsdp = True if cell.kind == "train" else _serve_needs_fsdp(cfg)
+    pspecs = T.param_specs(cfg, dp, tp, base.TP_SIZE, dpn, fsdp=fsdp)
+    B = cell.meta["batch"]
+    bspec = dp if B % dpn == 0 else None
+    if cell.kind == "train":
+        ospecs = OPT.state_specs(pspecs)
+        bat = {"tokens": P(bspec, None), "labels": P(bspec, None)}
+        in_s = (pspecs, ospecs, bat)
+        out_s = (pspecs, ospecs, {"loss": P(), "grad_norm": P()})
+        return in_s, out_s
+    if cell.kind == "prefill":
+        cspecs = T.cache_specs(cfg, B, dp, tp, dpn)
+        in_s = (pspecs, {"tokens": P(bspec, None)})
+        out_s = (cspecs, P(bspec, tp))
+        return in_s, out_s
+    cspecs = T.cache_specs(cfg, B, dp, tp, dpn)
+    in_s = (pspecs, cspecs, {"tokens": P(bspec)})
+    out_s = (cspecs, P(bspec, tp))
+    return in_s, out_s
+
+
+def _act_cfg(bundle, shape_id: str, multi_pod: bool) -> T.TransformerConfig:
+    """Config with activation-sharding constraints for this mesh/shape."""
+    cell = bundle.cells[shape_id]
+    dp = base.dp_axes(multi_pod)
+    dpn = base.dp_size(multi_pod)
+    act_dp = dp if cell.meta["batch"] % dpn == 0 else ()
+    act_seq = (cell.kind == "train"
+               and cell.meta["seq"] % base.TP_SIZE == 0)
+    return dataclasses.replace(bundle.config, act_dp=act_dp,
+                               act_tp=base.TP_AXIS, act_seq=act_seq,
+                               tp_size=base.TP_SIZE)
+
+
+def step_fn(bundle, shape_id: str, multi_pod: bool = False):
+    cfg = _act_cfg(bundle, shape_id, multi_pod)
+    cell = bundle.cells[shape_id]
+    if cell.kind == "train":
+        return make_train_step(cfg)
+    if cell.kind == "prefill":
+        S = cell.meta["seq"]
+        return lambda params, batch: T.prefill(params, batch["tokens"], cfg, S)
+    return lambda params, cache, batch: T.decode_step(
+        params, cache, batch["tokens"], cfg)
+
+
+def smoke_batch(bundle, rng: np.random.Generator):
+    cfg = bundle.smoke_config
+    B, S = 2, 16
+    toks = rng.integers(0, cfg.vocab, (B, S + 1)).astype(np.int32)
+    return {"tokens": jnp.asarray(toks[:, :-1]),
+            "labels": jnp.asarray(toks[:, 1:])}
+
+
+def smoke_step(bundle):
+    cfg = bundle.smoke_config
+
+    def run(batch):
+        params = T.init(cfg, jax.random.key(0))
+        opt_state = OPT.init(params)
+        step = make_train_step(cfg)
+        params, opt_state, metrics = step(params, opt_state, batch)
+        # serving path too
+        cache, logits_p = T.prefill(params, batch["tokens"], cfg, 32)
+        cache, logits_d = T.decode_step(params, cache,
+                                        batch["tokens"][:, -1], cfg)
+        return {"loss": metrics["loss"], "logits_prefill": logits_p,
+                "logits_decode": logits_d}
+
+    return run
+
+
+def make_bundle(arch_id: str, config: T.TransformerConfig,
+                smoke_config: T.TransformerConfig,
+                skip_long: bool) -> base.ArchBundle:
+    config.validate()
+    smoke_config.validate()
+    cells = dict(SHAPES)
+    skip = {}
+    if skip_long:
+        cells.pop("long_500k")
+        skip["long_500k"] = (
+            "pure full-attention decoder: 524288-token decode has no "
+            "sub-quadratic structure; skipped per assignment rule "
+            "(see DESIGN.md §4)")
+    return base.ArchBundle(
+        arch_id=arch_id, family="lm", config=config,
+        smoke_config=smoke_config, cells=cells, skip_shapes=skip,
+        _abstract_args=abstract_args, _shardings=shardings,
+        _step_fn=step_fn, _smoke_batch=smoke_batch, _smoke_step=smoke_step,
+    )

@@ -1,0 +1,159 @@
+"""RecSys-family bundle (MIND x 4 shapes).
+
+Shapes:
+  train_batch    — sampled-softmax training, batch 65536
+  serve_p99      — online inference, batch 512, 100 candidates each
+  serve_bulk     — offline scoring, batch 262144, 100 candidates each
+  retrieval_cand — 1 user x 1,048,576 candidates (1M padded to 2^20),
+                   batched-dot retrieval scoring
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import base
+from repro.models import recsys as R
+from repro.optim import AdamW, AdamWState, cosine_schedule
+
+OPT = AdamW(lr=cosine_schedule(1e-3, 500, 50_000), weight_decay=0.0)
+
+N_CANDIDATES_ONLINE = 100
+N_CANDIDATES_RETRIEVAL = 1_048_576   # 1M padded to 2^20
+
+SHAPES = {
+    "train_batch": base.ShapeCell("train_batch", "train", {"batch": 65536}),
+    "serve_p99": base.ShapeCell("serve_p99", "serve", {"batch": 512}),
+    "serve_bulk": base.ShapeCell("serve_bulk", "serve", {"batch": 262144}),
+    "retrieval_cand": base.ShapeCell(
+        "retrieval_cand", "retrieval",
+        {"batch": 1, "n_candidates": N_CANDIDATES_RETRIEVAL}),
+}
+
+
+def _abs(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _opt_abstract(params_abs) -> AdamWState:
+    f32 = lambda s: _abs(s.shape, jnp.float32)
+    return AdamWState(step=_abs((), jnp.int32),
+                      m=jax.tree.map(f32, params_abs),
+                      v=jax.tree.map(f32, params_abs))
+
+
+def _user_batch_abstract(cfg: R.MINDConfig, B: int) -> dict:
+    return {
+        "hist": _abs((B, cfg.hist_len), jnp.int32),
+        "hist_mask": _abs((B, cfg.hist_len), jnp.bool_),
+        "user_feats": _abs((B, cfg.user_feat_len), jnp.int32),
+    }
+
+
+def make_train_step(cfg: R.MINDConfig):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: R.loss_fn(p, batch, cfg))(params)
+        params, opt_state, gnorm = OPT.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def abstract_args(bundle, shape_id: str, multi_pod: bool):
+    cfg: R.MINDConfig = bundle.config
+    cell = bundle.cells[shape_id]
+    params = R.init_abstract(cfg)
+    B = cell.meta["batch"]
+    batch = _user_batch_abstract(cfg, B)
+    if cell.kind == "train":
+        batch["target"] = _abs((B,), jnp.int32)
+        return (params, _opt_abstract(params), batch)
+    if cell.kind == "serve":
+        batch["candidates"] = _abs((B, N_CANDIDATES_ONLINE), jnp.int32)
+        return (params, batch)
+    batch["candidate_ids"] = _abs((cell.meta["n_candidates"],), jnp.int32)
+    return (params, batch)
+
+
+def shardings(bundle, shape_id: str, multi_pod: bool):
+    cfg: R.MINDConfig = bundle.config
+    cell = bundle.cells[shape_id]
+    dp = base.dp_axes(multi_pod)
+    dpn = base.dp_size(multi_pod)
+    pspecs = R.param_specs(cfg, dp, base.TP_AXIS, base.TP_SIZE)
+    B = cell.meta["batch"]
+    bs = dp if B % dpn == 0 else None
+    user = {
+        "hist": P(bs, None), "hist_mask": P(bs, None),
+        "user_feats": P(bs, None),
+    }
+    if cell.kind == "train":
+        ospecs = OPT.state_specs(pspecs)
+        bat = {**user, "target": P(bs)}
+        return ((pspecs, ospecs, bat),
+                (pspecs, ospecs, {"loss": P(), "grad_norm": P()}))
+    if cell.kind == "serve":
+        bat = {**user, "candidates": P(bs, None)}
+        return ((pspecs, bat), P(bs, None))
+    cand = dp + (base.TP_AXIS,)
+    bat = {**user, "candidate_ids": P(cand)}
+    return ((pspecs, bat), P(None, cand))
+
+
+def step_fn(bundle, shape_id: str):
+    cfg: R.MINDConfig = bundle.config
+    cell = bundle.cells[shape_id]
+    if cell.kind == "train":
+        return make_train_step(cfg)
+    if cell.kind == "serve":
+        return lambda params, batch: R.serve_score(params, batch, cfg)
+    return lambda params, batch: R.retrieval_score(params, batch, cfg)
+
+
+def smoke_batch(bundle, rng: np.random.Generator):
+    cfg = bundle.smoke_config
+    B = 8
+    return {
+        "hist": jnp.asarray(
+            rng.integers(0, cfg.n_items, (B, cfg.hist_len)), jnp.int32),
+        "hist_mask": jnp.asarray(rng.random((B, cfg.hist_len)) < 0.8),
+        "user_feats": jnp.asarray(
+            rng.integers(0, cfg.n_user_feats, (B, cfg.user_feat_len)),
+            jnp.int32),
+        "target": jnp.asarray(rng.integers(0, cfg.n_items, (B,)), jnp.int32),
+        "candidates": jnp.asarray(
+            rng.integers(0, cfg.n_items, (B, 16)), jnp.int32),
+    }
+
+
+def smoke_step(bundle):
+    cfg = bundle.smoke_config
+
+    def run(batch):
+        params = R.init(cfg, jax.random.key(0))
+        opt_state = OPT.init(params)
+        step = make_train_step(cfg)
+        train_batch = {k: batch[k] for k in
+                       ("hist", "hist_mask", "user_feats", "target")}
+        params, opt_state, metrics = step(params, opt_state, train_batch)
+        serve_batch = {k: batch[k] for k in
+                       ("hist", "hist_mask", "user_feats", "candidates")}
+        scores = R.serve_score(params, serve_batch, cfg)
+        return {"loss": metrics["loss"], "scores": scores}
+
+    return run
+
+
+def make_bundle(arch_id: str, config: R.MINDConfig,
+                smoke_config: R.MINDConfig) -> base.ArchBundle:
+    config.validate()
+    smoke_config.validate()
+    return base.ArchBundle(
+        arch_id=arch_id, family="recsys", config=config,
+        smoke_config=smoke_config, cells=dict(SHAPES), skip_shapes={},
+        _abstract_args=abstract_args, _shardings=shardings,
+        _step_fn=step_fn, _smoke_batch=smoke_batch, _smoke_step=smoke_step,
+    )

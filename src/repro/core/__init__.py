@@ -1,0 +1,73 @@
+"""The paper's primary contribution: latency-bound replication.
+
+Public API:
+  PathSet                     — causal access paths (padded batches)
+  ReplicationScheme           — replication scheme r with storage accounting
+  path_latencies / query_latencies / is_latency_feasible — Eqns 1-3
+  replicate_workload          — vectorized greedy Alg 1 + Alg 2
+  replicate_workload_exact    — faithful sequential Alg 1 + Alg 2
+  single_site_oracle          — Fig 2d baseline
+  dangling_edge_replication   — Table 3 baseline
+  ReshardingMap / apply_reshard / drain_server — §5.4 incremental updates
+  build_ls_instance           — Thm 4.5 hardness gadget
+"""
+from repro.core.paths import PathSet, paths_from_tree
+from repro.core.replication import (
+    ReplicationScheme,
+    is_latency_feasible,
+    path_latencies,
+    path_latency_reference,
+    query_latencies,
+    subpath_structure,
+)
+from repro.core.greedy import GreedyStats, replicate_workload
+from repro.core.reference import (
+    replicate_workload_exact,
+    server_local_subpaths,
+    update_exact,
+)
+from repro.core.baselines import dangling_edge_replication, single_site_oracle
+from repro.core.reshard import (
+    ReshardingMap,
+    ReshardReport,
+    apply_reshard,
+    drain_server,
+    repair_paths,
+)
+from repro.core.hardness import (
+    LSInstance,
+    brute_force_feasible,
+    brute_force_min_bridge_bisection,
+    build_ls_instance,
+    is_feasible_ls,
+    scheme_from_bisection,
+)
+
+__all__ = [
+    "PathSet",
+    "paths_from_tree",
+    "ReplicationScheme",
+    "is_latency_feasible",
+    "path_latencies",
+    "path_latency_reference",
+    "query_latencies",
+    "subpath_structure",
+    "GreedyStats",
+    "replicate_workload",
+    "replicate_workload_exact",
+    "server_local_subpaths",
+    "update_exact",
+    "dangling_edge_replication",
+    "single_site_oracle",
+    "ReshardingMap",
+    "ReshardReport",
+    "apply_reshard",
+    "drain_server",
+    "repair_paths",
+    "LSInstance",
+    "brute_force_feasible",
+    "brute_force_min_bridge_bisection",
+    "build_ls_instance",
+    "is_feasible_ls",
+    "scheme_from_bisection",
+]

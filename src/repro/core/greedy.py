@@ -1,0 +1,306 @@
+"""Vectorized greedy latency-bound replication (paper Alg 1 + Alg 2).
+
+TPU/JAX adaptation of the paper's lock-free 64-thread implementation
+(§6.1): paths are processed in *batches*; every path in a batch evaluates
+its candidate subsets against the same snapshot of the replication scheme,
+and all chosen additions are applied with one scatter-OR.  Replica additions
+are monotone 0->1 flips, and Thm 5.3 (latency-robustness) guarantees that
+additions made concurrently for other paths can never break a bound that an
+earlier UPDATE established — the exact argument the paper uses to justify
+its lock-free races.  The only effect is a mild over-estimate of candidate
+costs inside a batch (same approximation class as the paper's threads),
+which can make the result slightly more expensive, never infeasible.
+
+Per batch, for each path we compute
+  * the server-local subpath structure under d (Def 5.1),
+  * for every candidate retained-set (precomputed C(h, t) tables), the
+    upward-replication + latency-robustness additions (Alg 2 lines 11-19)
+    as a [positions x subpaths] interval mask,
+  * the marginal cost of each candidate against the snapshot,
+  * optionally the per-candidate marginal server loads for the capacity /
+    balance constraints (Alg 2 line 20),
+and apply the argmin candidate's additions.
+
+Paths whose subpath count exceeds the enumeration budget fall back to the
+exact sequential implementation (``repro.core.reference``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import combi
+from repro.core.paths import PathSet
+from repro.core.replication import ReplicationScheme, subpath_structure
+from repro.core.reference import update_exact
+
+_INF = jnp.float32(1e30)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("check_capacity",),
+    donate_argnums=(0,),
+)
+def _update_batch(
+    maskp: jnp.ndarray,      # bool [(n+1), (S+1)] — padded sacrificial row/col
+    objects: jnp.ndarray,    # int32 [B, L]
+    lengths: jnp.ndarray,    # int32 [B]
+    shard: jnp.ndarray,      # int32 [n]
+    f: jnp.ndarray,          # float32 [n]
+    tables: jnp.ndarray,     # bool [H+1, C, H+1]
+    counts: jnp.ndarray,     # int32 [H+1]
+    t: jnp.ndarray,          # int32 scalar latency bound
+    load: jnp.ndarray,       # float32 [S] current storage per server
+    capacity: jnp.ndarray,   # float32 [S] (ignored unless check_capacity)
+    epsilon: jnp.ndarray,    # float32 scalar
+    check_capacity: bool,
+):
+    B, L = objects.shape
+    Hp1 = tables.shape[2]
+    C = tables.shape[1]
+    S = load.shape[0]
+
+    home, seg, h = subpath_structure(objects, lengths, shard)
+    valid = seg >= 0
+    h_cl = jnp.clip(h, 0, Hp1 - 1)
+
+    # server of each subpath: all positions of a subpath share one home.
+    seg_cl = jnp.clip(seg, 0, Hp1 - 1)
+    b_idx = jnp.arange(B)[:, None].repeat(L, 1)
+    srv = (
+        jnp.zeros((B, Hp1), jnp.int32)
+        .at[b_idx, seg_cl]
+        .max(jnp.where(valid, home + 1, 0))
+        - 1
+    )  # [B, Hp1]; -1 for absent subpaths
+
+    # first object of each subpath (representative u for the resharding map)
+    big = jnp.int32(2**30)
+    first_pos = (
+        jnp.full((B, Hp1), big, jnp.int32)
+        .at[b_idx, seg_cl]
+        .min(jnp.where(valid, jnp.arange(L)[None, :], big))
+    )
+    first_obj = jnp.take_along_axis(
+        objects, jnp.clip(first_pos, 0, L - 1), axis=1
+    )  # [B, Hp1] (garbage where absent; masked later)
+
+    # candidate tables for each path's h: sel [B, C, Hp1]
+    sel = tables[h_cl]
+    n_cand = counts[h_cl]  # [B]
+
+    # prev_sel[b, c, k] = largest selected subpath index <= k
+    idx = jnp.where(sel, jnp.arange(Hp1)[None, None, :], -1)
+    prev_sel = jax.lax.cummax(idx, axis=2)  # [B, C, Hp1]
+
+    # per-position selected-predecessor j(seg_x): gather over k = seg_x
+    seg_e = jnp.clip(seg, 0, Hp1 - 1)[:, None, :].repeat(C, 1)  # [B, C, L]
+    j_of_x = jnp.take_along_axis(prev_sel, seg_e, axis=2)  # [B, C, L]
+
+    # interval mask: additions (x -> subpath k) iff j(seg_x) <= k < seg_x
+    k_r = jnp.arange(Hp1)[None, None, None, :]
+    window = (k_r >= j_of_x[..., None]) & (k_r < seg_e[..., None])  # [B,C,L,Hp1]
+    window = window & valid[:, None, :, None] & (h[:, None, None, None] > t)
+
+    # needed(x, k): no copy of objects[x] at srv[k] yet (snapshot semantics)
+    safe_obj = jnp.maximum(objects, 0)
+    safe_srv = jnp.maximum(srv, 0)
+    present = maskp[safe_obj[:, :, None], safe_srv[:, None, :]]  # [B, L, Hp1]
+    needed = (~present) & (srv[:, None, :] >= 0) & valid[:, :, None]
+
+    fx = f[safe_obj] * valid.astype(jnp.float32)  # [B, L]
+    add = window & needed[:, None, :, :]  # [B, C, L, Hp1]
+    cost = jnp.einsum("bclk,bl->bc", add.astype(jnp.float32), fx)
+
+    cand_valid = jnp.arange(C)[None, :] < n_cand[:, None]
+    cost_m = jnp.where(cand_valid, cost, _INF)
+
+    if check_capacity:
+        # marginal load per candidate per server: scatter f over srv[k]
+        contrib = jnp.einsum("bclk,bl->bck", add.astype(jnp.float32), fx)
+        marg = (
+            jnp.zeros((B, C, S + 1), jnp.float32)
+            .at[
+                jnp.arange(B)[:, None, None],
+                jnp.arange(C)[None, :, None],
+                jnp.clip(safe_srv, 0, S)[:, None, :],
+            ]
+            .add(contrib)
+        )[..., :S]
+        # NOTE: snapshot load; within-batch interactions ignored (lock-free
+        # semantics).  Feasibility is re-validated exactly by the driver.
+        new_load = load[None, None, :] + marg
+        ok_cap = jnp.all(new_load <= capacity[None, None, :] + 1e-6, axis=-1)
+        mean = jnp.mean(new_load, axis=-1)
+        ok_bal = jnp.max(new_load, axis=-1) <= (1.0 + epsilon) * mean + 1e-6
+        cost_m = jnp.where(ok_cap & ok_bal, cost_m, _INF)
+
+    best = jnp.argmin(cost_m, axis=1)  # [B] ties -> lowest index (determinism)
+    best_cost = jnp.take_along_axis(cost_m, best[:, None], axis=1)[:, 0]
+    no_solution = best_cost >= _INF
+
+    chosen = jnp.take_along_axis(add, best[:, None, None, None], axis=1)[:, 0]
+    chosen = chosen & ~no_solution[:, None, None]  # [B, L, Hp1]
+
+    # scatter-OR into the padded mask; masked-out writes hit the pad cell.
+    obj_w = jnp.where(chosen, safe_obj[:, :, None], maskp.shape[0] - 1)
+    srv_w = jnp.where(chosen, safe_srv[:, None, :], maskp.shape[1] - 1)
+    maskp = maskp.at[obj_w.reshape(-1), srv_w.reshape(-1)].set(True)
+
+    applied_cost = jnp.where(no_solution, 0.0, best_cost)
+    # Maintain the per-server load incrementally: every applied (x, k)
+    # addition contributes f(v_x) to server srv[k].  NOTE this ignores
+    # within-batch duplicate (v, s) pairs across different paths (lock-free
+    # snapshot semantics) — the driver recomputes the exact load from the
+    # mask whenever capacity checking is enabled.
+    new_load = load + jnp.einsum(
+        "blk,bl,bks->s",
+        chosen.astype(jnp.float32),
+        fx,
+        jax.nn.one_hot(jnp.clip(safe_srv, 0, S - 1), S, dtype=jnp.float32)
+        * (srv >= 0).astype(jnp.float32)[..., None],
+    )
+    return maskp, applied_cost, no_solution, chosen, first_obj, srv, new_load
+
+
+@dataclasses.dataclass
+class GreedyStats:
+    total_cost: float = 0.0
+    failed_paths: int = 0
+    paths_processed: int = 0
+    fallback_paths: int = 0
+    replicas: int = 0
+    runtime_s: float = 0.0
+    rm: list | None = None
+
+
+def replicate_workload(
+    pathset: PathSet,
+    shard: np.ndarray,
+    n_servers: int,
+    t: int,
+    f: np.ndarray | None = None,
+    capacity: np.ndarray | float | None = None,
+    epsilon: float | None = None,
+    batch_size: int = 256,
+    max_candidates: int = 2048,
+    prune: bool = True,
+    track_rm: bool = False,
+) -> tuple[ReplicationScheme, GreedyStats]:
+    """Alg 1 over a workload with the vectorized batched UPDATE.
+
+    Args mirror Def 4.4: ``t`` is the latency bound (distributed traversals),
+    ``f`` the storage cost function, ``capacity`` M_s, ``epsilon`` the load
+    imbalance bound.  ``track_rm`` additionally accumulates the §5.4
+    resharding map entries (u, v, s).
+    """
+    t0 = time.perf_counter()
+    n = shard.shape[0]
+    ps = pathset.prune_redundant(shard) if prune else pathset
+    scheme = ReplicationScheme.from_sharding(shard, n_servers)
+    stats = GreedyStats(rm=[] if track_rm else None)
+    stats.paths_processed = ps.n_paths
+    if ps.n_paths == 0:
+        stats.runtime_s = time.perf_counter() - t0
+        return scheme, stats
+
+    f_arr = np.ones((n,), np.float32) if f is None else f.astype(np.float32)
+    shard_j = jnp.asarray(scheme.shard)
+    f_j = jnp.asarray(f_arr)
+
+    # Split vectorizable paths from enumeration-budget-exceeding ones.
+    _, _, h_all = subpath_structure(
+        jnp.asarray(ps.objects), jnp.asarray(ps.lengths), shard_j
+    )
+    h_all = np.asarray(h_all)
+    H_needed = int(h_all.max()) if ps.n_paths else 0
+    H_vec = combi.max_h_within_budget(t, max_candidates, H_needed)
+    vec_idx = np.nonzero(h_all <= H_vec)[0]
+    seq_idx = np.nonzero(h_all > H_vec)[0]
+
+    tables_np, counts_np = combi.stacked_tables(max(H_vec, t, 1), t)
+    tables = jnp.asarray(tables_np)
+    counts = jnp.asarray(counts_np)
+
+    check_capacity = capacity is not None or epsilon is not None
+    cap_arr = np.full((n_servers,), np.inf, np.float32)
+    if capacity is not None:
+        cap_arr = np.broadcast_to(
+            np.asarray(capacity, np.float32), (n_servers,)
+        ).copy()
+    eps = np.float32(epsilon if epsilon is not None else np.inf)
+
+    maskp = jnp.zeros((n + 1, n_servers + 1), bool)
+    maskp = maskp.at[:n, :n_servers].set(jnp.asarray(scheme.mask))
+    load = jnp.asarray(scheme.storage_per_server(f_arr).astype(np.float32))
+    t_j = jnp.int32(t)
+    cap_j = jnp.asarray(cap_arr)
+    eps_j = jnp.asarray(eps)
+
+    vec_objects = ps.objects[vec_idx]
+    vec_lengths = ps.lengths[vec_idx]
+    nb = len(vec_idx)
+    for i in range(0, nb, batch_size):
+        o = vec_objects[i : i + batch_size]
+        l = vec_lengths[i : i + batch_size]
+        if o.shape[0] < batch_size:  # pad batch to a fixed shape
+            padn = batch_size - o.shape[0]
+            o = np.concatenate([o, np.full((padn, o.shape[1]), -1, np.int32)])
+            l = np.concatenate([l, np.zeros((padn,), np.int32)])
+        maskp, costs, failed, chosen, first_obj, srv, load = _update_batch(
+            maskp,
+            jnp.asarray(o),
+            jnp.asarray(l),
+            shard_j,
+            f_j,
+            tables,
+            counts,
+            t_j,
+            load,
+            cap_j,
+            eps_j,
+            check_capacity,
+        )
+        k = min(batch_size, nb - i)
+        stats.total_cost += float(np.asarray(costs)[:k].sum())
+        stats.failed_paths += int(np.asarray(failed)[:k].sum())
+        if check_capacity:
+            # exact load from the mask (the incremental estimate can
+            # over-count duplicate additions within a batch)
+            m_now = np.asarray(maskp)[:n, :n_servers]
+            load = jnp.asarray((f_arr[:, None] * m_now).sum(0).astype(np.float32))
+        if track_rm:
+            ch = np.asarray(chosen)[:k]
+            fo = np.asarray(first_obj)[:k]
+            sv = np.asarray(srv)[:k]
+            bb, xx, kk = np.nonzero(ch)
+            for b, x, kk_ in zip(bb, xx, kk):
+                stats.rm.append(
+                    (int(fo[b, kk_]), int(o[b, x]), int(sv[b, kk_]))
+                )
+
+    scheme.mask = np.asarray(maskp)[:n, :n_servers].copy()
+
+    # Exact fallback for enumeration-heavy paths (processed last; order of
+    # paths is immaterial to correctness by Thm 5.3).
+    for i in seq_idx:
+        res = update_exact(
+            scheme, ps.path(int(i)), t, f_arr, capacity, epsilon
+        )
+        stats.fallback_paths += 1
+        if res.feasible:
+            stats.total_cost += res.cost
+            if track_rm:
+                stats.rm.extend(res.rm_entries)
+        else:
+            stats.failed_paths += 1
+
+    stats.replicas = scheme.replica_count()
+    stats.runtime_s = time.perf_counter() - t0
+    return scheme, stats

@@ -1,0 +1,220 @@
+"""Replication schemes and the latency/access function (paper §4).
+
+A replication scheme ``r`` maps each object to the set of servers holding a
+copy; the original copy placed by the sharding function ``d`` is always
+included.  We represent ``r`` as a boolean matrix ``[n_objects, n_servers]``
+(uint8 on host, bool in JAX).  Monotone 0->1 updates mirror the paper's
+lock-free bit-vector implementation (§6.1); batched scatter-ORs are the
+SIMD analogue of their 64-thread races, justified by Thm 5.3.
+
+The *access function* rho (Eqn 1) and the path latency h(p, r, rho)
+(Eqn 2) are evaluated with a vectorized ``lax.scan`` along the path axis;
+``repro.kernels.path_latency`` provides the Pallas TPU kernel for the same
+computation (this module is its jnp oracle).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.paths import PAD, PathSet
+
+
+@dataclasses.dataclass
+class ReplicationScheme:
+    """Boolean replication matrix with storage accounting.
+
+    Attributes:
+      mask: bool [n_objects, n_servers]; ``mask[v, s]`` == object v has a copy
+        at server s.  Always a superset of the sharding function.
+      shard: int32 [n_objects]; the sharding function d (home server).
+    """
+
+    mask: np.ndarray
+    shard: np.ndarray
+
+    @staticmethod
+    def from_sharding(shard: np.ndarray, n_servers: int) -> "ReplicationScheme":
+        n = shard.shape[0]
+        mask = np.zeros((n, n_servers), dtype=bool)
+        mask[np.arange(n), shard] = True
+        return ReplicationScheme(mask, shard.astype(np.int32))
+
+    @property
+    def n_objects(self) -> int:
+        return self.mask.shape[0]
+
+    @property
+    def n_servers(self) -> int:
+        return self.mask.shape[1]
+
+    def copy(self) -> "ReplicationScheme":
+        return ReplicationScheme(self.mask.copy(), self.shard)
+
+    def add(self, objects: np.ndarray, servers: np.ndarray) -> None:
+        """Monotone in-place addition of replicas (0->1 flips only)."""
+        self.mask[objects, servers] = True
+
+    def replica_count(self) -> int:
+        """Number of *replica* copies (total copies minus originals)."""
+        return int(self.mask.sum()) - self.n_objects
+
+    def storage_per_server(self, f: np.ndarray | None = None) -> np.ndarray:
+        """f_r(s) = sum of f(v) over v with s in r(v) (paper notation)."""
+        if f is None:
+            return self.mask.sum(axis=0).astype(np.float64)
+        return f.astype(np.float64) @ self.mask
+
+    def replication_overhead(self, f: np.ndarray | None = None) -> float:
+        """Replicated bytes / original bytes (the paper's Fig 2d/6 metric)."""
+        if f is None:
+            total = float(self.mask.sum())
+            orig = float(self.n_objects)
+        else:
+            total = float(self.storage_per_server(f).sum())
+            orig = float(f.sum())
+        return (total - orig) / orig
+
+    def is_feasible(
+        self,
+        f: np.ndarray | None = None,
+        capacity: np.ndarray | float | None = None,
+        epsilon: float | None = None,
+    ) -> bool:
+        """Check storage capacity M_s and the eps load-imbalance constraint."""
+        cost = self.storage_per_server(f)
+        if capacity is not None:
+            cap = np.broadcast_to(np.asarray(capacity, dtype=np.float64), cost.shape)
+            if np.any(cost > cap + 1e-9):
+                return False
+        if epsilon is not None:
+            mean = cost.mean()
+            if mean > 0 and cost.max() > (1.0 + epsilon) * mean + 1e-9:
+                return False
+        return True
+
+    def pack(self) -> np.ndarray:
+        """Pack to uint32 bit-words [n_objects, ceil(S/32)] (kernel input)."""
+        S = self.n_servers
+        W = (S + 31) // 32
+        padded = np.zeros((self.n_objects, W * 32), dtype=bool)
+        padded[:, :S] = self.mask
+        bits = padded.reshape(self.n_objects, W, 32).astype(np.uint32)
+        weights = (np.uint32(1) << np.arange(32, dtype=np.uint32))[None, None, :]
+        return (bits * weights).sum(axis=2).astype(np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Subpath decomposition (Def 5.1) under the *sharding* function d.
+# Alg 2 line 2 enumerates server-local subpaths of p under d (no replicas).
+# ---------------------------------------------------------------------------
+def subpath_structure(objects: jnp.ndarray, lengths: jnp.ndarray, shard: jnp.ndarray):
+    """Segment each path into server-local subpaths under d.
+
+    Args:
+      objects: int32 [P, L] padded paths.
+      lengths: int32 [P].
+      shard:   int32 [n_objects] sharding function.
+
+    Returns:
+      home: int32 [P, L]  home server per position (PAD positions -> -1)
+      seg:  int32 [P, L]  subpath index per position (0-based)
+      h:    int32 [P]     number of distributed traversals under d
+                          (= #subpaths - 1)
+    """
+    P, L = objects.shape
+    valid = jnp.arange(L)[None, :] < lengths[:, None]
+    safe = jnp.maximum(objects, 0)
+    home = jnp.where(valid, shard[safe], -1).astype(jnp.int32)
+    prev = jnp.concatenate([jnp.full((P, 1), -2, jnp.int32), home[:, :-1]], axis=1)
+    boundary = valid & (jnp.arange(L)[None, :] > 0) & (home != prev)
+    seg = jnp.cumsum(boundary.astype(jnp.int32), axis=1)
+    seg = jnp.where(valid, seg, -1)
+    last = jnp.maximum(lengths - 1, 0)
+    h = jnp.take_along_axis(seg, last[:, None], axis=1)[:, 0]
+    h = jnp.where(lengths > 0, h, 0)
+    return home, seg, h
+
+
+# ---------------------------------------------------------------------------
+# Latency of paths under a replication scheme (Eqns 1-3).
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=())
+def _path_latencies_jit(objects, lengths, mask, shard):
+    P, L = objects.shape
+    valid = jnp.arange(L)[None, :] < lengths[:, None]
+    safe = jnp.maximum(objects, 0)
+    home = jnp.where(valid, shard[safe], 0).astype(jnp.int32)
+    # replica membership rows per position: [P, L, S]
+    rloc = mask[safe]
+
+    def step(server, xs):
+        home_t, rloc_t, valid_t = xs
+        # is a copy of v available at the current server? (Eqn 1)
+        local = jnp.take_along_axis(rloc_t, server[:, None], axis=1)[:, 0]
+        nxt = jnp.where(local, server, home_t)
+        cost = (~local) & valid_t
+        nxt = jnp.where(valid_t, nxt, server)
+        return nxt, cost
+
+    server0 = home[:, 0]
+    xs = (
+        jnp.moveaxis(home[:, 1:], 1, 0),
+        jnp.moveaxis(rloc[:, 1:], 1, 0),
+        jnp.moveaxis(valid[:, 1:], 1, 0),
+    )
+    _, costs = jax.lax.scan(step, server0, xs)
+    return jnp.sum(costs.astype(jnp.int32), axis=0)
+
+
+def path_latencies(
+    pathset: PathSet, scheme: ReplicationScheme, chunk: int = 8192
+) -> np.ndarray:
+    """h(p, r, rho) for every path: #distributed traversals (Def 4.2)."""
+    objects = pathset.objects
+    lengths = pathset.lengths
+    mask = jnp.asarray(scheme.mask)
+    shard = jnp.asarray(scheme.shard)
+    outs = []
+    for i in range(0, pathset.n_paths, chunk):
+        o = jnp.asarray(objects[i : i + chunk])
+        l = jnp.asarray(lengths[i : i + chunk])
+        outs.append(np.asarray(_path_latencies_jit(o, l, mask, shard)))
+    if not outs:
+        return np.zeros((0,), dtype=np.int32)
+    return np.concatenate(outs, axis=0)
+
+
+def query_latencies(pathset: PathSet, scheme: ReplicationScheme) -> np.ndarray:
+    """l_Q = max over the query's paths (Def 4.3); int array [n_queries]."""
+    pl = path_latencies(pathset, scheme)
+    nq = pathset.n_queries
+    out = np.zeros((nq,), dtype=np.int32)
+    np.maximum.at(out, pathset.query_ids, pl)
+    return out
+
+
+def path_latency_reference(path: list[int], mask: np.ndarray, shard: np.ndarray) -> int:
+    """Pure-python oracle for a single path (used by tests)."""
+    if not path:
+        return 0
+    server = int(shard[path[0]])
+    cost = 0
+    for v in path[1:]:
+        if mask[v, server]:
+            continue  # local replica: stay (Eqn 1 first case)
+        server = int(shard[v])  # distributed traversal to the original copy
+        cost += 1
+    return cost
+
+
+def is_latency_feasible(
+    pathset: PathSet, scheme: ReplicationScheme, t: int | np.ndarray
+) -> bool:
+    """All queries within their latency constraint t_Q (Def 4.4 constraint 1)."""
+    lq = query_latencies(pathset, scheme)
+    return bool(np.all(lq <= np.asarray(t)))

@@ -1,0 +1,4 @@
+"""Synthetic sharded data pipelines."""
+from repro.data.pipeline import Prefetcher, gnn_batch_fn, lm_batch_fn, shard_batch
+
+__all__ = ["Prefetcher", "lm_batch_fn", "gnn_batch_fn", "shard_batch"]

@@ -1,0 +1,20 @@
+"""Simulated distributed query-execution system + fault tolerance substrate."""
+from repro.distsys.cluster import Cluster, ServerState
+from repro.distsys.executor import ExecutionReport, LatencyModel, execute_workload
+from repro.distsys.router import Router
+from repro.distsys.checkpoint import CheckpointManager
+from repro.distsys.faults import Event, apply_event, event_schedule, run_schedule
+
+__all__ = [
+    "Cluster",
+    "ServerState",
+    "ExecutionReport",
+    "LatencyModel",
+    "execute_workload",
+    "Router",
+    "CheckpointManager",
+    "Event",
+    "apply_event",
+    "event_schedule",
+    "run_schedule",
+]

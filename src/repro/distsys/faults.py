@@ -1,0 +1,104 @@
+"""Fault injection + elastic-event driver (paper §5.4 scenario source).
+
+Generates reproducible sequences of cluster events — server failures,
+recoveries, scale-out/scale-in — and applies them to a Cluster while
+invoking the §5.4 incremental replication update so the latency bound is
+re-established after each event.  Used by tests, the elastic launcher, and
+the reshard-cost benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+from repro.core.replication import ReplicationScheme
+from repro.core.reshard import ReshardingMap, apply_reshard, drain_server, repair_paths
+from repro.distsys.cluster import Cluster
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    kind: str          # "fail" | "recover" | "scale_out" | "scale_in"
+    server: int
+    at_step: int
+
+
+def event_schedule(
+    n_servers: int,
+    n_events: int,
+    horizon: int,
+    seed: int = 0,
+    kinds: tuple[str, ...] = ("fail", "recover"),
+) -> list[Event]:
+    rng = np.random.default_rng(seed)
+    events = []
+    for _ in range(n_events):
+        events.append(
+            Event(
+                kind=str(rng.choice(list(kinds))),
+                server=int(rng.integers(0, n_servers)),
+                at_step=int(rng.integers(1, horizon)),
+            )
+        )
+    return sorted(events, key=lambda e: e.at_step)
+
+
+def apply_event(
+    cluster: Cluster,
+    rmap: ReshardingMap,
+    event: Event,
+    f: np.ndarray | None = None,
+) -> dict:
+    """Apply one event; §5.4 incremental update restores feasibility."""
+    if event.kind == "fail":
+        if sum(s.alive for s in cluster.servers) <= 1:
+            return {"skipped": True}
+        cluster.fail_server(event.server)
+        moves, rep = drain_server(cluster.scheme, rmap, event.server, f)
+        return {
+            "moved": rep.moved_originals,
+            "transferred": rep.replicas_transferred,
+            "deleted": rep.replicas_deleted,
+            "bytes": rep.bytes_transferred,
+        }
+    if event.kind == "recover":
+        cluster.recover_server(event.server)
+        return {"recovered": event.server}
+    if event.kind == "scale_in":
+        return apply_event(
+            cluster, rmap, Event("fail", event.server, event.at_step), f
+        )
+    if event.kind == "scale_out":
+        # new server joins empty; rebalancing is a planned reshard:
+        # move a 1/S' slice of originals to it.
+        scheme = cluster.scheme
+        S_new = event.server
+        if S_new >= scheme.n_servers:
+            grow = S_new + 1 - scheme.n_servers
+            scheme.mask = np.pad(scheme.mask, ((0, 0), (0, grow)))
+            for s in range(scheme.n_servers - grow, scheme.n_servers):
+                from repro.distsys.cluster import ServerState
+
+                cluster.servers.append(ServerState(s))
+        victims = np.nonzero(scheme.shard != S_new)[0]
+        take = victims[:: max(scheme.n_servers, 1)]
+        moves = {int(u): S_new for u in take}
+        rep = apply_reshard(scheme, rmap, moves, f)
+        return {
+            "moved": rep.moved_originals,
+            "transferred": rep.replicas_transferred,
+            "bytes": rep.bytes_transferred,
+        }
+    raise ValueError(event.kind)
+
+
+def run_schedule(
+    cluster: Cluster,
+    rmap: ReshardingMap,
+    events: list[Event],
+    f: np.ndarray | None = None,
+) -> Iterator[tuple[Event, dict]]:
+    for ev in events:
+        yield ev, apply_event(cluster, rmap, ev, f)

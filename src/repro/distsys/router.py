@@ -1,0 +1,76 @@
+"""Replica-aware request routing (paper Fig 4 'sharding-based routing').
+
+The router decides which server coordinates a query (where its root access
+runs) and which server serves each remote hop.  Policies:
+
+* ``home``        — original copy per the sharding function (paper default;
+                    Alg 2 assumes root routing by d).
+* ``replica_lb``  — among servers holding a copy of the root, pick the one
+                    with the least outstanding load (uses replicas produced
+                    by the replication scheme as routing targets; a benefit
+                    the paper notes for t=0 single-site schemes).
+* ``hedged``      — primary + backup pick for straggler mitigation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.replication import ReplicationScheme
+
+
+@dataclasses.dataclass
+class Router:
+    scheme: ReplicationScheme
+    policy: str = "home"
+
+    def route_roots(
+        self,
+        roots: np.ndarray,
+        alive: np.ndarray | None = None,
+        seed: int = 0,
+    ) -> np.ndarray:
+        """Coordinator server per query root."""
+        S = self.scheme.n_servers
+        alive = np.ones(S, bool) if alive is None else alive
+        home = self.scheme.shard[roots]
+        if self.policy == "home":
+            ok = alive[home]
+            if ok.all():
+                return home.astype(np.int32)
+            # fail-over to first alive replica
+            mask = self.scheme.mask[roots] & alive[None, :]
+            fb = np.where(mask.any(1), mask.argmax(1), -1)
+            return np.where(ok, home, fb).astype(np.int32)
+        if self.policy in ("replica_lb", "hedged"):
+            rng = np.random.default_rng(seed)
+            mask = self.scheme.mask[roots] & alive[None, :]
+            load = np.zeros(S, np.int64)
+            out = np.empty(len(roots), np.int32)
+            order = rng.permutation(len(roots))
+            for i in order:
+                cands = np.nonzero(mask[i])[0]
+                if len(cands) == 0:
+                    out[i] = -1
+                    continue
+                pick = cands[np.argmin(load[cands])]
+                out[i] = pick
+                load[pick] += 1
+            return out
+        raise ValueError(self.policy)
+
+    def route_hop(
+        self, obj: int, current: int, alive: np.ndarray | None = None
+    ) -> tuple[int, bool]:
+        """(server, is_remote) for one access from ``current`` (Eqn 1)."""
+        alive_ok = True if alive is None else alive[current]
+        if alive_ok and self.scheme.mask[obj, current]:
+            return current, False
+        home = int(self.scheme.shard[obj])
+        if alive is None or alive[home]:
+            return home, True
+        copies = np.nonzero(
+            self.scheme.mask[obj] & (alive if alive is not None else True)
+        )[0]
+        return (int(copies[0]) if len(copies) else -1), True

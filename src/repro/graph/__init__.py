@@ -1,0 +1,31 @@
+"""Graph storage, generators, partitioners, and neighbor sampling."""
+from repro.graph.csr import CSRGraph
+from repro.graph.generators import SNBLikeGraph, ogb_like, random_regular, snb_like
+from repro.graph.partition import (
+    hash_partition,
+    hypergraph_partition,
+    ldg_partition,
+    make_sharding,
+)
+from repro.graph.sampler import (
+    MiniBatch,
+    distributed_hops,
+    minibatch_sampler,
+    sample_neighborhood,
+)
+
+__all__ = [
+    "CSRGraph",
+    "SNBLikeGraph",
+    "snb_like",
+    "ogb_like",
+    "random_regular",
+    "hash_partition",
+    "ldg_partition",
+    "hypergraph_partition",
+    "make_sharding",
+    "MiniBatch",
+    "minibatch_sampler",
+    "sample_neighborhood",
+    "distributed_hops",
+]

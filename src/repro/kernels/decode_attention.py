@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: GQA flash-decode attention.
+
+Serving hot spot for the ``decode_32k`` / ``long_500k`` cells: one query
+token attends over a long KV cache.  Grid is (batch, kv_head, kv_blocks)
+with the kv-block dimension innermost so the online-softmax state lives in
+VMEM scratch across blocks:
+
+  q     [B, KV, G, hd]   G = query heads per kv head (GQA group)
+  k, v  [B, T, KV, hd]   KV cache (T positions)
+  lens  [B]              valid cache length per sequence
+  out   [B, KV, G, hd]
+
+Per kv block: s = q @ k_blk^T  ->  online max/sum accumulation  ->
+acc = acc*alpha + exp(s - m_new) @ v_blk; the final block normalizes.
+Block sizes: bT x hd tiles are MXU-aligned for hd in {64, 128}.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, block_t: int, n_blocks: int):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # [G, hd]
+    k = k_ref[0, :, 0].astype(jnp.float32)       # [bT, hd]
+    v = v_ref[0, :, 0].astype(jnp.float32)       # [bT, hd]
+    length = len_ref[0]
+
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = (q @ k.T) * scale                        # [G, bT]
+    pos = t * block_t + jax.lax.iota(jnp.int32, block_t)
+    s = jnp.where((pos < length)[None, :], s, -1e30)
+
+    m_prev = m_ref[...]                          # [G, 1]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                       # [G, bT]
+    l_new = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + p @ v  # [G, hd]
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(t == n_blocks - 1)
+    def _final():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_t", "interpret"))
+def decode_attention_pallas(
+    q: jnp.ndarray,        # [B, KV, G, hd]
+    k: jnp.ndarray,        # [B, T, KV, hd]
+    v: jnp.ndarray,        # [B, T, KV, hd]
+    lengths: jnp.ndarray,  # int32 [B]
+    block_t: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, KV, G, hd = q.shape
+    T = k.shape[1]
+    pad = (-T) % block_t
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Tp = T + pad
+    n_blocks = Tp // block_t
+
+    grid = (B, KV, n_blocks)
+    kernel = functools.partial(_kernel, block_t=block_t, n_blocks=n_blocks)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, t: (b,)),
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, t: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_t, 1, hd), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, block_t, 1, hd), lambda b, h, t: (b, t, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, t: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),    # running max m
+            pltpu.VMEM((G, 1), jnp.float32),    # running sum l
+            pltpu.VMEM((G, hd), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(lengths, q, k, v)
+    return out

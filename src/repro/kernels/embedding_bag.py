@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: EmbeddingBag (recsys lookup hot path).
+
+The TPU TBE pattern: a scalar-prefetched index array drives the BlockSpec
+index_map of the table operand, so each grid step DMAs exactly the one
+table row it needs from HBM into VMEM (no host gather, no [B*L, d]
+materialization).  Grid = (bags, bag_len); the output block is revisited
+across the bag_len dimension and accumulates in place; a VMEM scratch
+carries the per-bag valid-count for mean pooling.
+
+  ids    int32 [B * L]   flattened bag members (-1 = padding slot)
+  table  f32   [N, d]
+  out    f32   [B, d]    sum- or mean-pooled rows
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, row_ref, o_ref, cnt_ref, *, bag_len: int, mean: bool):
+    b = pl.program_id(0)
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    idx = ids_ref[b * bag_len + l]
+    valid = (idx >= 0).astype(jnp.float32)
+    o_ref[...] += row_ref[...].astype(jnp.float32) * valid
+    cnt_ref[...] += valid
+
+    if mean:
+        @pl.when(l == bag_len - 1)
+        def _norm():
+            o_ref[...] = o_ref[...] / jnp.maximum(cnt_ref[...], 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+def embedding_bag_pallas(
+    table: jnp.ndarray,   # [N, d]
+    ids: jnp.ndarray,     # int32 [B, L]  (-1 padding)
+    mode: str = "mean",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, L = ids.shape
+    N, d = table.shape
+    flat = ids.reshape(-1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, L),
+        in_specs=[
+            # one table row per grid step, row chosen by the prefetched ids
+            pl.BlockSpec(
+                (1, d), lambda b, l, ids_ref: (jnp.maximum(
+                    ids_ref[b * L + l], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda b, l, ids_ref: (b, 0)),
+        scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32)],
+    )
+    kernel = functools.partial(_kernel, bag_len=L, mean=(mode == "mean"))
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, d), jnp.float32),
+        interpret=interpret,
+    )(flat, table)
+    return out

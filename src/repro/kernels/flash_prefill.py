@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: causal flash attention for prefill.
+
+The §Roofline analysis shows every prefill cell memory-bound on
+attention-score HBM round-trips in the jnp blockwise fallback
+(EXPERIMENTS.md): scores [bq, S] are written + read per block.  This
+kernel keeps them in VMEM — the classic flash pattern, with the kv-block
+loop innermost so the online-softmax state never leaves scratch:
+
+  q     [B, S, KV, G, hd]    grouped queries (GQA layout)
+  k, v  [B, S, KV, hd]
+  out   [B, S, KV, G, hd]
+
+Grid (B, KV, n_q_blocks, n_kv_blocks); causal masking prunes nothing at
+the grid level (simplicity) but masks in-kernel; the q-block loop carries
+(m, l, acc) scratch like kernels/decode_attention.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, block_q: int, block_k: int, n_kv: int, window: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0].astype(jnp.float32)       # [bq, G, hd]
+    k = k_ref[0, :, 0].astype(jnp.float32)       # [bk, hd]
+    v = v_ref[0, :, 0].astype(jnp.float32)       # [bk, hd]
+    hd = q.shape[-1]
+
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+    k_pos = ki * block_k + jax.lax.iota(jnp.int32, block_k)
+
+    s = jnp.einsum("qgh,th->gqt", q, k) / (hd ** 0.5)   # [G, bq, bk]
+    mask = k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    s = jnp.where(mask[None], s, -1e30)
+
+    m_prev = m_ref[...]                                  # [G, bq]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[..., None])                    # [G, bq, bk]
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[..., None] + jnp.einsum(
+        "gqt,th->gqh", p, v)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _final():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+        o_ref[0, :, 0] = out.transpose(1, 0, 2).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k",
+                                             "window", "interpret"))
+def flash_prefill_pallas(
+    q: jnp.ndarray,        # [B, S, KV, G, hd]
+    k: jnp.ndarray,        # [B, S, KV, hd]
+    v: jnp.ndarray,        # [B, S, KV, hd]
+    block_q: int = 128,
+    block_k: int = 128,
+    window: int = 0,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, S, KV, G, hd = q.shape
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    n_q, n_kv = S // block_q, S // block_k
+
+    grid = (B, KV, n_q, n_kv)
+    kernel = functools.partial(_kernel, block_q=block_q, block_k=block_k,
+                               n_kv=n_kv, window=window)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, G, hd),
+                         lambda b, h, qi, ki: (b, qi, h, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, h, qi, ki: (b, ki, h, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, h, qi, ki: (b, ki, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, G, hd),
+                               lambda b, h, qi, ki: (b, qi, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, block_q), jnp.float32),       # running max
+            pltpu.VMEM((G, block_q), jnp.float32),       # running sum
+            pltpu.VMEM((G, block_q, hd), jnp.float32),   # accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out

@@ -1,0 +1,53 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Selects interpret mode automatically (Pallas executes the kernel body in
+Python on CPU; compiled Mosaic on TPU), and adapts framework-level data
+structures (PathSet + ReplicationScheme) to kernel inputs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.embedding_bag import embedding_bag_pallas
+from repro.kernels.flash_prefill import flash_prefill_pallas
+from repro.kernels.path_latency import path_latency_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def path_latency(pathset, scheme, block: int = 128) -> np.ndarray:
+    """Kernel-backed h(p, r, rho) for a PathSet + ReplicationScheme."""
+    packed = scheme.pack()                       # [n_obj, W] uint32
+    objs = np.maximum(pathset.objects, 0)
+    home = np.where(pathset.objects >= 0,
+                    scheme.shard[objs], -1).astype(np.int32)
+    masks = packed[objs]                         # [P, L, W]
+    out = path_latency_pallas(
+        jnp.asarray(home), jnp.asarray(masks),
+        jnp.asarray(pathset.lengths), block=block,
+        interpret=not _on_tpu())
+    return np.asarray(out)
+
+
+def decode_attention(q, k, v, lengths, block_t: int = 256):
+    """Flash-decode GQA attention (see kernels.decode_attention)."""
+    return decode_attention_pallas(
+        q, k, v, lengths, block_t=block_t, interpret=not _on_tpu())
+
+
+def embedding_bag(table, ids, mode: str = "mean"):
+    """TBE-style embedding bag (see kernels.embedding_bag)."""
+    return embedding_bag_pallas(table, ids, mode=mode,
+                                interpret=not _on_tpu())
+
+
+def flash_prefill(q, k, v, block_q: int = 128, block_k: int = 128,
+                  window: int = 0):
+    """Causal flash attention for prefill (see kernels.flash_prefill)."""
+    return flash_prefill_pallas(q, k, v, block_q=block_q, block_k=block_k,
+                                window=window, interpret=not _on_tpu())

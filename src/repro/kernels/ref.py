@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def path_latency_ref(home: jnp.ndarray, masks: jnp.ndarray,
+                     lengths: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels.path_latency: same packed-mask semantics.
+
+    home [P, L] int32; masks [P, L, W] uint32; lengths [P] -> int32 [P].
+    """
+    P, L = home.shape
+
+    def step(carry, xs):
+        server, cost, i = carry
+        home_i, mask_i = xs          # [P], [P, W]
+        valid = (i < lengths) & (lengths > 0)
+        widx = server // 32
+        bit = (server % 32).astype(jnp.uint32)
+        word = jnp.take_along_axis(mask_i, widx[:, None], axis=1)[:, 0]
+        local = ((word >> bit) & jnp.uint32(1)).astype(bool)
+        nxt = jnp.where(local, server, jnp.maximum(home_i, 0))
+        nxt = jnp.where(valid, nxt, server)
+        cost = cost + (valid & ~local).astype(jnp.int32)
+        return (nxt, cost, i + 1), None
+
+    server0 = jnp.maximum(home[:, 0], 0)
+    init = (server0, jnp.zeros((P,), jnp.int32), jnp.int32(1))
+    (_, cost, _), _ = jax.lax.scan(
+        step, init, (home[:, 1:].swapaxes(0, 1), masks[:, 1:].swapaxes(0, 1)))
+    return cost
+
+
+def decode_attention_ref(q, k, v, lengths):
+    """Oracle for kernels.decode_attention (plain masked softmax).
+
+    q [B, KV, G, hd]; k/v [B, T, KV, hd]; lengths [B] -> [B, KV, G, hd].
+    """
+    B, KV, G, hd = q.shape
+    T = k.shape[1]
+    s = jnp.einsum("bkgh,btkh->bkgt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (hd ** 0.5)
+    mask = jnp.arange(T)[None, :] < lengths[:, None]       # [B, T]
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def embedding_bag_ref(table, ids, mode="mean"):
+    """Oracle for kernels.embedding_bag.  ids [B, L] (-1 pad) -> [B, d]."""
+    rows = jnp.take(table, jnp.maximum(ids, 0), axis=0)    # [B, L, d]
+    m = (ids >= 0).astype(jnp.float32)[..., None]
+    s = (rows.astype(jnp.float32) * m).sum(axis=1)
+    if mode == "mean":
+        s = s / jnp.maximum(m.sum(axis=1), 1.0)
+    return s
+
+
+def flash_prefill_ref(q, k, v, window: int = 0):
+    """Oracle for kernels.flash_prefill: causal (optionally windowed)
+    attention.  q [B,S,KV,G,hd]; k/v [B,S,KV,hd] -> [B,S,KV,G,hd]."""
+    B, S, KV, G, hd = q.shape
+    s_ = jnp.einsum("bqkgh,btkh->bkgqt", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) / (hd ** 0.5)
+    qp = jnp.arange(S)
+    mask = qp[None, :] >= qp[:, None]  # k_pos <= q_pos (transposed below)
+    mask = qp[:, None] >= qp[None, :]
+    if window > 0:
+        mask &= (qp[:, None] - qp[None, :]) < window
+    s_ = jnp.where(mask[None, None, None], s_, -1e30)
+    p = jax.nn.softmax(s_, axis=-1)
+    out = jnp.einsum("bkgqt,btkh->bqkgh", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

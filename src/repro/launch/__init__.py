@@ -1,0 +1,8 @@
+"""Launchers: mesh construction, dry-run, train/serve drivers, elasticity.
+
+NOTE: do not import ``dryrun`` from here — it must own first-import of
+jax (XLA_FLAGS); run it as ``python -m repro.launch.dryrun``.
+"""
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_production_mesh", "make_host_mesh"]

@@ -1,0 +1,175 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the XLA_FLAGS lines above MUST stay the first two lines — jax locks
+# the device count at first init, so no other import may precede them.
+
+DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: 512 placeholder host devices stand in for 2 TPU v5e pods; every
+cell must ``.lower().compile()`` under both the single-pod (16, 16) mesh
+and the multi-pod (2, 16, 16) mesh, and the compiled artifact yields
+``memory_analysis()`` (fits?) + ``cost_analysis()`` (roofline terms).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b \
+      --shape train_4k --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --all \
+      --out benchmarks/results/dryrun.jsonl
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.analysis import roofline as R
+from repro.configs import arch_ids, get_arch
+from repro.launch.mesh import make_production_mesh
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+
+def model_flops_for(bundle, shape_id: str) -> float:
+    cell = bundle.cells[shape_id]
+    m = cell.meta
+    if bundle.family == "lm":
+        cfg = bundle.config
+        if cell.kind == "train":
+            return R.lm_model_flops(cfg, m["batch"] * m["seq"], "train",
+                                    kv_len=m["seq"])
+        if cell.kind == "prefill":
+            return R.lm_model_flops(cfg, m["batch"] * m["seq"], "prefill",
+                                    kv_len=m["seq"])
+        return R.lm_model_flops(cfg, m["batch"], "decode", kv_len=m["seq"])
+    if bundle.family == "gnn":
+        from repro.configs.gnn_family import cfg_for_cell
+
+        cfg = cfg_for_cell(bundle, shape_id)
+        if shape_id == "minibatch_lg":
+            B = m["batch"]
+            f1, f2 = m["fanouts"]
+            n, e = B * (1 + f1 + f1 * f2), B * (f1 + f1 * f2)
+        elif shape_id == "molecule":
+            n, e = m["batch"] * m["n"], m["batch"] * m["e"]
+        else:
+            n, e = m["n"], m["e"]
+        return R.gnn_model_flops(cfg, n, e, "train")
+    # recsys
+    cfg = bundle.config
+    if cell.kind == "train":
+        return R.mind_model_flops(cfg, m["batch"], m["batch"], "train")
+    if cell.kind == "serve":
+        from repro.configs.recsys_family import N_CANDIDATES_ONLINE
+
+        return R.mind_model_flops(cfg, m["batch"], N_CANDIDATES_ONLINE,
+                                  "serve")
+    return R.mind_model_flops(cfg, m["batch"], m["n_candidates"], "serve")
+
+
+def run_cell(arch: str, shape_id: str, multi_pod: bool,
+             verbose: bool = True) -> dict:
+    bundle = get_arch(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = 512 if multi_pod else 256
+
+    args = bundle.abstract_args(shape_id, multi_pod)
+    in_specs, out_specs = bundle.shardings(shape_id, multi_pod)
+    step = bundle.step_fn(shape_id, multi_pod)
+
+    t0 = time.perf_counter()
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(
+            step,
+            in_shardings=_named(mesh, in_specs),
+            out_shardings=_named(mesh, out_specs),
+        )
+        lowered = jitted.lower(*args)
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    if verbose:
+        print(f"--- {arch} x {shape_id} x {mesh_name} ---")
+        print("memory_analysis:", mem)
+        print("cost_analysis:", {
+            k: v for k, v in compiled.cost_analysis().items()
+            if k in ("flops", "bytes accessed")})
+    rf = R.analyze(arch, shape_id, mesh_name, chips, compiled,
+                   model_flops_for(bundle, shape_id))
+    row = rf.row()
+    row.update({
+        "t_lower_s": round(t_lower, 2),
+        "t_compile_s": round(t_compile, 2),
+        "collectives": rf.collectives,
+        "ops": rf.ops,
+        "status": "ok",
+    })
+    if verbose:
+        print(json.dumps({k: row[k] for k in (
+            "t_compute_s", "t_memory_s", "t_collective_s", "bottleneck",
+            "useful_frac", "roofline_frac", "peak_mem_gb")}, indent=None,
+            default=str))
+    return row
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str]] = []
+    if args.all or args.arch is None:
+        for a in arch_ids():
+            for s in get_arch(a).shape_ids():
+                cells.append((a, s))
+    else:
+        shapes = ([args.shape] if args.shape
+                  else get_arch(args.arch).shape_ids())
+        cells = [(args.arch, s) for s in shapes]
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    rows, failures = [], 0
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                rows.append(run_cell(arch, shape, mp))
+            except Exception as e:
+                failures += 1
+                traceback.print_exc()
+                rows.append({
+                    "arch": arch, "shape": shape,
+                    "mesh": "pod2x16x16" if mp else "pod16x16",
+                    "status": f"FAIL: {type(e).__name__}: {e}",
+                })
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "a") as fh:
+            for r in rows:
+                fh.write(json.dumps(r, default=str) + "\n")
+    ok = sum(1 for r in rows if r.get("status") == "ok")
+    print(f"\ndry-run cells: {ok} ok / {len(rows)} total")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,25 @@
+"""Production meshes (TPU v5e pods).
+
+Single-pod: 256 chips as (data=16, model=16).
+Multi-pod:  2 pods x 256 chips as (pod=2, data=16, model=16); the "pod"
+axis crosses DCN, the others stay on ICI.
+
+Functions, not module-level constants: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int | None = None):
+    """Small mesh over the actually-available devices (tests/examples)."""
+    n = len(jax.devices())
+    m = model or (2 if n % 2 == 0 and n > 1 else 1)
+    return jax.make_mesh((n // m, m), ("data", "model"))

@@ -1,0 +1,4 @@
+"""Model definitions: transformer LM family, GNN family, MIND recsys."""
+from repro.models import gnn, recsys, transformer
+
+__all__ = ["transformer", "gnn", "recsys"]

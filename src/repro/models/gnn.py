@@ -1,0 +1,437 @@
+"""GNN model family: EGNN, SchNet, GraphSAGE, GraphCast — pure JAX.
+
+Message passing is implemented with ``jax.ops.segment_sum`` over an
+edge-index (src, dst) representation — JAX has no SpMM beyond BCOO, so the
+edge-scatter formulation IS the substrate (kernel_taxonomy §GNN regime 1),
+and it shards naturally: edge arrays over the data axis, hidden dims over
+the model axis where divisible.
+
+Batch formats (see ``repro.configs``):
+  * full graph   — {x:[N,F], senders:[E], receivers:[E], (pos:[N,3]),
+                    labels:[N]}
+  * molecules    — same arrays with a leading batch axis, vmapped
+  * minibatch    — {seed_x:[B,F], layer_x: per-hop [B, W_h, F]} blocks from
+                   the fan-out sampler; the regular fan-out makes
+                   aggregation a reshape-mean (TPU-native; no ragged ops)
+
+Per-arch notes:
+  * EGNN  [2102.09844]: E(n)-equivariant; messages from (h_i, h_j,
+    ||x_i - x_j||^2); coordinate updates along (x_i - x_j).
+  * SchNet [1706.08566]: continuous-filter convolutions; RBF-expanded
+    distances -> filter MLP; interaction blocks.
+  * GraphSAGE [1706.02216]: mean aggregator + concat + dense.
+  * GraphCast [2212.12794]: encoder-processor-decoder; the processor is a
+    deep stack of interaction networks (edge MLP + node MLP with sum
+    aggregation).  The grid<->mesh remapping is adapted to the provided
+    graph (encoder/decoder are per-node MLPs; see DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str = "gnn"
+    arch: str = "graphsage"          # egnn | schnet | graphsage | graphcast
+    n_layers: int = 2
+    d_hidden: int = 128
+    d_in: int = 128                  # input feature dim
+    n_classes: int = 64              # classification head width
+    aggregator: str = "mean"         # graphsage: mean; graphcast: sum
+    # schnet
+    n_rbf: int = 300
+    cutoff: float = 10.0
+    # graphcast
+    d_edge: int = 4                  # raw edge-feature dim (displacement+len)
+    dtype: Any = jnp.float32
+    remat: bool = False              # rematerialize layer bodies (big graphs)
+    scan_unroll: int = 1             # layers per scan iteration
+    # distributed-aggregation controls (set by the family per mesh/shape):
+    # shard_map aggregation computes per-chip partial segment-sums over the
+    # local edge shard and reduce-scatters node rows — GSPMD's scatter
+    # fallback all-gathers the full [E, d] message tensor instead
+    # (29.5 GiB/chip at schnet x ogb_products; EXPERIMENTS.md §Perf).
+    agg_axes: tuple = ()             # mesh axes the edge arrays shard over
+    node_axes: tuple = ()            # mesh axes node arrays shard over
+    min_tp_dim: int = 512            # only tp-shard hidden dims >= this
+
+    def validate(self) -> None:
+        assert self.arch in ("egnn", "schnet", "graphsage", "graphcast")
+
+
+def _mlp_shapes(d_in, d_hidden, d_out, t, depth=2):
+    if depth == 1:
+        return {"w0": ((d_in, d_out), t), "b0": ((d_out,), t)}
+    return {
+        "w0": ((d_in, d_hidden), t), "b0": ((d_hidden,), t),
+        "w1": ((d_hidden, d_out), t), "b1": ((d_out,), t),
+    }
+
+
+def _mlp(p, x, act=jax.nn.silu):
+    h = x @ p["w0"] + p["b0"]
+    if "w1" in p:
+        h = act(h) @ p["w1"] + p["b1"]
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Shapes
+# ---------------------------------------------------------------------------
+def shapes(cfg: GNNConfig) -> dict:
+    t = cfg.dtype
+    d = cfg.d_hidden
+    L = cfg.n_layers
+    out: dict = {"encoder": _mlp_shapes(cfg.d_in, d, d, t)}
+    if cfg.arch == "egnn":
+        layer = {
+            "phi_e": _mlp_shapes(2 * d + 1, d, d, t),
+            "phi_x": _mlp_shapes(d, d, 1, t),
+            "phi_h": _mlp_shapes(2 * d, d, d, t),
+        }
+    elif cfg.arch == "schnet":
+        layer = {
+            "filter": _mlp_shapes(cfg.n_rbf, d, d, t),
+            "in_dense": _mlp_shapes(d, d, d, t, depth=1),
+            "out_dense": _mlp_shapes(d, d, d, t),
+        }
+    elif cfg.arch == "graphsage":
+        layer = {"w_self": ((d, d), t), "w_nbr": ((d, d), t), "b": ((d,), t)}
+    else:  # graphcast interaction network
+        layer = {
+            "edge_mlp": _mlp_shapes(3 * d, d, d, t),
+            "node_mlp": _mlp_shapes(2 * d, d, d, t),
+        }
+    out["layers"] = {k: ((L, *s), dt) for k, (s, dt) in _flatten2(layer).items()}
+    out["decoder"] = _mlp_shapes(d, d, cfg.n_classes, t)
+    if cfg.arch == "graphcast":
+        out["edge_encoder"] = _mlp_shapes(cfg.d_edge, d, d, t)
+    return out
+
+
+def _flatten2(nested: dict) -> dict:
+    """{'phi_e': {'w0': ...}} -> {'phi_e/w0': ...} (keeps stacks simple)."""
+    out = {}
+    for k, v in nested.items():
+        if isinstance(v, dict):
+            for k2, v2 in v.items():
+                out[f"{k}/{k2}"] = v2
+        else:
+            out[k] = v
+    return out
+
+
+def _unflatten2(flat: dict) -> dict:
+    out: dict = {}
+    for k, v in flat.items():
+        if "/" in k:
+            a, b = k.split("/", 1)
+            out.setdefault(a, {})[b] = v
+        else:
+            out[k] = v
+    return out
+
+
+def _is_shape_leaf(x) -> bool:
+    return isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple)
+
+
+def init_abstract(cfg: GNNConfig) -> dict:
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s[0], s[1]),
+                        shapes(cfg), is_leaf=_is_shape_leaf)
+
+
+def init(cfg: GNNConfig, rng: jax.Array) -> dict:
+    tree = shapes(cfg)
+    flat, _ = jax.tree.flatten_with_path(tree, is_leaf=_is_shape_leaf)
+    keys = jax.random.split(rng, len(flat))
+    leaves = []
+    for (path, (shape, dt)), k in zip(flat, keys):
+        name = path[-1].key
+        if name.startswith("b"):
+            leaves.append(jnp.zeros(shape, dt))
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            leaves.append((jax.random.normal(k, shape, jnp.float32)
+                           / np.sqrt(max(fan_in, 1))).astype(dt))
+    return jax.tree.unflatten(
+        jax.tree.structure(tree, is_leaf=_is_shape_leaf), leaves)
+
+
+def param_specs(cfg: GNNConfig, dp=("data",), tp="model", tp_size=16) -> dict:
+    """Shard the last (output) dim over tp when divisible AND large enough
+    (feature-sharding a 64-wide hidden gives 4 floats/chip and forces
+    involuntary full rematerializations against edge-sharded tensors);
+    stacked layer params keep their leading layer dim whole."""
+
+    def spec_for(shape: tuple, stacked: bool) -> P:
+        dims = list(shape)
+        spec = [None] * len(dims)
+        if (dims and dims[-1] % tp_size == 0
+                and dims[-1] >= cfg.min_tp_dim):
+            spec[-1] = tp
+        if stacked:
+            spec[0] = None
+        return P(*spec)
+
+    tree = shapes(cfg)
+
+    def rec(sub, stacked):
+        out = {}
+        for k, v in sub.items():
+            if isinstance(v, dict):
+                out[k] = rec(v, stacked or k == "layers")
+            else:
+                out[k] = spec_for(v[0], stacked)
+        return out
+
+    return rec(tree, False)
+
+
+# ---------------------------------------------------------------------------
+# Message-passing primitives
+# ---------------------------------------------------------------------------
+def _agg_dense(messages, receivers, n_nodes, kind="sum"):
+    s = jax.ops.segment_sum(messages, receivers, num_segments=n_nodes)
+    if kind == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones_like(receivers, jnp.float32),
+                                  receivers, num_segments=n_nodes)
+        s = s / jnp.maximum(cnt, 1.0)[:, None]
+    return s
+
+
+def _unroll(cfg: GNNConfig) -> int:
+    return max(1, min(cfg.scan_unroll, cfg.n_layers))
+
+
+def make_agg(cfg: GNNConfig):
+    """Aggregation op: shard_map partial-sum + psum_scatter when the mesh
+    layout is known (see GNNConfig.agg_axes), else plain segment_sum."""
+    if not cfg.agg_axes:
+        return _agg_dense
+
+    from functools import partial
+
+    from jax.experimental.shard_map import shard_map
+
+    axes = tuple(cfg.agg_axes)
+    n_ax = tuple(cfg.node_axes)
+
+    def agg(messages, receivers, n_nodes, kind="sum"):
+        mesh = jax.sharding.get_abstract_mesh()
+        world = 1
+        for a in axes:
+            world *= mesh.shape[a]
+        if n_nodes % world != 0:
+            return _agg_dense(messages, receivers, n_nodes, kind)
+
+        @partial(shard_map, mesh=mesh,
+                 in_specs=(P(axes, None), P(axes)),
+                 out_specs=P(axes, None), check_rep=False)
+        def inner(m_local, r_local):
+            # per-chip partial segment-sum over the local edge shard,
+            # then ring reduce-scatter of node rows over all chips
+            psum = jax.ops.segment_sum(m_local, r_local,
+                                       num_segments=n_nodes)
+            cnt = None
+            if kind == "mean":
+                cnt = jax.ops.segment_sum(
+                    jnp.ones_like(r_local, jnp.float32), r_local,
+                    num_segments=n_nodes)
+                psum = jnp.concatenate([psum, cnt[:, None]], axis=1)
+            out = psum
+            for a in axes:  # scatter over each axis in turn
+                out = jax.lax.psum_scatter(out, a, scatter_dimension=0,
+                                           tiled=True)
+            return out
+
+        out = inner(messages, receivers)
+        if kind == "mean":
+            out, cnt = out[:, :-1], out[:, -1]
+            out = out / jnp.maximum(cnt, 1.0)[:, None]
+        # node arrays live on node_axes downstream
+        return jax.lax.with_sharding_constraint(out, P(n_ax or None, None))
+
+    return agg
+
+
+_agg = _agg_dense  # default used by the layer bodies below
+
+
+def rbf_expand(dist, n_rbf, cutoff):
+    centers = jnp.linspace(0.0, cutoff, n_rbf)
+    gamma = 10.0 / cutoff
+    return jnp.exp(-gamma * (dist[:, None] - centers) ** 2)
+
+
+# ---------------------------------------------------------------------------
+# Per-arch layer bodies (x/h: [N, d]; senders/receivers: [E])
+# ---------------------------------------------------------------------------
+def egnn_layer(lp, h, pos, senders, receivers, agg=_agg_dense):
+    n = h.shape[0]
+    diff = pos[senders] - pos[receivers]
+    d2 = jnp.sum(diff * diff, axis=-1, keepdims=True)
+    m = _mlp(lp["phi_e"], jnp.concatenate([h[senders], h[receivers], d2], -1))
+    coef = _mlp(lp["phi_x"], m)
+    # normalized coordinate update keeps equivariance + numerics
+    upd = agg(diff * coef / jnp.sqrt(d2 + 1.0), receivers, n, "mean")
+    pos = pos + upd
+    magg = agg(m, receivers, n, "sum")
+    h = h + _mlp(lp["phi_h"], jnp.concatenate([h, magg], -1))
+    return h, pos
+
+
+def schnet_layer(lp, h, pos, senders, receivers, n_rbf, cutoff,
+                 agg=_agg_dense):
+    n = h.shape[0]
+    dist = jnp.sqrt(jnp.sum((pos[senders] - pos[receivers]) ** 2, -1) + 1e-9)
+    w = _mlp(lp["filter"], rbf_expand(dist, n_rbf, cutoff))
+    x = _mlp(lp["in_dense"], h)
+    m = x[senders] * w
+    out = agg(m, receivers, n, "sum")
+    return h + _mlp(lp["out_dense"], out), pos
+
+
+def graphsage_layer(lp, h, senders, receivers, kind="mean",
+                    agg=_agg_dense):
+    n = h.shape[0]
+    nbr = agg(h[senders], receivers, n, kind)
+    return jax.nn.relu(h @ lp["w_self"] + nbr @ lp["w_nbr"] + lp["b"])
+
+
+def graphcast_layer(lp, h, e, senders, receivers, agg=_agg_dense):
+    n = h.shape[0]
+    e = e + _mlp(lp["edge_mlp"],
+                 jnp.concatenate([e, h[senders], h[receivers]], -1))
+    out = agg(e, receivers, n, "sum")
+    h = h + _mlp(lp["node_mlp"], jnp.concatenate([h, out], -1))
+    return h, e
+
+
+# ---------------------------------------------------------------------------
+# Full-graph forward
+# ---------------------------------------------------------------------------
+def forward(params: dict, batch: dict, cfg: GNNConfig) -> jnp.ndarray:
+    """Node logits [N, n_classes] for a (full or sampled-flat) graph."""
+    x = batch["x"].astype(cfg.dtype)
+    senders = batch["senders"]
+    receivers = batch["receivers"]
+    h = _mlp(params["encoder"], x)
+    agg = make_agg(cfg)
+
+    def wrap(body):
+        if cfg.remat:
+            return jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        return body
+
+    if cfg.arch == "egnn":
+        pos = batch["pos"].astype(cfg.dtype)
+
+        @wrap
+        def body(carry, lp):
+            h, pos = carry
+            return egnn_layer(_unflatten2(lp), h, pos, senders, receivers, agg), None
+
+        (h, pos), _ = jax.lax.scan(body, (h, pos), params["layers"],
+                                   unroll=_unroll(cfg))
+    elif cfg.arch == "schnet":
+        pos = batch["pos"].astype(cfg.dtype)
+
+        @wrap
+        def body(carry, lp):
+            h, pos = carry
+            return schnet_layer(_unflatten2(lp), h, pos, senders, receivers,
+                                cfg.n_rbf, cfg.cutoff, agg), None
+
+        (h, pos), _ = jax.lax.scan(body, (h, pos), params["layers"],
+                                   unroll=_unroll(cfg))
+    elif cfg.arch == "graphsage":
+        @wrap
+        def body(carry, lp):
+            return graphsage_layer(lp, carry, senders, receivers,
+                                   cfg.aggregator, agg), None
+
+        h, _ = jax.lax.scan(body, h, params["layers"], unroll=_unroll(cfg))
+    else:  # graphcast
+        if "edge_feat" in batch:
+            ef = batch["edge_feat"].astype(cfg.dtype)
+        else:
+            ef = jnp.zeros((senders.shape[0], cfg.d_edge), cfg.dtype)
+        e = _mlp(params["edge_encoder"], ef)
+
+        @wrap
+        def body(carry, lp):
+            h, e = carry
+            return graphcast_layer(_unflatten2(lp), h, e, senders,
+                                   receivers, agg), None
+
+        (h, e), _ = jax.lax.scan(body, (h, e), params["layers"],
+                                 unroll=_unroll(cfg))
+
+    return _mlp(params["decoder"], h)
+
+
+def forward_minibatch(params: dict, batch: dict, cfg: GNNConfig) -> jnp.ndarray:
+    """Fan-out minibatch forward (GraphSAGE-style; regular blocks).
+
+    batch: seed_x [B, F]; layer_x: list of [B, W_h, F] with W_h =
+    prod(fanouts[:h+1]); mask: list of [B, W_h] validity.  Aggregation
+    bottom-up: hop H-1 aggregates hop H by reshape-mean over the fan-out —
+    no ragged ops, MXU-friendly.
+    """
+    hops = [batch["seed_x"]] + list(batch["layer_x"])
+    masks = [None] + list(batch.get("layer_mask", [None] * (len(hops) - 1)))
+    hs = [_mlp(params["encoder"], h.astype(cfg.dtype)) for h in hops]
+    layers = params["layers"]
+    L = len(hops) - 1
+    for li in range(L):
+        lp = {k: v[li] for k, v in layers.items()}
+        new_hs = []
+        for depth in range(len(hs) - 1):
+            cur, child = hs[depth], hs[depth + 1]
+            B = cur.shape[0]
+            W_cur = 1 if cur.ndim == 2 else cur.shape[1]
+            child3 = child.reshape(B, W_cur, -1, child.shape[-1])
+            m = masks[depth + 1]
+            if m is not None:
+                m3 = m.reshape(B, W_cur, -1, 1).astype(cfg.dtype)
+                nbr = (child3 * m3).sum(2) / jnp.maximum(m3.sum(2), 1.0)
+            else:
+                nbr = child3.mean(2)
+            if cur.ndim == 2:
+                nbr = nbr[:, 0]
+            h_new = jax.nn.relu(
+                cur @ lp["w_self"] + nbr @ lp["w_nbr"] + lp["b"])
+            new_hs.append(h_new)
+        hs = new_hs
+    return _mlp(params["decoder"], hs[0])
+
+
+def loss_fn(params, batch, cfg: GNNConfig) -> jnp.ndarray:
+    if "seed_x" in batch:
+        logits = forward_minibatch(params, batch, cfg)
+        labels = batch["labels"]
+    elif batch["x"].ndim == 3:  # batched small graphs (molecule)
+        logits = jax.vmap(lambda b: forward(params, b, cfg))(
+            {k: batch[k] for k in batch if k != "labels"})
+        logits = logits.mean(axis=1)  # graph-level readout
+        labels = batch["labels"]
+    else:
+        logits = forward(params, batch, cfg)
+        labels = batch["labels"]
+    if labels.dtype in (jnp.float32, jnp.bfloat16, jnp.float16):
+        # regression (molecule targets)
+        return jnp.mean((logits[..., 0] - labels) ** 2)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None],
+                               -1)[..., 0]
+    mask = labels >= 0
+    return jnp.sum((logz - gold) * mask) / jnp.maximum(mask.sum(), 1)

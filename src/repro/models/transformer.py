@@ -1,0 +1,952 @@
+"""Pure-JAX transformer LM family covering all five assigned LM archs.
+
+One config class expresses dense (qwen2-7b, h2o-danube-3-4b, chatglm3-6b)
+and MoE (qwen3-moe-235b-a22b, deepseek-v2-236b) decoders:
+
+  * GQA attention with RoPE (full or partial rotary — chatglm 2d RoPE),
+    optional QKV bias (qwen2), optional sliding window (danube);
+  * MLA (deepseek-v2): low-rank compressed KV (kv_lora) with decoupled
+    RoPE dims; attention uses the *absorbed* formulation so the KV cache
+    stores only the 512-dim compressed stream + 64-dim rope keys;
+  * MoE: token-choice top-k routing with per-expert capacity via a
+    sort-based static-shape dispatch (TPU-friendly: no ragged shapes),
+    optional shared experts; deepseek's leading dense layers are a
+    separate scan stack so no dead compute is lowered;
+  * scan-over-layers with stacked params (small HLO, O(1) compile in L)
+    and selectable rematerialization;
+  * blockwise (memory-efficient) attention for long sequences so 32k
+    prefill lowers with bounded live memory;
+  * KV-cache prefill + single-token decode (ring buffer for SWA).
+
+Everything is functional: params are pytrees of jnp arrays; abstract
+initialization (ShapeDtypeStruct) mirrors real init exactly, which is what
+the multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str = "lm"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    d_ff: int = 1024                 # dense-MLP hidden
+    vocab: int = 1024
+    head_dim: int | None = None      # default d_model // n_heads
+    max_seq: int = 2048
+    # --- MoE ---
+    n_experts: int = 0               # 0 = dense
+    top_k: int = 0
+    moe_d_ff: int = 0                # routed-expert hidden
+    n_shared_experts: int = 0
+    shared_d_ff: int = 0
+    n_dense_layers: int = 0          # leading dense layers (deepseek)
+    capacity_factor: float = 1.25
+    moe_chunk: int = 32768           # tokens per dispatch round (bounds the
+                                     # [E, C, d] buffer: C ~ chunk*K/E*cf)
+    # --- MLA (deepseek) ---
+    mla_kv_lora: int = 0             # 0 = standard GQA
+    mla_q_lora: int = 0
+    mla_rope_dim: int = 64
+    mla_nope_dim: int = 128
+    mla_v_dim: int = 128
+    # --- attention variants ---
+    sliding_window: int = 0          # 0 = full attention
+    qkv_bias: bool = False
+    rotary_pct: float = 1.0          # chatglm: 0.5 (2d RoPE)
+    rope_theta: float = 1e4
+    # --- numerics / execution ---
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    scan_unroll: int = 1             # layers per scan iteration (cost-
+                                     # analysis correction uses 2; see
+                                     # repro.analysis.corrected)
+    remat_block: int = 1             # layers per checkpoint block: the
+                                     # train scan saves one [B,S,d] carry
+                                     # per BLOCK (L/K saves instead of L)
+    # activation sharding constraints (maxtext-style).  Empty act_dp
+    # disables constraints (single-device smoke tests).  Set by the
+    # family's shardings()/step_fn() per mesh; requires jax.set_mesh.
+    act_dp: tuple = ()               # data axes for batch/token dims
+    act_tp: str = "model"            # tensor axis for heads/hidden/experts
+    act_seq: bool = False            # seq-shard the saved layer carries
+                                     # over act_tp (16x smaller checkpoint
+                                     # stacks; +1 gather per layer)
+    tp_size: int = 16                # size of act_tp (divisibility checks)
+    attn_block_q: int = 1024         # blockwise attention chunk
+    blockwise_from: int = 8192       # use blockwise attention above this S
+    loss_chunk: int = 0              # tokens per CE-loss chunk (0 = off):
+                                     # bounds live logits to chunk x vocab
+    use_flash_prefill: bool = False  # Pallas flash kernel for full-seq
+                                     # attention (TPU path; interpret on
+                                     # CPU — tests only)
+    norm_eps: float = 1e-6
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def is_mla(self) -> bool:
+        return self.mla_kv_lora > 0
+
+    @property
+    def n_moe_layers(self) -> int:
+        return self.n_layers - self.n_dense_layers if self.is_moe else 0
+
+    def validate(self) -> None:
+        assert self.n_heads % self.n_kv_heads == 0
+        if self.is_moe:
+            assert 0 < self.top_k <= self.n_experts
+            assert 0 <= self.n_dense_layers < self.n_layers
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction.  `shapes()` is the single source of truth; both
+# abstract (dry-run) and concrete (smoke-test) init derive from it.
+# ---------------------------------------------------------------------------
+def _attn_shapes(cfg: TransformerConfig) -> dict[str, tuple[tuple[int, ...], Any]]:
+    d, hd, H, KV = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    t = cfg.dtype
+    sh: dict[str, tuple[tuple[int, ...], Any]] = {
+        "ln_attn": ((d,), t),
+        "ln_mlp": ((d,), t),
+        "wo": ((H * (cfg.mla_v_dim if cfg.is_mla else hd), d), t),
+    }
+    if cfg.is_mla:
+        qd = cfg.mla_nope_dim + cfg.mla_rope_dim
+        if cfg.mla_q_lora:
+            sh["w_dq"] = ((d, cfg.mla_q_lora), t)
+            sh["w_uq"] = ((cfg.mla_q_lora, H * qd), t)
+        else:
+            sh["wq"] = ((d, H * qd), t)
+        sh["w_dkv"] = ((d, cfg.mla_kv_lora + cfg.mla_rope_dim), t)
+        sh["w_uk"] = ((cfg.mla_kv_lora, H * cfg.mla_nope_dim), t)
+        sh["w_uv"] = ((cfg.mla_kv_lora, H * cfg.mla_v_dim), t)
+    else:
+        sh["wq"] = ((d, H * hd), t)
+        sh["wk"] = ((d, KV * hd), t)
+        sh["wv"] = ((d, KV * hd), t)
+        if cfg.qkv_bias:
+            sh["bq"] = ((H * hd,), t)
+            sh["bk"] = ((KV * hd,), t)
+            sh["bv"] = ((KV * hd,), t)
+    return sh
+
+
+def _layer_shapes(cfg: TransformerConfig, kind: str) -> dict:
+    """kind: 'dense' (SwiGLU MLP) or 'moe' (routed experts [+ shared])."""
+    d, t = cfg.d_model, cfg.dtype
+    sh = _attn_shapes(cfg)
+    if kind == "dense":
+        sh["w1"] = ((d, cfg.d_ff), t)
+        sh["w3"] = ((d, cfg.d_ff), t)
+        sh["w2"] = ((cfg.d_ff, d), t)
+    else:
+        sh["router"] = ((d, cfg.n_experts), jnp.float32)
+        sh["we1"] = ((cfg.n_experts, d, cfg.moe_d_ff), t)
+        sh["we3"] = ((cfg.n_experts, d, cfg.moe_d_ff), t)
+        sh["we2"] = ((cfg.n_experts, cfg.moe_d_ff, d), t)
+        if cfg.n_shared_experts:
+            sff = cfg.shared_d_ff or cfg.n_shared_experts * cfg.moe_d_ff
+            sh["ws1"] = ((d, sff), t)
+            sh["ws3"] = ((d, sff), t)
+            sh["ws2"] = ((sff, d), t)
+    return sh
+
+
+def _stack(sh: dict, n: int) -> dict:
+    return {k: ((n, *shape), dt) for k, (shape, dt) in sh.items()}
+
+
+def shapes(cfg: TransformerConfig) -> dict:
+    """Full parameter shape tree: scan stacks + embeddings."""
+    out = {
+        "embed": ((cfg.vocab, cfg.d_model), cfg.dtype),
+        "ln_f": ((cfg.d_model,), cfg.dtype),
+        "lm_head": ((cfg.d_model, cfg.vocab), cfg.dtype),
+    }
+    if cfg.is_moe:
+        if cfg.n_dense_layers:
+            out["dense_layers"] = _stack(
+                _layer_shapes(cfg, "dense"), cfg.n_dense_layers)
+        out["layers"] = _stack(_layer_shapes(cfg, "moe"), cfg.n_moe_layers)
+    else:
+        out["layers"] = _stack(_layer_shapes(cfg, "dense"), cfg.n_layers)
+    return out
+
+
+def _is_shape_leaf(x) -> bool:
+    return isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple)
+
+
+def init_abstract(cfg: TransformerConfig) -> dict:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s[0], s[1]), shapes(cfg),
+        is_leaf=_is_shape_leaf)
+
+
+def init(cfg: TransformerConfig, rng: jax.Array) -> dict:
+    """Concrete init (reduced configs / smoke tests only)."""
+    tree = shapes(cfg)
+    flat, treedef = jax.tree.flatten_with_path(tree, is_leaf=_is_shape_leaf)
+    keys = jax.random.split(rng, len(flat))
+    out = []
+    for (path, (shape, dt)), k in zip(flat, keys):
+        name = path[-1].key
+        if name.startswith("ln_"):
+            out.append(jnp.ones(shape, dt))
+        elif name.startswith("b"):
+            out.append(jnp.zeros(shape, dt))
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = 1.0 / np.sqrt(max(fan_in, 1))
+            out.append((jax.random.normal(k, shape, jnp.float32) * std).astype(dt))
+    return jax.tree.unflatten(jax.tree.structure(tree, is_leaf=_is_shape_leaf), out)
+
+
+def param_specs(cfg: TransformerConfig, dp: tuple[str, ...] = ("data",),
+                tp: str = "model", tp_size: int = 16,
+                dp_size: int = 16, fsdp: bool = True) -> dict:
+    """PartitionSpecs mirroring the shapes tree.
+
+    Megatron-style TP on the head/hidden output dims + (default) FSDP-style
+    sharding of the *other* big dim over the data axes — required for the
+    MoE archs, whose 230-450 GB of parameters plus f32 optimizer moments
+    cannot live 16-way-sharded on 16 GB chips.  GSPMD inserts the layer
+    all-gathers (fwd) and reduce-scatters (grads) this implies.
+    """
+    d_ok = fsdp and cfg.d_model % dp_size == 0
+    fs = dp if d_ok else None          # the FSDP shard of dim d_model
+
+    def attn_specs() -> dict:
+        s: dict[str, P] = {
+            "ln_attn": P(None, None),
+            "ln_mlp": P(None, None),
+            "wo": P(None, tp, fs),
+        }
+        if cfg.is_mla:
+            if cfg.mla_q_lora:
+                s["w_dq"] = P(None, fs,
+                              tp if cfg.mla_q_lora % tp_size == 0 else None)
+                s["w_uq"] = P(None, fs if cfg.mla_q_lora % dp_size == 0
+                              else None, tp)
+            else:
+                s["wq"] = P(None, fs, tp)
+            kvl = cfg.mla_kv_lora + cfg.mla_rope_dim
+            s["w_dkv"] = P(None, fs, tp if kvl % tp_size == 0 else None)
+            lora_fs = fs if cfg.mla_kv_lora % dp_size == 0 else None
+            s["w_uk"] = P(None, lora_fs, tp)
+            s["w_uv"] = P(None, lora_fs, tp)
+        else:
+            # head-aligned TP only: sharding a projection whose head count
+            # does not divide the axis splits head_dim (a contracting dim
+            # under RoPE/attention) and GSPMD degrades to replication —
+            # measured 5x temp blowup; see EXPERIMENTS.md §Perf.
+            q_ok = cfg.n_heads % tp_size == 0
+            kv_ok = cfg.n_kv_heads % tp_size == 0
+            s["wq"] = P(None, fs, tp if q_ok else None)
+            kv = P(None, fs, tp if kv_ok else None)
+            s["wk"] = kv
+            s["wv"] = kv
+            s["wo"] = P(None, tp if q_ok else None, fs)
+            if cfg.qkv_bias:
+                s["bq"] = P(None, tp if q_ok else None)
+                s["bk"] = P(None, tp) if kv_ok else P(None, None)
+                s["bv"] = P(None, tp) if kv_ok else P(None, None)
+        return s
+
+    ff_fs = fs if cfg.d_ff % max(dp_size, 1) == 0 else None
+    dense = {**attn_specs(), "w1": P(None, fs, tp), "w3": P(None, fs, tp),
+             "w2": P(None, tp, fs)}
+    out = {
+        "embed": P(tp, fs),
+        "ln_f": P(None),
+        "lm_head": P(fs, tp),
+    }
+    if cfg.is_moe:
+        moe = {**attn_specs(), "router": P(None, None, None),
+               "we1": P(None, tp, fs, None), "we3": P(None, tp, fs, None),
+               "we2": P(None, tp, None, fs)}
+        if cfg.n_shared_experts:
+            moe["ws1"] = P(None, fs, tp)
+            moe["ws3"] = P(None, fs, tp)
+            moe["ws2"] = P(None, tp, fs)
+        if cfg.n_dense_layers:
+            out["dense_layers"] = dense
+        out["layers"] = moe
+    else:
+        out["layers"] = dense
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+def _wsc(x: jnp.ndarray, cfg, *spec) -> jnp.ndarray:
+    """Activation sharding constraint (no-op when act_dp is unset).
+
+    GSPMD propagation alone loses the batch sharding at the embedding
+    gather (the table is sharded over (tp, dp); the gather output adopts
+    the table's d-sharding and drops batch) — measured 100x temp blowup at
+    train_4k.  Explicit constraints at layer boundaries pin the intended
+    activation layout; see EXPERIMENTS.md §Perf iteration 0.
+    """
+    if not cfg.act_dp:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+         rotary_dim: int | None = None) -> jnp.ndarray:
+    """Rotary embedding on the last dim; partial rotary for chatglm 2d.
+
+    x: [..., S, n, hd]; positions broadcastable to [..., S].
+    """
+    hd = x.shape[-1]
+    rd = rotary_dim or hd
+    rot, rest = x[..., :rd], x[..., rd:]
+    half = rd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None, None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = rot[..., :half], rot[..., half:]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([r1, r2], axis=-1).astype(x.dtype)
+    return jnp.concatenate([out, rest], axis=-1) if rd < hd else out
+
+
+def _attn_mask(q_pos, k_pos, window: int) -> jnp.ndarray:
+    m = k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        m &= (q_pos[:, None] - k_pos[None, :]) < window
+    return m
+
+
+def attention(q, k, v, q_pos, k_pos, window: int = 0,
+              block_q: int = 1024, blockwise_from: int = 8192) -> jnp.ndarray:
+    """GQA attention.  q: [B,S,H,hd], k/v: [B,T,KV,hd].  Output [B,S,H,hd].
+
+    lax.map over query blocks when S is large, so the [S,T] score matrix
+    never fully materializes (memory-efficient attention; the Pallas
+    flash-decode kernel is the TPU-optimized sibling for serving).
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, S, KV, G, hd)
+
+    def blk(qb, qpb):
+        s = jnp.einsum("bqkgh,btkh->bkgqt", qb, k,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _attn_mask(qpb, k_pos, window)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        return jnp.einsum("bkgqt,btkh->bqkgh", p, v,
+                          preferred_element_type=jnp.float32)
+
+    if S <= blockwise_from or S % block_q != 0:
+        out = blk(qg, q_pos)
+    else:
+        nb = S // block_q
+        qb = qg.reshape(B, nb, block_q, KV, G, hd).swapaxes(0, 1)
+        pb = q_pos.reshape(nb, block_q)
+        out = jax.lax.map(lambda args: blk(*args), (qb, pb))
+        out = out.swapaxes(0, 1).reshape(B, S, KV, G, hd)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def swiglu(x, w1, w3, w2):
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+# ---------------------------------------------------------------------------
+# MoE: token-choice top-k with static-shape sort-based dispatch.
+# ---------------------------------------------------------------------------
+def moe_ffn(x: jnp.ndarray, lp: dict, cfg: TransformerConfig,
+            bs: tuple[int, int] | None = None) -> jnp.ndarray:
+    """x: [T, d] -> [T, d].  Chunked dispatch: capacity is derived from the
+    chunk size, so the routed buffer is O(chunk * K * d) no matter how many
+    tokens the global batch has (microbatched MoE, standard at scale).
+
+    Chunking slices the SEQUENCE dim (bs = (B, S)): the lax.map loop axis
+    must be unsharded, and chunking the flat token dim put the dp-sharded
+    batch on the loop axis — GSPMD all-gathered all tokens in f32 (112 GiB
+    at qwen3 train_4k; EXPERIMENTS.md §Perf iter 3).  Slicing S keeps the
+    batch sharding inside every chunk.
+    """
+    T, d = x.shape
+    chunk = cfg.moe_chunk
+    if not chunk or T <= chunk or bs is None:
+        return _moe_ffn_chunk(x, lp, cfg)
+    B, S = bs
+    s_ck = max(chunk // B, 1)
+    if S % s_ck != 0:
+        return _moe_ffn_chunk(x, lp, cfg)
+    n = S // s_ck
+    xs = x.reshape(B, n, s_ck, d).swapaxes(0, 1)       # [n, B, s_ck, d]
+
+    # checkpoint the chunk body: without it the map's backward stacks
+    # every chunk's [E, C, d] dispatch buffers as residuals
+    # (n_chunks x buffers; EXPERIMENTS.md §Perf qwen3-moe iter 1)
+    def body(xc):
+        flat = xc.reshape(B * s_ck, d)
+        return _moe_ffn_chunk(flat, lp, cfg).reshape(B, s_ck, d)
+
+    body = jax.checkpoint(
+        body, policy=jax.checkpoint_policies.nothing_saveable)
+    ys = jax.lax.map(body, xs)                          # [n, B, s_ck, d]
+    return ys.swapaxes(0, 1).reshape(T, d)
+
+
+def _moe_ffn_chunk(x: jnp.ndarray, lp: dict, cfg: TransformerConfig) -> jnp.ndarray:
+    """x: [T, d] -> [T, d].  Static shapes; overflow past capacity drops."""
+    T, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = max(int(T * K / E * cfg.capacity_factor), 1)
+    if T <= 256:
+        # decode / tiny batches: capacity covers the worst case (every
+        # token on one expert) so serving never drops tokens
+        C = max(C, T)
+    logits = x.astype(jnp.float32) @ lp["router"]
+    gates = jax.nn.softmax(logits, axis=-1)                       # [T, E]
+    top_g, top_e = jax.lax.top_k(gates, K)                        # [T, K]
+    top_g = top_g / jnp.clip(top_g.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_e.reshape(-1)                                    # [T*K]
+    flat_g = top_g.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), K)
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    t_sorted = flat_t[order]
+    g_sorted = flat_g[order]
+    counts = jnp.bincount(flat_e, length=E)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(T * K) - starts[e_sorted]
+    keep = pos_in_e < C
+
+    buf = jnp.zeros((E, C, d), x.dtype)
+    buf = buf.at[
+        jnp.where(keep, e_sorted, 0), jnp.where(keep, pos_in_e, 0)
+    ].add(jnp.where(keep[:, None], x[t_sorted], 0).astype(x.dtype))
+    # expert-parallel dispatch: the routed buffer lives expert-sharded on
+    # the tp axis (GSPMD inserts the token all-to-all)
+    buf = _wsc(buf, cfg, cfg.act_tp, None, None)
+
+    h = jnp.einsum("ecd,edf->ecf", buf, lp["we1"])
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, lp["we3"])
+    y_e = jnp.einsum("ecf,efd->ecd", h, lp["we2"])                # [E, C, d]
+    y_e = _wsc(y_e, cfg, cfg.act_tp, None, None)
+
+    contrib = y_e[jnp.where(keep, e_sorted, 0), jnp.where(keep, pos_in_e, 0)]
+    contrib = contrib * (g_sorted * keep).astype(contrib.dtype)[:, None]
+    y = jnp.zeros((T, d), contrib.dtype).at[t_sorted].add(contrib)
+
+    if cfg.n_shared_experts:
+        y = y + swiglu(x, lp["ws1"], lp["ws3"], lp["ws2"])
+    return y.astype(x.dtype)
+
+
+def _ffn(x2d: jnp.ndarray, lp: dict, cfg: TransformerConfig,
+         bs: tuple[int, int] | None = None) -> jnp.ndarray:
+    if "we1" in lp:
+        return moe_ffn(x2d, lp, cfg, bs)
+    return swiglu(x2d, lp["w1"], lp["w3"], lp["w2"])
+
+
+# ---------------------------------------------------------------------------
+# Layer body (shared by train forward and prefill)
+# ---------------------------------------------------------------------------
+def _qkv_gqa(x, lp, cfg, positions, tp_size: int = 16):
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ lp["wq"]
+    k = x @ lp["wk"]
+    v = x @ lp["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    dp, tp = cfg.act_dp, cfg.act_tp
+    # head-parallel q when heads divide the axis; otherwise
+    # sequence-parallel q (context parallelism) so attention compute is
+    # still sharded over tp for archs like qwen2 (28 heads).
+    if H % tp_size == 0:
+        q = _wsc(q, cfg, dp, None, tp, None)
+    elif S % tp_size == 0:
+        q = _wsc(q, cfg, dp, tp, None, None)
+    kv_spec = (dp, None, tp, None) if KV % tp_size == 0 else (
+        dp, None, None, None)
+    k = _wsc(k, cfg, *kv_spec)
+    v = _wsc(v, cfg, *kv_spec)
+    rd = int(cfg.rotary_pct * hd)
+    q = rope(q, positions, cfg.rope_theta, rd)
+    k = rope(k, positions, cfg.rope_theta, rd)
+    return q, k, v
+
+
+def _qkv_mla(x, lp, cfg, positions):
+    """MLA projections -> (q_nope, q_rope, c_kv, k_rope); the latter two
+    form the cacheable compressed stream."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    nd, rd = cfg.mla_nope_dim, cfg.mla_rope_dim
+    if cfg.mla_q_lora:
+        q = (x @ lp["w_dq"]) @ lp["w_uq"]
+    else:
+        q = x @ lp["wq"]
+    q = q.reshape(B, S, H, nd + rd)
+    q = _wsc(q, cfg, cfg.act_dp, None, cfg.act_tp, None)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    ckv = x @ lp["w_dkv"]
+    ckv = _wsc(ckv, cfg, cfg.act_dp, None, None)
+    c_kv, k_rope = ckv[..., : cfg.mla_kv_lora], ckv[..., cfg.mla_kv_lora:]
+    k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_attention(q_nope, q_rope, c_kv, k_rope, lp, cfg, q_pos, k_pos,
+                   k_valid=None, block_q=1024, blockwise_from=8192):
+    """Absorbed MLA attention over the compressed stream.
+
+      score = (q_nope @ W_uk^T) . c_kv + q_rope . k_rope
+      out_h = softmax(score) . c_kv @ W_uv_h
+
+    so the KV cache is [B,T,kv_lora] + [B,T,rope] only.
+    """
+    B, S, H, nd = q_nope.shape
+    Lr = cfg.mla_kv_lora
+    w_uk = lp["w_uk"].reshape(Lr, H, nd)
+    q_abs = jnp.einsum("bshn,lhn->bshl", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scale = 1.0 / np.sqrt(nd + cfg.mla_rope_dim)
+
+    def blk(qa, qr, qpb):
+        s = jnp.einsum("bshl,btl->bhst", qa.astype(c_kv.dtype), c_kv,
+                       preferred_element_type=jnp.float32)
+        s = s + jnp.einsum("bshr,btr->bhst", qr, k_rope,
+                           preferred_element_type=jnp.float32)
+        s = s * scale
+        mask = _attn_mask(qpb, k_pos, cfg.sliding_window)
+        if k_valid is not None:
+            mask = mask & k_valid[None, :]
+        s = jnp.where(mask[None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1).astype(c_kv.dtype)
+        return jnp.einsum("bhst,btl->bshl", p, c_kv,
+                          preferred_element_type=jnp.float32)
+
+    if S <= blockwise_from or S % block_q != 0:
+        ctx = blk(q_abs, q_rope, q_pos)
+    else:
+        nb = S // block_q
+        qa = q_abs.reshape(B, nb, block_q, H, Lr).swapaxes(0, 1)
+        qr = q_rope.reshape(B, nb, block_q, H, cfg.mla_rope_dim).swapaxes(0, 1)
+        pb = q_pos.reshape(nb, block_q)
+        ctx = jax.lax.map(lambda a: blk(*a), (qa, qr, pb))
+        ctx = ctx.swapaxes(0, 1).reshape(B, S, H, Lr)
+    w_uv = lp["w_uv"].reshape(Lr, H, cfg.mla_v_dim)
+    out = jnp.einsum("bshl,lhv->bshv", ctx, w_uv.astype(jnp.float32))
+    return out.astype(cfg.dtype)
+
+
+def layer_fwd(x, lp, cfg: TransformerConfig, positions):
+    """One decoder layer, full-sequence (training / prefill forward)."""
+    B, S, d = x.shape
+    # gather the (possibly seq-sharded) carry for this layer's compute
+    x = _wsc(x, cfg, cfg.act_dp, None, None)
+    h = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+    if cfg.is_mla:
+        qn, qr, ckv, kr = _qkv_mla(h, lp, cfg, positions)
+        attn = _mla_attention(qn, qr, ckv, kr, lp, cfg, positions, positions,
+                              None, cfg.attn_block_q, cfg.blockwise_from)
+    else:
+        q, k, v = _qkv_gqa(h, lp, cfg, positions)
+        if cfg.use_flash_prefill and S % 128 == 0:
+            from repro.kernels import ops as _kops
+
+            KV = cfg.n_kv_heads
+            qg = q.reshape(B, S, KV, cfg.n_heads // KV, cfg.hd)
+            attn = _kops.flash_prefill(qg, k, v,
+                                       window=cfg.sliding_window)
+        else:
+            attn = attention(q, k, v, positions, positions,
+                             cfg.sliding_window, cfg.attn_block_q,
+                             cfg.blockwise_from)
+    x = x + attn.reshape(B, S, -1) @ lp["wo"]
+    x = _wsc(x, cfg, cfg.act_dp, None, None)
+    h = rms_norm(x, lp["ln_mlp"], cfg.norm_eps)
+    y = _ffn(h.reshape(B * S, d), lp, cfg, (B, S)).reshape(B, S, d)
+    out = x + y
+    if cfg.act_seq and S % cfg.tp_size == 0:
+        # the scan saves this carry: keep it sequence-sharded over tp so
+        # the checkpoint stack is 1/tp_size the size (Megatron-SP-style)
+        return _wsc(out, cfg, cfg.act_dp, cfg.act_tp, None)
+    return _wsc(out, cfg, cfg.act_dp, None, None)
+
+
+def _layer_body_specs(cfg, stack_key: str) -> dict:
+    """Per-layer weight specs with the FSDP (dp) dim dropped: constraining
+    the scan-body slice to these forces the FSDP all-gather INSIDE the
+    loop (per layer) instead of the loop-invariant full-stack gather XLA
+    hoists otherwise (measured: 28-layer hoisted gather = 13 GiB/chip at
+    qwen2 train_4k; per-layer = 0.5 GiB; EXPERIMENTS.md §Perf)."""
+    sp = param_specs(cfg, dp=(), tp=cfg.act_tp, tp_size=cfg.tp_size,
+                     dp_size=1, fsdp=False)[stack_key]
+    return {k: P(*v[1:]) for k, v in sp.items()}
+
+
+def _gather_layer(lp: dict, cfg, stack_key: str) -> dict:
+    if not cfg.act_dp:
+        return lp
+    specs = _layer_body_specs(cfg, stack_key)
+    return {k: jax.lax.with_sharding_constraint(v, specs[k])
+            for k, v in lp.items()}
+
+
+def _scan_stack(x, stack, cfg, positions, stack_key: str = "layers"):
+    n = jax.tree.leaves(stack)[0].shape[0]
+    # block remat: one checkpointed scan step covers `bk` layers, so the
+    # scan saves n/bk carries instead of n (the dominant train-memory term
+    # at 4k x 256; see EXPERIMENTS.md §Perf).
+    bk = max(k for k in range(1, min(cfg.remat_block, n) + 1) if n % k == 0)
+
+    # hierarchical remat: the outer checkpoint makes the scan save one
+    # carry per BLOCK; the inner per-layer checkpoint keeps the block's
+    # backward working set at one layer's transients (without it the
+    # block recompute holds bk layers' intermediates live at once).
+    inner = layer_fwd
+    if cfg.remat and bk > 1:
+        inner = jax.checkpoint(
+            layer_fwd, policy=jax.checkpoint_policies.nothing_saveable,
+            static_argnums=(2,))
+
+    def block_fwd(carry, lps, cfg, positions):
+        for i in range(bk):
+            lp = jax.tree.map(lambda a: a[i], lps)
+            lp = _gather_layer(lp, cfg, stack_key)
+            carry = inner(carry, lp, cfg, positions)
+        return carry
+
+    body = block_fwd
+    if cfg.remat:
+        body = jax.checkpoint(
+            block_fwd, policy=jax.checkpoint_policies.nothing_saveable,
+            static_argnums=(2,))
+
+    def scan_body(carry, lps):
+        return body(carry, lps, cfg, positions), None
+
+    blocked = jax.tree.map(
+        lambda a: a.reshape(n // bk, bk, *a.shape[1:]), stack)
+    x, _ = jax.lax.scan(scan_body, x, blocked,
+                        unroll=max(1, min(cfg.scan_unroll, n // bk)))
+    return x
+
+
+def forward(params: dict, tokens: jnp.ndarray, cfg: TransformerConfig,
+            positions: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Logits [B, S, vocab] with scan-over-layers (+ optional remat)."""
+    x = hidden_states(params, tokens, cfg, positions)
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    return _wsc(logits, cfg, cfg.act_dp, None, cfg.act_tp)
+
+
+def _ce_terms(logits, labels):
+    """(sum nll, count) for one block of [N, V] logits.
+
+    Gold logit via a masked reduction over the vocab axis: with a
+    vocab-sharded lm_head this is a local select + tiny all-reduce,
+    whereas take_along_axis(labels) gathers the FULL logits (measured
+    37 GiB/chip at train_4k; see EXPERIMENTS.md §Perf)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    sel = vocab_iota == jnp.maximum(labels, 0)[..., None]
+    gold = jnp.sum(jnp.where(sel, logits, 0.0), axis=-1)
+    mask = labels >= 0
+    return jnp.sum((logz - gold) * mask), mask.sum()
+
+
+def loss_fn(params, tokens, labels, cfg) -> jnp.ndarray:
+    x = hidden_states(params, tokens, cfg)
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    lt = labels.reshape(T)
+    ck = cfg.loss_chunk
+    if ck and T > ck and T % ck == 0:
+        # chunked CE head: the backward recomputes each chunk's logits, so
+        # live logits are [chunk, V] instead of [T, V] (the CE backward
+        # held ~13 full-logit buffers live; EXPERIMENTS.md §Perf).
+        # Gather the FSDP-sharded lm_head ONCE outside the chunk map —
+        # inside the checkpointed body it would re-gather per chunk
+        # (64 x 74 MB x fwd/bwd at qwen3 train_4k; §Perf iter 2).
+        lm_head = _wsc(params["lm_head"], cfg, None, cfg.act_tp)
+
+        def chunk_loss(args):
+            xc, lc = args
+            logits = (xc @ lm_head).astype(jnp.float32)
+            logits = _wsc(logits, cfg, cfg.act_dp, cfg.act_tp)
+            return _ce_terms(logits, lc)
+
+        chunk_loss = jax.checkpoint(
+            chunk_loss, policy=jax.checkpoint_policies.nothing_saveable)
+        xs = (xt.reshape(T // ck, ck, d), lt.reshape(T // ck, ck))
+        nll, cnt = jax.lax.map(chunk_loss, xs)
+        return nll.sum() / jnp.maximum(cnt.sum(), 1)
+    logits = (xt @ params["lm_head"]).astype(jnp.float32)
+    logits = _wsc(logits, cfg, cfg.act_dp, cfg.act_tp)
+    nll, cnt = _ce_terms(logits, lt)
+    return nll / jnp.maximum(cnt, 1)
+
+
+def hidden_states(params, tokens, cfg, positions=None) -> jnp.ndarray:
+    """Final-norm hidden states [B, S, d] (the pre-lm_head forward)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    x = _wsc(x, cfg, cfg.act_dp, None, None)
+    pos = positions if positions is not None else jnp.arange(S)
+    if "dense_layers" in params:
+        x = _scan_stack(x, params["dense_layers"], cfg, pos, "dense_layers")
+    x = _scan_stack(x, params["layers"], cfg, pos, "layers")
+    return rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with KV cache.
+# ---------------------------------------------------------------------------
+def cache_shapes(cfg: TransformerConfig, batch: int, max_len: int) -> dict:
+    L = cfg.n_layers
+    if cfg.is_mla:
+        return {
+            "c_kv": ((L, batch, max_len, cfg.mla_kv_lora), cfg.dtype),
+            "k_rope": ((L, batch, max_len, cfg.mla_rope_dim), cfg.dtype),
+            "index": ((), jnp.int32),
+        }
+    eff = min(cfg.sliding_window, max_len) if cfg.sliding_window else max_len
+    return {
+        "k": ((L, batch, eff, cfg.n_kv_heads, cfg.hd), cfg.dtype),
+        "v": ((L, batch, eff, cfg.n_kv_heads, cfg.hd), cfg.dtype),
+        "index": ((), jnp.int32),
+    }
+
+
+def cache_abstract(cfg, batch, max_len) -> dict:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s[0], s[1]),
+        cache_shapes(cfg, batch, max_len), is_leaf=_is_shape_leaf)
+
+
+def cache_init(cfg, batch, max_len) -> dict:
+    return jax.tree.map(
+        lambda s: jnp.zeros(s[0], s[1]),
+        cache_shapes(cfg, batch, max_len), is_leaf=_is_shape_leaf)
+
+
+def cache_specs(cfg: TransformerConfig, batch: int, dp=("data",), tp="model",
+                dp_size: int = 16) -> dict:
+    """KV cache sharding: batch over dp when divisible; positions over tp
+    (kv-head counts rarely divide the model axis, the position axis does)."""
+    b = dp if batch % max(dp_size, 1) == 0 else None
+    if cfg.is_mla:
+        return {"c_kv": P(None, b, tp, None), "k_rope": P(None, b, tp, None),
+                "index": P()}
+    d5 = P(None, b, tp, None, None)
+    return {"k": d5, "v": d5, "index": P()}
+
+
+def decode_step(params, cache, tokens, cfg: TransformerConfig):
+    """One-token decode: tokens [B] -> (new_cache, logits [B, vocab]).
+
+    Writes the new KV at the ring slot (index % cache_len for SWA) and
+    attends over the cache with position-validity masking.  MoE/dense
+    stacks are scanned just like the training forward.
+    """
+    B = tokens.shape[0]
+    x = params["embed"][tokens][:, None, :].astype(cfg.dtype)  # [B,1,d]
+    idx = cache["index"]
+    win = cfg.sliding_window
+    T = cache["c_kv"].shape[2] if cfg.is_mla else cache["k"].shape[2]
+    slot = idx % T
+    pos_now = jnp.full((B, 1), idx, jnp.int32)
+
+    slots = jnp.arange(T)
+    # global position stored in each ring slot (largest p <= idx, p%T==s)
+    k_pos_global = idx - ((idx - slots) % T)
+    k_valid = (k_pos_global >= 0) & (k_pos_global <= idx)
+    if win > 0:
+        k_valid &= (idx - k_pos_global) < win
+
+    def body(carry, lp, layer_cache):
+        x = carry
+        x = _wsc(x, cfg, cfg.act_dp, None, None)
+        h = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+        if cfg.is_mla:
+            c_prev, r_prev = layer_cache
+            qn, qr, ckv_new, kr_new = _qkv_mla(h, lp, cfg, pos_now)
+            c_l = jax.lax.dynamic_update_index_in_dim(
+                c_prev, ckv_new[:, 0], slot, axis=1)
+            r_l = jax.lax.dynamic_update_index_in_dim(
+                r_prev, kr_new[:, 0], slot, axis=1)
+            c_l = _wsc(c_l, cfg, cfg.act_dp, cfg.act_tp, None)
+            r_l = _wsc(r_l, cfg, cfg.act_dp, cfg.act_tp, None)
+            w_uk = lp["w_uk"].reshape(cfg.mla_kv_lora, cfg.n_heads,
+                                      cfg.mla_nope_dim)
+            q_abs = jnp.einsum("bshn,lhn->bshl", qn.astype(jnp.float32),
+                               w_uk.astype(jnp.float32))
+            s = jnp.einsum("bshl,btl->bhst", q_abs.astype(c_l.dtype), c_l,
+                           preferred_element_type=jnp.float32)
+            s = s + jnp.einsum("bshr,btr->bhst", qr, r_l,
+                               preferred_element_type=jnp.float32)
+            s = s / np.sqrt(cfg.mla_nope_dim + cfg.mla_rope_dim)
+            s = jnp.where(k_valid[None, None, None, :], s, -1e30)
+            p = jax.nn.softmax(s, axis=-1).astype(c_l.dtype)
+            ctx = jnp.einsum("bhst,btl->bshl", p, c_l,
+                             preferred_element_type=jnp.float32)
+            w_uv = lp["w_uv"].reshape(cfg.mla_kv_lora, cfg.n_heads,
+                                      cfg.mla_v_dim)
+            attn = jnp.einsum("bshl,lhv->bshv", ctx,
+                              w_uv.astype(jnp.float32)).astype(cfg.dtype)
+            new_slices = (c_l, r_l)
+        else:
+            k_prev, v_prev = layer_cache
+            q, k_new, v_new = _qkv_gqa(h, lp, cfg, pos_now)
+            k_l = jax.lax.dynamic_update_index_in_dim(
+                k_prev, k_new[:, 0], slot, axis=1)
+            v_l = jax.lax.dynamic_update_index_in_dim(
+                v_prev, v_new[:, 0], slot, axis=1)
+            k_l = _wsc(k_l, cfg, cfg.act_dp, cfg.act_tp, None, None)
+            v_l = _wsc(v_l, cfg, cfg.act_dp, cfg.act_tp, None, None)
+            KV, G = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+            qg = q.reshape(B, 1, KV, G, cfg.hd)
+            s = jnp.einsum("bqkgh,btkh->bkgqt", qg, k_l,
+                           preferred_element_type=jnp.float32) / np.sqrt(cfg.hd)
+            s = jnp.where(k_valid[None, None, None, None, :], s, -1e30)
+            p = jax.nn.softmax(s, axis=-1).astype(v_l.dtype)
+            o = jnp.einsum("bkgqt,btkh->bqkgh", p, v_l,
+                           preferred_element_type=jnp.float32)
+            attn = o.astype(cfg.dtype)
+            new_slices = (k_l, v_l)
+        x = x + attn.reshape(B, 1, -1) @ lp["wo"]
+        h2 = rms_norm(x, lp["ln_mlp"], cfg.norm_eps)
+        y = _ffn(h2.reshape(B, -1), lp, cfg).reshape(B, 1, -1)
+        return x + y, new_slices
+
+    nd = cfg.n_dense_layers if (cfg.is_moe and "dense_layers" in params) else 0
+    if cfg.is_mla:
+        caches = (cache["c_kv"], cache["k_rope"])
+    else:
+        caches = (cache["k"], cache["v"])
+
+    def run_stack(x, stack, cache_slice, stack_key):
+        def scan_body(carry, sl):
+            lp = _gather_layer(sl[0], cfg, stack_key)
+            return body(carry, lp, sl[1])
+        n = jax.tree.leaves(stack)[0].shape[0]
+        return jax.lax.scan(scan_body, x, (stack, cache_slice),
+                            unroll=max(1, min(cfg.scan_unroll, n)))
+
+    if nd:
+        head = tuple(c[:nd] for c in caches)
+        tail = tuple(c[nd:] for c in caches)
+        x, new_head = run_stack(x, params["dense_layers"], head,
+                                "dense_layers")
+        x, new_tail = run_stack(x, params["layers"], tail, "layers")
+        new_cols = tuple(
+            jnp.concatenate([h, t], axis=0) for h, t in zip(new_head, new_tail))
+    else:
+        x, new_cols = run_stack(x, params["layers"], caches, "layers")
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x[:, 0] @ params["lm_head"]).astype(jnp.float32)
+    if cfg.is_mla:
+        new_cache = {"c_kv": new_cols[0], "k_rope": new_cols[1],
+                     "index": idx + 1}
+    else:
+        new_cache = {"k": new_cols[0], "v": new_cols[1], "index": idx + 1}
+    return new_cache, logits
+
+
+def prefill(params, tokens, cfg: TransformerConfig, max_len: int):
+    """Run the prompt, building the KV cache.  tokens [B, S]."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    pos = jnp.arange(S)
+    win = cfg.sliding_window
+    eff = min(win, max_len) if win > 0 else max_len
+    take = min(S, eff)
+    # ring layout: slot of position p is p % eff; a roll by (S % eff)
+    # places the last `take` positions correctly when S >= eff.
+    roll = S % eff if S >= eff else 0
+
+    def stash_ring(full):  # full: [B, S, ...] -> [B, eff, ...]
+        lastk = full[:, S - take:]
+        buf = jnp.zeros((B, eff) + full.shape[2:], full.dtype)
+        buf = buf.at[:, :take].set(lastk)
+        buf = jnp.roll(buf, roll, axis=1) if roll else buf
+        extra = (None,) * (buf.ndim - 2)
+        return _wsc(buf, cfg, cfg.act_dp, cfg.act_tp, *extra)
+
+    def body(carry, lp):
+        x = carry
+        h = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+        if cfg.is_mla:
+            qn, qr, ckv, kr = _qkv_mla(h, lp, cfg, pos)
+            attn = _mla_attention(qn, qr, ckv, kr, lp, cfg, pos, pos,
+                                  None, cfg.attn_block_q, cfg.blockwise_from)
+            stash = (stash_ring(ckv), stash_ring(kr))
+        else:
+            q, k, v = _qkv_gqa(h, lp, cfg, pos)
+            attn = attention(q, k, v, pos, pos, win,
+                             cfg.attn_block_q, cfg.blockwise_from)
+            stash = (stash_ring(k), stash_ring(v))
+        x = x + attn.reshape(B, S, -1) @ lp["wo"]
+        h2 = rms_norm(x, lp["ln_mlp"], cfg.norm_eps)
+        y = _ffn(h2.reshape(B * S, -1), lp, cfg, (B, S)).reshape(B, S, -1)
+        return x + y, stash
+
+    if "dense_layers" in params:
+        x, stash_d = jax.lax.scan(
+            lambda c, lp: body(c, _gather_layer(lp, cfg, "dense_layers")),
+            x, params["dense_layers"])
+        x, stash_m = jax.lax.scan(
+            lambda c, lp: body(c, _gather_layer(lp, cfg, "layers")),
+            x, params["layers"])
+        stash = tuple(jnp.concatenate([d, m], 0)
+                      for d, m in zip(stash_d, stash_m))
+    else:
+        x, stash = jax.lax.scan(
+            lambda c, lp: body(c, _gather_layer(lp, cfg, "layers")),
+            x, params["layers"])
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x[:, -1] @ params["lm_head"]).astype(jnp.float32)
+    if cfg.is_mla:
+        cache = {"c_kv": stash[0], "k_rope": stash[1], "index": jnp.int32(S)}
+    else:
+        cache = {"k": stash[0], "v": stash[1], "index": jnp.int32(S)}
+    return cache, logits

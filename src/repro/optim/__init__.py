@@ -1,0 +1,19 @@
+"""Optimizers and distributed-optimization utilities."""
+from repro.optim.adamw import AdamW, AdamWState, cosine_schedule, global_norm
+from repro.optim.compress import (
+    Compressed,
+    compress,
+    compressed_psum,
+    decompress,
+)
+
+__all__ = [
+    "AdamW",
+    "AdamWState",
+    "cosine_schedule",
+    "global_norm",
+    "Compressed",
+    "compress",
+    "decompress",
+    "compressed_psum",
+]

@@ -1,0 +1,95 @@
+"""AdamW + schedules + clipping (no optax in this environment).
+
+Functional optimizer matching the optax contract: ``init(params)`` builds
+the state pytree (m, v in float32 regardless of param dtype — bf16 params
+keep full-precision statistics), ``update`` applies one step.  Because the
+state mirrors the param tree leaf-for-leaf, sharding the state is just
+reusing the parameter PartitionSpecs (ZeRO-style: specs shard the big
+tensors over the TP axis; the data axis keeps them replicated, with
+gradient all-reduce handled by GSPMD from the loss).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray      # int32 scalar
+    m: Any                 # pytree like params (float32)
+    v: Any                 # pytree like params (float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float | Callable[[jnp.ndarray], jnp.ndarray] = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0          # global-norm clip; 0 disables
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(jnp.shape(p), jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+        )
+
+    def state_specs(self, param_specs) -> AdamWState:
+        """PartitionSpecs for the state, mirroring the parameter specs."""
+        from jax.sharding import PartitionSpec as P
+
+        return AdamWState(
+            step=P(), m=param_specs, v=param_specs)
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.grad_clip > 0:
+            gnorm = global_norm(g32)
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            g32 = jax.tree.map(lambda g: g * scale, g32)
+        else:
+            gnorm = global_norm(g32)
+
+        m = jax.tree.map(lambda m_, g: self.b1 * m_ + (1 - self.b1) * g,
+                         state.m, g32)
+        v = jax.tree.map(lambda v_, g: self.b2 * v_ + (1 - self.b2) * g * g,
+                         state.v, g32)
+        bc1 = 1 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            mhat = m_ / bc1
+            vhat = v_ / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamWState(step=step, m=m, v=v), gnorm
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in jax.tree.leaves(tree))
+    )
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr

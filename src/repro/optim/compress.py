@@ -1,0 +1,76 @@
+"""Gradient compression for cross-pod all-reduce (distributed-optimization
+trick; see DESIGN.md §5).
+
+Cross-pod links (DCN) are an order of magnitude slower than intra-pod ICI,
+so pod-boundary gradient traffic dominates at multi-pod scale.  We provide
+int8 block-quantized compression:
+
+  * per-block scale (max-abs / 127) over flattened 1024-element blocks,
+  * stochastic rounding (optional) to keep the estimator unbiased,
+  * decompress -> float32.
+
+Usage pattern at the framework level: with pjit, gradients are reduced by
+GSPMD automatically; to exploit compression the launcher can run the pod
+axis with ``shard_map`` and do  compress -> psum(int32) -> decompress
+explicitly.  ``compressed_psum`` implements that collective; the dry-run
+exercises it on the pod axis and tests validate quantization error bounds.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Compressed(NamedTuple):
+    q: jnp.ndarray        # int8 [padded]
+    scale: jnp.ndarray    # float32 [n_blocks]
+    n: int                # original element count (static)
+
+
+BLOCK = 1024
+
+
+def compress(x: jnp.ndarray, stochastic: bool = False,
+             key: jax.Array | None = None) -> Compressed:
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    safe = jnp.maximum(scale, 1e-12)
+    y = blocks / safe[:, None]
+    if stochastic:
+        assert key is not None
+        y = y + jax.random.uniform(key, y.shape, minval=-0.5, maxval=0.5)
+    q = jnp.clip(jnp.round(y), -127, 127).astype(jnp.int8)
+    return Compressed(q=q.reshape(-1), scale=scale, n=n)
+
+
+def decompress(c: Compressed, shape, dtype=jnp.float32) -> jnp.ndarray:
+    blocks = c.q.reshape(-1, BLOCK).astype(jnp.float32)
+    out = (blocks * c.scale[:, None]).reshape(-1)[: c.n]
+    return out.reshape(shape).astype(dtype)
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """int8-compressed all-reduce over ``axis_name`` (shard_map context).
+
+    Quantizes locally, widens to int32 for the ring reduction (so the sum
+    cannot overflow for <= 2^23 participants), reduces, and rescales with
+    the max participant scale (scales are psum-maxed).  The result is an
+    unbiased-ish approximation whose error is bounded by one quantization
+    step per participant — tested in tests/test_optim.py.
+    """
+    c = compress(x)
+    scale_max = jax.lax.pmax(c.scale, axis_name)
+    # requantize against the shared scale so the integer sum is coherent
+    rel = c.scale / jnp.maximum(scale_max, 1e-12)
+    q_shared = jnp.round(
+        c.q.reshape(-1, BLOCK).astype(jnp.float32) * rel[:, None]
+    ).astype(jnp.int32)
+    total = jax.lax.psum(q_shared, axis_name)
+    out = (total.astype(jnp.float32) * scale_max[:, None]).reshape(-1)[: c.n]
+    return out.reshape(x.shape).astype(x.dtype)

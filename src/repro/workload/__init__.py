@@ -1,0 +1,23 @@
+"""Workload analyzers: causal-access-path enumeration per query family."""
+from repro.workload.analyzer import batched, materialize, trace_objects
+from repro.workload.snb import snb_workload, snb_workload_materialized, snb_query_paths
+from repro.workload.gnn import gnn_workload, gnn_workload_materialized, gnn_query_paths
+from repro.workload.recsys import recsys_workload, recsys_workload_materialized
+from repro.workload.moe import expert_shard, moe_workload, moe_workload_materialized
+
+__all__ = [
+    "batched",
+    "materialize",
+    "trace_objects",
+    "snb_workload",
+    "snb_workload_materialized",
+    "snb_query_paths",
+    "gnn_workload",
+    "gnn_workload_materialized",
+    "gnn_query_paths",
+    "recsys_workload",
+    "recsys_workload_materialized",
+    "expert_shard",
+    "moe_workload",
+    "moe_workload_materialized",
+]

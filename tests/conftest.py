@@ -1,0 +1,30 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see the real
+host device count (the 512-device override belongs to dryrun.py only)."""
+import numpy as np
+import pytest
+
+from repro.core.paths import PathSet
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_workload(rng, n_obj=120, n_srv=5, n_paths=150, max_len=7,
+                    n_queries=None):
+    paths = [
+        rng.integers(0, n_obj, rng.integers(1, max_len + 1)).tolist()
+        for _ in range(n_paths)
+    ]
+    qids = None
+    if n_queries:
+        qids = rng.integers(0, n_queries, n_paths).tolist()
+        qids = sorted(qids)
+    shard = rng.integers(0, n_srv, n_obj).astype(np.int32)
+    return PathSet.from_lists(paths, qids), shard
+
+
+@pytest.fixture
+def workload(rng):
+    return random_workload(rng)

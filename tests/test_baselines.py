@@ -1,0 +1,65 @@
+"""Baselines: single-site oracle (Fig 2d) + dangling edges (Table 3)."""
+import numpy as np
+
+from repro.core import (
+    dangling_edge_replication,
+    query_latencies,
+    replicate_workload_exact,
+    single_site_oracle,
+)
+from repro.graph import hash_partition, snb_like
+from repro.workload import snb_workload_materialized
+from tests.conftest import random_workload
+
+
+def test_oracle_achieves_single_site(rng):
+    ps, shard = random_workload(rng)
+    scheme = single_site_oracle(ps, shard, 5)
+    assert query_latencies(ps, scheme).max(initial=0) == 0
+
+
+def test_oracle_more_expensive_than_relaxed_greedy(rng):
+    """Fig 1/6: t=0 (single-site) costs more than a relaxed bound."""
+    ps, shard = random_workload(rng, n_paths=300)
+    oracle = single_site_oracle(ps, shard, 5)
+    relaxed, _ = replicate_workload_exact(ps, shard, 5, t=2)
+    assert oracle.replica_count() > relaxed.replica_count()
+
+
+def test_greedy_t0_no_worse_than_2x_oracle(rng):
+    """Greedy at t=0 is within a small factor of the oracle (the oracle
+    replicates exactly the accessed objects; greedy adds robustness
+    copies)."""
+    ps, shard = random_workload(rng, n_paths=150)
+    oracle = single_site_oracle(ps, shard, 5)
+    greedy, _ = replicate_workload_exact(ps, shard, 5, t=0)
+    assert greedy.replica_count() <= 2.0 * max(oracle.replica_count(), 1)
+
+
+def test_dangling_edges_structure_only():
+    snb = snb_like(1, seed=0)
+    g = snb.graph
+    shard = hash_partition(g.n_nodes, 4)
+    k0 = dangling_edge_replication(g.indptr, g.indices, shard, 4, k=0)
+    k1 = dangling_edge_replication(g.indptr, g.indices, shard, 4, k=1)
+    assert k1.replica_count() >= k0.replica_count() > 0
+    # k=0 removes all dangling edges: every cut edge's target replicated
+    src = np.repeat(np.arange(g.n_nodes), np.diff(g.indptr))
+    cut = shard[src] != shard[g.indices]
+    assert k0.mask[g.indices[cut], shard[src[cut]]].all()
+
+
+def test_workload_aware_cheaper_than_dangling(rng):
+    """Paper Fig 7d / Table 3: the greedy algorithm, being workload-aware,
+    replicates less than structure-based dangling-edge replication at a
+    comparable latency guarantee."""
+    snb = snb_like(1, seed=1)
+    g = snb.graph
+    shard = hash_partition(g.n_nodes, 6)
+    ps = snb_workload_materialized(snb, n_queries=300, seed=1)
+    f = g.object_sizes()
+    greedy, _ = replicate_workload_exact(
+        ps, shard, 6, t=1, f=f)
+    dangling = dangling_edge_replication(g.indptr, g.indices, shard, 6, k=1)
+    assert (greedy.replication_overhead(f)
+            < dangling.replication_overhead(f))

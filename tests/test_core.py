@@ -1,0 +1,138 @@
+"""Core correctness: paths, latency evaluation, greedy vs exact."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    PathSet,
+    ReplicationScheme,
+    is_latency_feasible,
+    path_latencies,
+    path_latency_reference,
+    query_latencies,
+    replicate_workload,
+    replicate_workload_exact,
+    server_local_subpaths,
+    subpath_structure,
+    update_exact,
+)
+from tests.conftest import random_workload
+
+
+def test_pathset_roundtrip():
+    ps = PathSet.from_lists([[1, 2, 3], [4], [5, 6]])
+    assert ps.n_paths == 3
+    assert ps.path(0) == [1, 2, 3]
+    assert ps.path(1) == [4]
+    assert ps.lengths.tolist() == [3, 1, 2]
+
+
+def test_pathset_prune_redundant():
+    # same tail, roots on the same server -> prunable (paper §5.3)
+    shard = np.asarray([0, 0, 1, 1], dtype=np.int32)
+    ps = PathSet.from_lists([[0, 2, 3], [1, 2, 3], [2, 3, 0]])
+    pruned = ps.prune_redundant(shard)
+    assert pruned.n_paths == 2  # first two merge (roots 0,1 both on s0)
+
+
+def test_subpath_structure_matches_reference(rng):
+    ps, shard = random_workload(rng)
+    import jax.numpy as jnp
+
+    home, seg, h = subpath_structure(
+        jnp.asarray(ps.objects), jnp.asarray(ps.lengths), jnp.asarray(shard))
+    h = np.asarray(h)
+    for i in range(ps.n_paths):
+        groups = server_local_subpaths(ps.path(i), shard)
+        assert h[i] == len(groups) - 1, f"path {i}"
+
+
+def test_latency_matches_python_oracle(rng):
+    ps, shard = random_workload(rng)
+    scheme = ReplicationScheme.from_sharding(shard, 5)
+    extra_v = rng.integers(0, 120, 200)
+    extra_s = rng.integers(0, 5, 200)
+    scheme.mask[extra_v, extra_s] = True
+    got = path_latencies(ps, scheme)
+    for i in range(ps.n_paths):
+        want = path_latency_reference(ps.path(i), scheme.mask, shard)
+        assert got[i] == want, f"path {i}"
+
+
+@pytest.mark.parametrize("t", [0, 1, 2, 3])
+def test_greedy_exact_feasible(rng, t):
+    ps, shard = random_workload(rng)
+    scheme, stats = replicate_workload_exact(ps, shard, 5, t)
+    assert is_latency_feasible(ps, scheme, t)
+    assert stats["failed_paths"] == 0
+
+
+@pytest.mark.parametrize("t", [0, 1, 2, 3])
+def test_greedy_vectorized_feasible(rng, t):
+    ps, shard = random_workload(rng)
+    scheme, stats = replicate_workload(ps, shard, 5, t)
+    assert is_latency_feasible(ps, scheme, t)
+    assert stats.failed_paths == 0
+
+
+def test_vectorized_cost_close_to_exact(rng):
+    """Batched (lock-free-analogue) additions may cost slightly more than
+    strictly sequential ones, never less, and stay within a small factor."""
+    ps, shard = random_workload(rng, n_paths=200)
+    for t in (1, 2):
+        _, sv = replicate_workload(ps, shard, 5, t, batch_size=64)
+        _, se = replicate_workload_exact(ps, shard, 5, t)
+        assert sv.replicas >= se["replicas"] * 0.95
+        assert sv.replicas <= se["replicas"] * 1.35
+
+
+def test_update_exact_no_op_when_within_bound():
+    shard = np.asarray([0, 0, 0], np.int32)
+    scheme = ReplicationScheme.from_sharding(shard, 2)
+    res = update_exact(scheme, [0, 1, 2], t=1)
+    assert res.feasible and res.cost == 0 and not res.additions
+
+
+def test_update_exact_single_merge():
+    # path crosses 0 -> 1 -> 0; t=1 requires merging one subpath
+    shard = np.asarray([0, 1, 0], np.int32)
+    scheme = ReplicationScheme.from_sharding(shard, 2)
+    res = update_exact(scheme, [0, 1, 2], t=1)
+    assert res.feasible
+    lat = path_latency_reference([0, 1, 2], scheme.mask, shard)
+    assert lat <= 1
+
+
+def test_storage_capacity_rejects():
+    shard = np.asarray([0, 1, 0, 1], np.int32)
+    scheme = ReplicationScheme.from_sharding(shard, 2)
+    # capacity equals current load -> no replica can be added
+    res = update_exact(scheme, [0, 1, 2, 3], t=0, capacity=2.0)
+    assert not res.feasible
+
+
+def test_query_latency_is_max_over_paths(rng):
+    ps = PathSet.from_lists([[0, 1], [0, 1, 2]], query_ids=[0, 0])
+    shard = np.asarray([0, 1, 0], np.int32)
+    scheme = ReplicationScheme.from_sharding(shard, 2)
+    lq = query_latencies(ps, scheme)
+    assert lq.tolist() == [2]
+
+
+def test_replication_overhead_accounting():
+    shard = np.zeros(4, np.int32)
+    scheme = ReplicationScheme.from_sharding(shard, 2)
+    assert scheme.replication_overhead() == 0.0
+    scheme.mask[0, 1] = True
+    assert scheme.replication_overhead() == pytest.approx(0.25)
+    f = np.asarray([10.0, 1.0, 1.0, 1.0])
+    assert scheme.replication_overhead(f) == pytest.approx(10.0 / 13.0)
+
+
+def test_pack_bit_layout():
+    shard = np.zeros(3, np.int32)
+    scheme = ReplicationScheme.from_sharding(shard, 40)
+    scheme.mask[1, 39] = True
+    packed = scheme.pack()
+    assert packed.shape == (3, 2)
+    assert packed[1, 1] == np.uint32(1 << 7)  # server 39 = word 1 bit 7
+    assert packed[0, 0] == np.uint32(1)       # original at server 0

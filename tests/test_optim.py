@@ -1,0 +1,88 @@
+"""Optimizer, schedules, gradient compression, data pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import Prefetcher, lm_batch_fn
+from repro.optim import (
+    AdamW,
+    compress,
+    compressed_psum,
+    cosine_schedule,
+    decompress,
+    global_norm,
+)
+
+
+def test_adamw_converges_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0, 1.5])}
+    state = opt.init(params)
+    for _ in range(200):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state, _ = opt.update(g, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_adamw_grad_clip():
+    opt = AdamW(lr=0.0, grad_clip=1.0)
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    big = {"w": jnp.asarray([100.0, 100.0, 100.0])}
+    _, _, gnorm = opt.update(big, state, params)
+    assert float(gnorm) > 100  # reported norm is pre-clip
+
+
+def test_adamw_state_mirrors_params_f32():
+    opt = AdamW()
+    params = {"a": jnp.zeros((2, 3), jnp.bfloat16)}
+    st = opt.init(params)
+    assert st.m["a"].dtype == jnp.float32
+    assert st.m["a"].shape == (2, 3)
+
+
+def test_cosine_schedule_shape():
+    s = cosine_schedule(1e-3, warmup=10, total=100)
+    vals = [float(s(jnp.int32(i))) for i in (0, 5, 10, 50, 100)]
+    assert vals[0] == 0.0
+    assert abs(vals[1] - 5e-4) < 1e-9   # linear warmup
+    assert abs(vals[2] - 1e-3) < 1e-9   # peak
+    assert vals[2] > vals[3] > vals[4] > 0  # cosine decay to floor
+
+
+def test_compression_error_bound(rng):
+    x = jnp.asarray(rng.normal(size=(5000,)), jnp.float32)
+    c = compress(x)
+    err = jnp.abs(decompress(c, x.shape) - x)
+    # error bounded by one quantization step of the block max
+    blocks = jnp.pad(x, (0, (-x.shape[0]) % 1024)).reshape(-1, 1024)
+    step = jnp.abs(blocks).max(axis=1) / 127.0
+    assert float(err.max()) <= float(step.max()) * 1.01
+
+
+def test_compressed_psum_close_to_exact(rng):
+    xs = jnp.asarray(rng.normal(size=(4, 3000)), jnp.float32)
+    got = jax.vmap(lambda x: compressed_psum(x, "i"), axis_name="i")(xs)
+    want = xs.sum(0)
+    rel = float(jnp.abs(got[0] - want).max() / jnp.abs(want).max())
+    assert rel < 0.05
+
+
+def test_global_norm():
+    t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert float(global_norm(t)) == 5.0
+
+
+def test_prefetcher_deterministic_restart():
+    mk = lm_batch_fn(vocab=50, batch=2, seq=8)
+    p1 = Prefetcher(mk, start_step=0)
+    it = iter(p1)
+    s0, b0 = next(it)
+    s1, b1 = next(it)
+    p1.close()
+    # restart from step 1 regenerates the identical batch (restart-exact)
+    p2 = Prefetcher(mk, start_step=1)
+    s1b, b1b = next(iter(p2))
+    p2.close()
+    assert s1 == s1b == 1
+    assert np.array_equal(b1["tokens"], b1b["tokens"])

@@ -1,0 +1,145 @@
+"""Property-based tests (hypothesis) for the paper's central claims.
+
+  * Thm 5.3 (latency-robustness): after the greedy UPDATE processes a
+    path, ARBITRARY later replica additions cannot break that path's
+    bound.
+  * Thm 5.5: produced schemes are upward replication schemes.
+  * Monotonicity: replication cost is non-increasing in t.
+  * Feasibility for every prefix of the workload (Alg 1 invariant).
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    PathSet,
+    ReplicationScheme,
+    is_latency_feasible,
+    path_latency_reference,
+    replicate_workload,
+    replicate_workload_exact,
+    server_local_subpaths,
+    update_exact,
+)
+
+
+@st.composite
+def workloads(draw, max_obj=40, max_srv=6, max_paths=25, max_len=6):
+    n_obj = draw(st.integers(4, max_obj))
+    n_srv = draw(st.integers(2, max_srv))
+    n_paths = draw(st.integers(1, max_paths))
+    paths = [
+        draw(st.lists(st.integers(0, n_obj - 1), min_size=1,
+                      max_size=max_len))
+        for _ in range(n_paths)
+    ]
+    shard = np.asarray(
+        [draw(st.integers(0, n_srv - 1)) for _ in range(n_obj)], np.int32)
+    t = draw(st.integers(0, 3))
+    return paths, shard, n_srv, t
+
+
+@settings(max_examples=40, deadline=None)
+@given(workloads(), st.randoms(use_true_random=False))
+def test_latency_robustness_thm_5_3(wl, rnd):
+    """Process one path with UPDATE, then add random replicas: the path's
+    latency bound must survive (the paper's central correctness claim)."""
+    paths, shard, n_srv, t = wl
+    scheme = ReplicationScheme.from_sharding(shard, n_srv)
+    path = paths[0]
+    res = update_exact(scheme, path, t)
+    if not res.feasible:
+        return
+    base = path_latency_reference(path, scheme.mask, shard)
+    assert base <= t
+    # arbitrary extension: random replica additions
+    n_obj = shard.shape[0]
+    for _ in range(25):
+        v = rnd.randrange(n_obj)
+        s = rnd.randrange(n_srv)
+        scheme.mask[v, s] = True
+        lat = path_latency_reference(path, scheme.mask, shard)
+        assert lat <= t, (
+            f"robustness violated: path={path}, t={t}, lat={lat}")
+
+
+@settings(max_examples=30, deadline=None)
+@given(workloads())
+def test_alg1_prefix_feasibility(wl):
+    """After Alg 1 finishes, EVERY path (not just the last) meets t —
+    i.e., later UPDATEs never broke earlier paths."""
+    paths, shard, n_srv, t = wl
+    ps = PathSet.from_lists(paths)
+    scheme, stats = replicate_workload_exact(ps, shard, n_srv, t)
+    if stats["failed_paths"]:
+        return
+    for p in paths:
+        assert path_latency_reference(p, scheme.mask, shard) <= t
+
+
+@settings(max_examples=30, deadline=None)
+@given(workloads())
+def test_upward_replication_thm_5_5(wl):
+    """Every replica the algorithm adds is co-located with the original
+    copy of a predecessor in some path's server-local subpath structure —
+    the executable form of Def 5.4/Thm 5.5."""
+    paths, shard, n_srv, t = wl
+    ps = PathSet.from_lists(paths)
+    scheme, _ = replicate_workload_exact(ps, shard, n_srv, t, prune=False)
+    replicas = {(v, s)
+                for v, s in zip(*np.nonzero(scheme.mask))
+                if shard[v] != s}
+    # collect legal (object, server) pairs: v may be replicated at the
+    # home of any object that precedes it in some path
+    legal = set()
+    for p in paths:
+        for i, v in enumerate(p):
+            for u in p[:i]:
+                legal.add((v, int(shard[u])))
+    assert replicas <= legal, f"non-upward replicas: {replicas - legal}"
+
+
+@settings(max_examples=20, deadline=None)
+@given(workloads())
+def test_cost_monotone_in_t(wl):
+    paths, shard, n_srv, _ = wl
+    ps = PathSet.from_lists(paths)
+    costs = []
+    for t in range(0, 4):
+        scheme, stats = replicate_workload_exact(ps, shard, n_srv, t)
+        costs.append(stats["replicas"])
+    assert all(a >= b for a, b in zip(costs, costs[1:])), costs
+
+
+@settings(max_examples=25, deadline=None)
+@given(workloads())
+def test_vectorized_always_feasible(wl):
+    paths, shard, n_srv, t = wl
+    ps = PathSet.from_lists(paths)
+    scheme, stats = replicate_workload(ps, shard, n_srv, t, batch_size=8)
+    if stats.failed_paths == 0:
+        assert is_latency_feasible(ps, scheme, t)
+
+
+@settings(max_examples=25, deadline=None)
+@given(workloads())
+def test_pruning_preserves_feasibility(wl):
+    """§5.3 pruning: scheme built from the pruned workload is feasible
+    for the FULL workload."""
+    paths, shard, n_srv, t = wl
+    ps = PathSet.from_lists(paths)
+    scheme, stats = replicate_workload_exact(ps, shard, n_srv, t, prune=True)
+    if stats["failed_paths"] == 0:
+        for p in paths:
+            assert path_latency_reference(p, scheme.mask, shard) <= t
+
+
+@settings(max_examples=30, deadline=None)
+@given(workloads())
+def test_latency_zero_iff_single_site(wl):
+    """h(p)=0 under d iff the whole path lives on one server."""
+    paths, shard, n_srv, _ = wl
+    for p in paths:
+        groups = server_local_subpaths(p, shard)
+        lat = path_latency_reference(
+            p, ReplicationScheme.from_sharding(shard, n_srv).mask, shard)
+        assert (lat == 0) == (len(groups) == 1)

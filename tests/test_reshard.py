@@ -1,0 +1,79 @@
+"""§5.4 incremental resharding: RM transfer, drains, repair."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    ReshardingMap,
+    apply_reshard,
+    drain_server,
+    is_latency_feasible,
+    repair_paths,
+    replicate_workload,
+    replicate_workload_exact,
+)
+from tests.conftest import random_workload
+
+
+def build(rng, t=1, n_srv=6):
+    ps, shard = random_workload(rng, n_obj=150, n_srv=n_srv, n_paths=200)
+    scheme, stats = replicate_workload(
+        ps, shard.copy(), n_srv, t, track_rm=True)
+    rmap = ReshardingMap.from_entries(stats.rm, scheme.shard)
+    return ps, scheme, rmap
+
+
+def test_partition_preserving_drain_stays_feasible(rng):
+    """Whole-partition moves (single target): RM transfer alone preserves
+    the bound — the setting §5.4's closing argument covers."""
+    t = 1
+    ps, scheme, rmap = build(rng, t)
+    moves, rep = drain_server(scheme, rmap, 3, strategy="single")
+    assert is_latency_feasible(ps, scheme, t)
+    assert rep.moved_originals > 0
+
+
+def test_scatter_drain_needs_repair(rng):
+    """Scatter moves can split server-local subpaths; repair_paths
+    restores the bound incrementally (no full re-analysis)."""
+    t = 1
+    ps, scheme, rmap = build(rng, t)
+    drain_server(scheme, rmap, 3, strategy="round_robin")
+    stats = repair_paths(scheme, rmap, ps, t)
+    assert stats["failed_paths"] == 0
+    assert is_latency_feasible(ps, scheme, t)
+
+
+def test_refcount_deletion(rng):
+    """Replicas whose last association leaves a server are deleted."""
+    t = 0
+    ps, scheme, rmap = build(rng, t)
+    before = scheme.replica_count()
+    # move every original off server 0 to server 1
+    victims = np.nonzero(scheme.shard == 0)[0]
+    moves = {int(u): 1 for u in victims}
+    rep = apply_reshard(scheme, rmap, moves)
+    # replicas tied to server-0 originals must have moved or been dropped
+    assert rep.replicas_transferred + rep.replicas_deleted >= 0
+    assert is_latency_feasible(ps, scheme, t)
+
+
+def test_sequential_drains(rng):
+    """Repeated failures: drain two servers one after another."""
+    t = 2
+    ps, scheme, rmap = build(rng, t)
+    drain_server(scheme, rmap, 5, strategy="single")
+    assert is_latency_feasible(ps, scheme, t)
+    drain_server(scheme, rmap, 4, strategy="single")
+    repair_paths(scheme, rmap, ps, t)
+    assert is_latency_feasible(ps, scheme, t)
+
+
+def test_reshard_cost_is_moderate(rng):
+    """§6: incremental update moves far less data than re-replicating
+    from scratch."""
+    t = 1
+    ps, scheme, rmap = build(rng, t)
+    total_before = scheme.mask.sum()
+    _, rep = drain_server(scheme, rmap, 3, strategy="single")
+    moved = rep.replicas_transferred + rep.moved_originals
+    assert moved < total_before  # strictly incremental
