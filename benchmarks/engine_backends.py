@@ -1,0 +1,99 @@
+"""Micro-benchmark of the LatencyEngine backends and chunk sizes.
+
+Compares the three backends (reference | jnp | pallas) and a chunk-size
+sweep on the paper's hot primitive — h(p, r, rho) over an SNB-like
+workload — plus the transfer profile of the device-resident packed path
+against the legacy per-call bool-mask upload.  Emits CSV rows via
+``benchmarks.common`` and writes ``BENCH_engine.json`` so the perf
+trajectory is recorded across PRs.
+
+Usage: PYTHONPATH=src python -m benchmarks.engine_backends [out.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import build_snb_setup, emit, timer
+from repro.core import ReplicationScheme, replicate_workload
+from repro.engine import TRANSFER, LatencyEngine
+
+CHUNKS = (1024, 4096, 8192)
+REPEATS = 3
+
+
+def _bench_eval(eng: LatencyEngine, ps, chunk=None) -> float:
+    eng.path_latencies(ps, chunk=chunk)  # warm the jit cache
+    best = float("inf")
+    for _ in range(REPEATS):
+        with timer() as tm:
+            eng.path_latencies(ps, chunk=chunk)
+        best = min(best, tm.dt)
+    return best
+
+
+def run(out_path: str = "BENCH_engine.json") -> dict:
+    snb, ps, shard = build_snb_setup(scale=1, n_queries=1500)
+    scheme, _ = replicate_workload(ps, shard, 6, t=1)
+    result: dict = {
+        "workload": {"paths": ps.n_paths, "max_len": ps.max_len,
+                     "objects": scheme.n_objects, "servers": scheme.n_servers},
+        "backends": {},
+        "chunks": {},
+        "transfers": {},
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+    }
+
+    # --- backend comparison at the default chunk (+ exact agreement)
+    outs = {}
+    for backend in ("reference", "jnp", "pallas"):
+        eng = LatencyEngine(scheme, backend=backend)
+        outs[backend] = eng.path_latencies(ps)
+        dt = _bench_eval(eng, ps)
+        result["backends"][backend] = round(dt, 4)
+        emit("engine_backends", "eval_s", round(dt, 4), backend=backend)
+    assert np.array_equal(outs["reference"], outs["jnp"])
+    assert np.array_equal(outs["jnp"], outs["pallas"])
+
+    # --- chunk-size sweep (jnp backend, streamed double-buffered)
+    eng = LatencyEngine(scheme, backend="jnp")
+    for chunk in CHUNKS:
+        dt = _bench_eval(eng, ps, chunk=chunk)
+        result["chunks"][str(chunk)] = round(dt, 4)
+        emit("engine_backends", "eval_s", round(dt, 4), chunk=chunk)
+
+    # --- transfer profile: packed-resident vs legacy bool-per-call
+    n_evals = 5
+    TRANSFER.reset()
+    eng = LatencyEngine(scheme, backend="jnp", resident=True)
+    for _ in range(n_evals):
+        eng.path_latencies(ps)
+    packed_bytes = TRANSFER.h2d_bytes
+
+    TRANSFER.reset()
+    legacy = LatencyEngine(scheme, backend="jnp", resident=False)
+    for _ in range(n_evals):
+        legacy.path_latencies(ps)
+    legacy_bytes = TRANSFER.h2d_bytes
+
+    result["transfers"] = {
+        "evals": n_evals,
+        "resident_h2d_bytes": packed_bytes,
+        "legacy_h2d_bytes": legacy_bytes,
+        "ratio": round(legacy_bytes / max(packed_bytes, 1), 2),
+    }
+    emit("engine_backends", "h2d_bytes", packed_bytes, mode="resident")
+    emit("engine_backends", "h2d_bytes", legacy_bytes, mode="legacy")
+    emit("engine_backends", "h2d_ratio", result["transfers"]["ratio"])
+
+    with open(out_path, "w") as fh:
+        json.dump(result, fh, indent=2)
+    print(f"# wrote {out_path}")
+    return result
+
+
+if __name__ == "__main__":
+    run(sys.argv[1] if len(sys.argv) > 1 else "BENCH_engine.json")

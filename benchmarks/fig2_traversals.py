@@ -8,8 +8,9 @@
 import numpy as np
 
 from benchmarks.common import build_snb_setup, emit
-from repro.core import ReplicationScheme, query_latencies, single_site_oracle
+from repro.core import ReplicationScheme, evaluate_baseline, single_site_oracle
 from repro.distsys import Cluster, LatencyModel, execute_workload
+from repro.engine import LatencyEngine
 
 
 def run():
@@ -27,12 +28,13 @@ def run():
         emit("fig2a", "p99_us",
              round(float(np.percentile(lat[sel], 99)), 1), k=k)
 
-    # --- 2b/2c: traversal CDFs per sharding and cluster size
+    # --- 2b/2c: traversal CDFs per sharding and cluster size (one
+    # device-resident engine per scheme; the bool mask never transfers)
     for fig, kind in (("fig2b", "hash"), ("fig2c", "mincut")):
         for n_srv in (3, 6, 12):
             snb, ps, shard = build_snb_setup(n_servers=n_srv, sharding=kind)
             scheme = ReplicationScheme.from_sharding(shard, n_srv)
-            lq = query_latencies(ps, scheme)
+            lq = LatencyEngine(scheme).query_latencies(ps)
             for k in (0, 1, 2, 4):
                 frac = float((lq <= k).mean())
                 emit(fig, "cdf", round(frac, 4), servers=n_srv, k=k)
@@ -42,5 +44,8 @@ def run():
         snb, ps, shard = build_snb_setup(sharding=kind)
         f = snb.graph.object_sizes()
         oracle = single_site_oracle(ps, shard, 6)
+        res = evaluate_baseline(ps, oracle, f=f)
         emit("fig2d", "oracle_overhead",
-             round(oracle.replication_overhead(f), 4), sharding=kind)
+             round(res["overhead"], 4), sharding=kind)
+        emit("fig2d", "oracle_mean_latency",
+             round(res["mean_latency"], 3), sharding=kind)

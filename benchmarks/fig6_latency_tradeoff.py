@@ -9,7 +9,7 @@
 import numpy as np
 
 from benchmarks.common import build_gnn_setup, build_snb_setup, emit, timer
-from repro.core import is_latency_feasible, replicate_workload
+from repro.core import replicate_workload
 from repro.distsys import Cluster, LatencyModel, execute_workload
 
 TS = [0, 1, 2, 3, 4, -1]  # -1 = no constraint (t = inf)
@@ -24,9 +24,12 @@ def _sweep(tag, ps, shard, n_servers, f):
             scheme = ReplicationScheme.from_sharding(shard, n_servers)
             feasible = True
         else:
-            scheme, stats = replicate_workload(
-                ps, shard, n_servers, t, f=f.astype(np.float32))
-            feasible = is_latency_feasible(ps, scheme, t)
+            # the greedy driver hands back its device-resident engine, so
+            # the feasibility sweep re-uses the packed scheme in place.
+            scheme, stats, eng = replicate_workload(
+                ps, shard, n_servers, t, f=f.astype(np.float32),
+                return_engine=True)
+            feasible = eng.is_feasible(ps, t)
         rep = execute_workload(Cluster(scheme, f=f), ps, LatencyModel(),
                                seed=0)
         s = rep.summary()

@@ -6,6 +6,15 @@ every hypothesis->change->measure cycle is one command:
 
   PYTHONPATH=src python -m benchmarks.perf_iterate qwen3-moe-235b-a22b \
       train_4k moe_chunk=65536 remat_block=2
+
+The special cell name ``engine`` instead measures the replication
+engine's transfer profile on the greedy UPDATE loop (fig6-style driver,
+default benchmark size): the device-resident packed path — one packed
+upload, pinned paths, per-path latencies computed once and reused for
+feasibility + the CDF — against the seed behavior of re-uploading the
+unpacked bool mask and re-scanning per consumer call:
+
+  PYTHONPATH=src python -m benchmarks.perf_iterate engine
 """
 import os
 os.environ.setdefault("XLA_FLAGS",
@@ -47,7 +56,71 @@ def run(arch: str, shape: str, overrides: dict, multi_pod=False) -> dict:
     return keep
 
 
+def run_engine(ts=(0, 1, 2, 3), n_queries=1500) -> dict:
+    """Transfer bytes of the greedy UPDATE loop: packed-resident vs legacy.
+
+    Per t the driver replicates the workload and then consumes the result
+    twice, as fig6 does (feasibility check + traversal CDF).  The resident
+    path pins the pathset, streams one evaluation pass, and reuses the
+    per-path latencies; the legacy path re-uploads the unpacked bool mask
+    and re-runs the full Eqn 1-2 scan for every consumer call — the seed
+    implementation's behavior.
+    """
+    import numpy as np
+
+    from benchmarks.common import build_snb_setup
+    from repro.core import replicate_workload
+    from repro.engine import TRANSFER, LatencyEngine
+
+    snb, ps, shard = build_snb_setup(n_queries=n_queries, sharding="hash")
+    f = snb.graph.object_sizes().astype(np.float32)
+
+    def cdf(lq):
+        return {k: round(float((lq <= k).mean()), 4) for k in (0, 1, 2, 4)}
+
+    TRANSFER.reset()
+    resident_cdfs = []
+    for t in ts:
+        scheme, stats, eng = replicate_workload(
+            ps, shard, 6, t, f=f, return_engine=True)
+        pinned = eng.prepare(ps)               # one upload of the paths
+        pl = eng.path_latencies(pinned)        # one streaming pass
+        assert eng.is_feasible(ps, t, path_lats=pl)
+        resident_cdfs.append(cdf(eng.query_latencies(ps, pl)))
+    resident = TRANSFER.snapshot()
+
+    TRANSFER.reset()
+    legacy_cdfs = []
+    for t in ts:
+        scheme, stats = replicate_workload(ps, shard, 6, t, f=f)
+        legacy = LatencyEngine(scheme, backend="jnp", resident=False)
+        assert legacy.is_feasible(ps, t)       # full re-scan (seed behavior)
+        legacy_cdfs.append(cdf(legacy.query_latencies(ps)))  # and again
+    legacy = TRANSFER.snapshot()
+
+    assert resident_cdfs == legacy_cdfs  # identical results either way
+    ratio = legacy["h2d_bytes"] / max(resident["h2d_bytes"], 1)
+    return {
+        "paths": ps.n_paths,
+        "objects": int(shard.shape[0]),
+        "ts": list(ts),
+        "resident_h2d_bytes": resident["h2d_bytes"],
+        "resident_h2d_calls": resident["h2d_calls"],
+        "legacy_h2d_bytes": legacy["h2d_bytes"],
+        "legacy_h2d_calls": legacy["h2d_calls"],
+        "h2d_ratio": round(ratio, 2),
+        "meets_2x": bool(ratio >= 2.0),
+    }
+
+
 def main():
+    if len(sys.argv) < 2:
+        sys.exit("usage: perf_iterate (engine | <arch> <shape> [k=v ...])")
+    if sys.argv[1] == "engine":
+        print(json.dumps(run_engine(), indent=2))
+        return
+    if len(sys.argv) < 3:
+        sys.exit("usage: perf_iterate <arch> <shape> [k=v ...]")
     arch, shape = sys.argv[1], sys.argv[2]
     overrides = dict(parse_override(s) for s in sys.argv[3:])
     out = run(arch, shape, overrides)

@@ -6,6 +6,7 @@
   table4_runtime        — Table 4 (algorithm runtime) + kernel timing
   reshard_cost          — §5.4 incremental-update cost
   beyond_paper          — MoE expert + recsys hot-row replication
+  engine_backends       — LatencyEngine backend/chunk/transfer micro-bench
 
 Usage: PYTHONPATH=src python -m benchmarks.run [module ...]
 Prints ``bench,metric,tags,value`` CSV.
@@ -14,7 +15,8 @@ import sys
 import time
 
 MODULES = ["fig2_traversals", "fig6_latency_tradeoff", "fig7_sharding",
-           "table4_runtime", "reshard_cost", "beyond_paper"]
+           "table4_runtime", "reshard_cost", "beyond_paper",
+           "engine_backends"]
 
 
 def main() -> None:

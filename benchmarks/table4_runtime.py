@@ -25,18 +25,20 @@ def run():
             replicate_workload(ps, shard, 6, 1, f=f, prune=False)
         emit("table4", "runtime_noprune_s", round(tm.dt, 2), scale=scale)
 
-    # kernel vs oracle on the latency-evaluation hot loop
-    from repro.core import ReplicationScheme, path_latencies
-    from repro.kernels import ops
+    # engine backends on the latency-evaluation hot loop (shared packed
+    # scheme, shared pinned pathset; only the backend dispatch differs)
+    from repro.core import ReplicationScheme
+    from repro.engine import LatencyEngine
 
     snb, ps, shard = build_snb_setup(scale=2, n_queries=3000)
     scheme = ReplicationScheme.from_sharding(shard, 6)
-    with timer() as t_core:
-        core = path_latencies(ps, scheme)
-    with timer() as t_kern:
-        kern = ops.path_latency(ps, scheme)
-    assert np.array_equal(core, kern)
-    emit("kernel_path_latency", "jnp_oracle_s", round(t_core.dt, 3),
-         paths=ps.n_paths)
-    emit("kernel_path_latency", "pallas_interpret_s", round(t_kern.dt, 3),
-         paths=ps.n_paths)
+    results = {}
+    for backend in ("jnp", "pallas"):
+        eng = LatencyEngine(scheme, backend=backend)
+        dev_ps = eng.prepare(ps)
+        eng.path_latencies(dev_ps)  # warm the jit cache
+        with timer() as tm:
+            results[backend] = eng.path_latencies(dev_ps)
+        emit("kernel_path_latency", f"{backend}_s", round(tm.dt, 3),
+             paths=ps.n_paths)
+    assert np.array_equal(results["jnp"], results["pallas"])

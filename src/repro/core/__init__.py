@@ -3,11 +3,16 @@
 Public API:
   PathSet                     — causal access paths (padded batches)
   ReplicationScheme           — replication scheme r with storage accounting
-  path_latencies / query_latencies / is_latency_feasible — Eqns 1-3
-  replicate_workload          — vectorized greedy Alg 1 + Alg 2
+  path_latencies / query_latencies / is_latency_feasible — Eqns 1-3,
+        thin wrappers over the unified ``repro.engine.LatencyEngine``
+        (backend-dispatched: reference | jnp | pallas; device-resident
+        packed bitmask)
+  replicate_workload          — vectorized greedy Alg 1 + Alg 2 (the UPDATE
+        loop bit-tests and scatter-ORs the engine's packed device state)
   replicate_workload_exact    — faithful sequential Alg 1 + Alg 2
   single_site_oracle          — Fig 2d baseline
   dangling_edge_replication   — Table 3 baseline
+  evaluate_baseline           — engine-backed baseline metrics
   ReshardingMap / apply_reshard / drain_server — §5.4 incremental updates
   build_ls_instance           — Thm 4.5 hardness gadget
 """
@@ -22,11 +27,16 @@ from repro.core.replication import (
 )
 from repro.core.greedy import GreedyStats, replicate_workload
 from repro.core.reference import (
+    path_latencies_reference,
     replicate_workload_exact,
     server_local_subpaths,
     update_exact,
 )
-from repro.core.baselines import dangling_edge_replication, single_site_oracle
+from repro.core.baselines import (
+    dangling_edge_replication,
+    evaluate_baseline,
+    single_site_oracle,
+)
 from repro.core.reshard import (
     ReshardingMap,
     ReshardReport,
@@ -55,9 +65,11 @@ __all__ = [
     "GreedyStats",
     "replicate_workload",
     "replicate_workload_exact",
+    "path_latencies_reference",
     "server_local_subpaths",
     "update_exact",
     "dangling_edge_replication",
+    "evaluate_baseline",
     "single_site_oracle",
     "ReshardingMap",
     "ReshardReport",

@@ -21,6 +21,31 @@ import numpy as np
 
 from repro.core.paths import PathSet
 from repro.core.replication import ReplicationScheme
+from repro.engine import LatencyEngine
+
+
+def evaluate_baseline(
+    pathset: PathSet,
+    scheme: ReplicationScheme,
+    f: np.ndarray | None = None,
+    backend: str = "jnp",
+) -> dict:
+    """Engine-backed evaluation of a baseline scheme (Fig 2/Table 3 rows).
+
+    One packed upload; returns the per-query latency distribution plus the
+    storage metrics the paper reports for every baseline.
+    """
+    eng = LatencyEngine(scheme, backend=backend)
+    pl = eng.path_latencies(pathset)
+    lq = eng.query_latencies(pathset, pl)
+    return {
+        "path_latencies": pl,
+        "query_latencies": lq,
+        "max_latency": int(lq.max(initial=0)),
+        "mean_latency": float(lq.mean()) if len(lq) else 0.0,
+        "replicas": scheme.replica_count(),
+        "overhead": scheme.replication_overhead(f),
+    }
 
 
 def single_site_oracle(

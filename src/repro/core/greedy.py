@@ -38,6 +38,8 @@ from repro.core import combi
 from repro.core.paths import PathSet
 from repro.core.replication import ReplicationScheme, subpath_structure
 from repro.core.reference import update_exact
+from repro.engine import LatencyEngine, PackedScheme, to_device
+from repro.engine.packed import scatter_or_pairs, test_bits
 
 _INF = jnp.float32(1e30)
 
@@ -48,7 +50,7 @@ _INF = jnp.float32(1e30)
     donate_argnums=(0,),
 )
 def _update_batch(
-    maskp: jnp.ndarray,      # bool [(n+1), (S+1)] — padded sacrificial row/col
+    words: jnp.ndarray,      # uint32 [(n+1), W] — packed scheme, sacrificial row
     objects: jnp.ndarray,    # int32 [B, L]
     lengths: jnp.ndarray,    # int32 [B]
     shard: jnp.ndarray,      # int32 [n]
@@ -108,10 +110,13 @@ def _update_batch(
     window = (k_r >= j_of_x[..., None]) & (k_r < seg_e[..., None])  # [B,C,L,Hp1]
     window = window & valid[:, None, :, None] & (h[:, None, None, None] > t)
 
-    # needed(x, k): no copy of objects[x] at srv[k] yet (snapshot semantics)
+    # needed(x, k): no copy of objects[x] at srv[k] yet — a bit-test against
+    # the engine's device-resident packed snapshot (snapshot semantics)
     safe_obj = jnp.maximum(objects, 0)
     safe_srv = jnp.maximum(srv, 0)
-    present = maskp[safe_obj[:, :, None], safe_srv[:, None, :]]  # [B, L, Hp1]
+    present = test_bits(
+        words, safe_obj[:, :, None], safe_srv[:, None, :]
+    )  # [B, L, Hp1]
     needed = (~present) & (srv[:, None, :] >= 0) & valid[:, :, None]
 
     fx = f[safe_obj] * valid.astype(jnp.float32)  # [B, L]
@@ -148,10 +153,11 @@ def _update_batch(
     chosen = jnp.take_along_axis(add, best[:, None, None, None], axis=1)[:, 0]
     chosen = chosen & ~no_solution[:, None, None]  # [B, L, Hp1]
 
-    # scatter-OR into the padded mask; masked-out writes hit the pad cell.
-    obj_w = jnp.where(chosen, safe_obj[:, :, None], maskp.shape[0] - 1)
-    srv_w = jnp.where(chosen, safe_srv[:, None, :], maskp.shape[1] - 1)
-    maskp = maskp.at[obj_w.reshape(-1), srv_w.reshape(-1)].set(True)
+    # on-device scatter-OR into the packed words; masked-out writes are
+    # routed to the sacrificial row by scatter_or_pairs.
+    obj_w = jnp.where(chosen, safe_obj[:, :, None], -1)
+    srv_w = jnp.broadcast_to(safe_srv[:, None, :], chosen.shape)
+    words = scatter_or_pairs(words, obj_w, srv_w)
 
     applied_cost = jnp.where(no_solution, 0.0, best_cost)
     # Maintain the per-server load incrementally: every applied (x, k)
@@ -166,7 +172,7 @@ def _update_batch(
         jax.nn.one_hot(jnp.clip(safe_srv, 0, S - 1), S, dtype=jnp.float32)
         * (srv >= 0).astype(jnp.float32)[..., None],
     )
-    return maskp, applied_cost, no_solution, chosen, first_obj, srv, new_load
+    return words, applied_cost, no_solution, chosen, first_obj, srv, new_load
 
 
 @dataclasses.dataclass
@@ -192,13 +198,22 @@ def replicate_workload(
     max_candidates: int = 2048,
     prune: bool = True,
     track_rm: bool = False,
-) -> tuple[ReplicationScheme, GreedyStats]:
+    return_engine: bool = False,
+):
     """Alg 1 over a workload with the vectorized batched UPDATE.
 
     Args mirror Def 4.4: ``t`` is the latency bound (distributed traversals),
     ``f`` the storage cost function, ``capacity`` M_s, ``epsilon`` the load
     imbalance bound.  ``track_rm`` additionally accumulates the §5.4
     resharding map entries (u, v, s).
+
+    The evolving scheme lives on device as the engine's packed uint32
+    bitmask; every batch bit-tests candidates against that snapshot and
+    applies the chosen additions with one on-device scatter-OR — the
+    unpacked bool mask is read back exactly once at the end.  With
+    ``return_engine=True`` the returned tuple gains a ``LatencyEngine``
+    that still holds the final scheme device-resident, so follow-up
+    feasibility sweeps skip the re-upload entirely.
     """
     t0 = time.perf_counter()
     n = shard.shape[0]
@@ -208,11 +223,14 @@ def replicate_workload(
     stats.paths_processed = ps.n_paths
     if ps.n_paths == 0:
         stats.runtime_s = time.perf_counter() - t0
+        if return_engine:
+            return scheme, stats, LatencyEngine(scheme)
         return scheme, stats
 
     f_arr = np.ones((n,), np.float32) if f is None else f.astype(np.float32)
-    shard_j = jnp.asarray(scheme.shard)
-    f_j = jnp.asarray(f_arr)
+    packed = PackedScheme.from_sharding(scheme.shard, n_servers)
+    shard_j = packed.shard
+    f_j = to_device(f_arr)
 
     # Split vectorizable paths from enumeration-budget-exceeding ones.
     _, _, h_all = subpath_structure(
@@ -225,8 +243,8 @@ def replicate_workload(
     seq_idx = np.nonzero(h_all > H_vec)[0]
 
     tables_np, counts_np = combi.stacked_tables(max(H_vec, t, 1), t)
-    tables = jnp.asarray(tables_np)
-    counts = jnp.asarray(counts_np)
+    tables = to_device(tables_np)
+    counts = to_device(counts_np)
 
     check_capacity = capacity is not None or epsilon is not None
     cap_arr = np.full((n_servers,), np.inf, np.float32)
@@ -236,8 +254,6 @@ def replicate_workload(
         ).copy()
     eps = np.float32(epsilon if epsilon is not None else np.inf)
 
-    maskp = jnp.zeros((n + 1, n_servers + 1), bool)
-    maskp = maskp.at[:n, :n_servers].set(jnp.asarray(scheme.mask))
     load = jnp.asarray(scheme.storage_per_server(f_arr).astype(np.float32))
     t_j = jnp.int32(t)
     cap_j = jnp.asarray(cap_arr)
@@ -253,10 +269,10 @@ def replicate_workload(
             padn = batch_size - o.shape[0]
             o = np.concatenate([o, np.full((padn, o.shape[1]), -1, np.int32)])
             l = np.concatenate([l, np.zeros((padn,), np.int32)])
-        maskp, costs, failed, chosen, first_obj, srv, load = _update_batch(
-            maskp,
-            jnp.asarray(o),
-            jnp.asarray(l),
+        packed.words, costs, failed, chosen, first_obj, srv, load = _update_batch(
+            packed.words,
+            to_device(o),
+            to_device(l),
             shard_j,
             f_j,
             tables,
@@ -271,10 +287,12 @@ def replicate_workload(
         stats.total_cost += float(np.asarray(costs)[:k].sum())
         stats.failed_paths += int(np.asarray(failed)[:k].sum())
         if check_capacity:
-            # exact load from the mask (the incremental estimate can
-            # over-count duplicate additions within a batch)
-            m_now = np.asarray(maskp)[:n, :n_servers]
-            load = jnp.asarray((f_arr[:, None] * m_now).sum(0).astype(np.float32))
+            # exact load from the packed words, computed on device (the
+            # incremental estimate can over-count duplicate additions
+            # within a batch) — no host round trip of the mask.
+            load = jnp.asarray(
+                packed.storage_per_server(f_arr).astype(np.float32)
+            )
         if track_rm:
             ch = np.asarray(chosen)[:k]
             fo = np.asarray(first_obj)[:k]
@@ -285,10 +303,12 @@ def replicate_workload(
                     (int(fo[b, kk_]), int(o[b, x]), int(sv[b, kk_]))
                 )
 
-    scheme.mask = np.asarray(maskp)[:n, :n_servers].copy()
+    # single host readback of the packed words (vs. per-batch bool mask)
+    scheme.mask = packed.unpack()
 
     # Exact fallback for enumeration-heavy paths (processed last; order of
     # paths is immaterial to correctness by Thm 5.3).
+    fallback_added = False
     for i in seq_idx:
         res = update_exact(
             scheme, ps.path(int(i)), t, f_arr, capacity, epsilon
@@ -296,6 +316,7 @@ def replicate_workload(
         stats.fallback_paths += 1
         if res.feasible:
             stats.total_cost += res.cost
+            fallback_added = fallback_added or bool(res.additions)
             if track_rm:
                 stats.rm.extend(res.rm_entries)
         else:
@@ -303,4 +324,7 @@ def replicate_workload(
 
     stats.replicas = scheme.replica_count()
     stats.runtime_s = time.perf_counter() - t0
+    if return_engine:
+        engine = LatencyEngine(scheme, packed=None if fallback_added else packed)
+        return scheme, stats, engine
     return scheme, stats

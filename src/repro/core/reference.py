@@ -5,6 +5,10 @@ including the two-pass cost-then-feasibility iteration order described in
 "Performance optimizations".  It is the correctness oracle for the
 vectorized implementation in ``repro.core.greedy`` and is used directly for
 small workloads in tests/benchmarks.
+
+It also hosts the pure-python path-latency oracle that backs
+``repro.engine.LatencyEngine(backend="reference")``
+(:func:`path_latencies_reference`).
 """
 from __future__ import annotations
 
@@ -23,6 +27,25 @@ class UpdateResult:
     cost: float
     additions: list[tuple[int, int]]            # (object, server) pairs added
     rm_entries: list[tuple[int, int, int]]      # (u, v, server) resharding map
+
+
+def path_latencies_reference(
+    objects: np.ndarray, lengths: np.ndarray, mask: np.ndarray, shard: np.ndarray
+) -> np.ndarray:
+    """Engine ``reference`` backend: the Eqn 1-2 walk, one path at a time.
+
+    ``objects`` int32 [P, L] (-1 padded), ``lengths`` int32 [P]; returns
+    int32 [P] distributed-traversal counts.  Deliberately scalar python —
+    this is the oracle the vectorized backends are proven against.
+    """
+    from repro.core.replication import path_latency_reference
+
+    P = objects.shape[0]
+    out = np.zeros((P,), dtype=np.int32)
+    for i in range(P):
+        path = objects[i, : lengths[i]].tolist()
+        out[i] = path_latency_reference(path, mask, shard)
+    return out
 
 
 def server_local_subpaths(path: list[int], shard: np.ndarray) -> list[list[int]]:

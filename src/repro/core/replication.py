@@ -8,20 +8,22 @@ lock-free bit-vector implementation (§6.1); batched scatter-ORs are the
 SIMD analogue of their 64-thread races, justified by Thm 5.3.
 
 The *access function* rho (Eqn 1) and the path latency h(p, r, rho)
-(Eqn 2) are evaluated with a vectorized ``lax.scan`` along the path axis;
-``repro.kernels.path_latency`` provides the Pallas TPU kernel for the same
-computation (this module is its jnp oracle).
+(Eqn 2) are evaluated by ``repro.engine.LatencyEngine`` — the shared
+backend-dispatched core (reference | jnp | pallas) with the packed uint32
+bitmask as its device-resident source of truth.  The module-level
+functions below are thin conveniences that build a transient engine per
+call; stateful consumers (the greedy driver, benchmarks) hold an engine
+to keep the scheme device-resident across calls.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.paths import PAD, PathSet
+from repro.engine import LatencyEngine, pack_bool_mask
 
 
 @dataclasses.dataclass
@@ -99,13 +101,7 @@ class ReplicationScheme:
 
     def pack(self) -> np.ndarray:
         """Pack to uint32 bit-words [n_objects, ceil(S/32)] (kernel input)."""
-        S = self.n_servers
-        W = (S + 31) // 32
-        padded = np.zeros((self.n_objects, W * 32), dtype=bool)
-        padded[:, :S] = self.mask
-        bits = padded.reshape(self.n_objects, W, 32).astype(np.uint32)
-        weights = (np.uint32(1) << np.arange(32, dtype=np.uint32))[None, None, :]
-        return (bits * weights).sum(axis=2).astype(np.uint32)
+        return pack_bool_mask(self.mask)
 
 
 # ---------------------------------------------------------------------------
@@ -141,60 +137,39 @@ def subpath_structure(objects: jnp.ndarray, lengths: jnp.ndarray, shard: jnp.nda
 
 
 # ---------------------------------------------------------------------------
-# Latency of paths under a replication scheme (Eqns 1-3).
+# Latency of paths under a replication scheme (Eqns 1-3) — engine-backed.
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=())
-def _path_latencies_jit(objects, lengths, mask, shard):
-    P, L = objects.shape
-    valid = jnp.arange(L)[None, :] < lengths[:, None]
-    safe = jnp.maximum(objects, 0)
-    home = jnp.where(valid, shard[safe], 0).astype(jnp.int32)
-    # replica membership rows per position: [P, L, S]
-    rloc = mask[safe]
-
-    def step(server, xs):
-        home_t, rloc_t, valid_t = xs
-        # is a copy of v available at the current server? (Eqn 1)
-        local = jnp.take_along_axis(rloc_t, server[:, None], axis=1)[:, 0]
-        nxt = jnp.where(local, server, home_t)
-        cost = (~local) & valid_t
-        nxt = jnp.where(valid_t, nxt, server)
-        return nxt, cost
-
-    server0 = home[:, 0]
-    xs = (
-        jnp.moveaxis(home[:, 1:], 1, 0),
-        jnp.moveaxis(rloc[:, 1:], 1, 0),
-        jnp.moveaxis(valid[:, 1:], 1, 0),
-    )
-    _, costs = jax.lax.scan(step, server0, xs)
-    return jnp.sum(costs.astype(jnp.int32), axis=0)
-
-
 def path_latencies(
-    pathset: PathSet, scheme: ReplicationScheme, chunk: int = 8192
+    pathset: PathSet,
+    scheme: ReplicationScheme,
+    chunk: int = 8192,
+    backend: str = "jnp",
 ) -> np.ndarray:
-    """h(p, r, rho) for every path: #distributed traversals (Def 4.2)."""
-    objects = pathset.objects
-    lengths = pathset.lengths
-    mask = jnp.asarray(scheme.mask)
-    shard = jnp.asarray(scheme.shard)
-    outs = []
-    for i in range(0, pathset.n_paths, chunk):
-        o = jnp.asarray(objects[i : i + chunk])
-        l = jnp.asarray(lengths[i : i + chunk])
-        outs.append(np.asarray(_path_latencies_jit(o, l, mask, shard)))
-    if not outs:
-        return np.zeros((0,), dtype=np.int32)
-    return np.concatenate(outs, axis=0)
+    """h(p, r, rho) for every path: #distributed traversals (Def 4.2).
+
+    Convenience wrapper: builds a transient ``LatencyEngine`` (one packed
+    upload) per call.  Hold an engine yourself for repeated evaluation
+    against an evolving scheme.
+    """
+    eng = LatencyEngine(scheme, backend=backend, chunk=chunk)
+    return eng.path_latencies(pathset)
 
 
-def query_latencies(pathset: PathSet, scheme: ReplicationScheme) -> np.ndarray:
-    """l_Q = max over the query's paths (Def 4.3); int array [n_queries]."""
-    pl = path_latencies(pathset, scheme)
+def query_latencies(
+    pathset: PathSet,
+    scheme: ReplicationScheme,
+    path_lats: np.ndarray | None = None,
+) -> np.ndarray:
+    """l_Q = max over the query's paths (Def 4.3); int array [n_queries].
+
+    ``path_lats`` lets callers that already hold per-path latencies skip
+    the full re-scan.
+    """
+    if path_lats is None:
+        path_lats = path_latencies(pathset, scheme)
     nq = pathset.n_queries
     out = np.zeros((nq,), dtype=np.int32)
-    np.maximum.at(out, pathset.query_ids, pl)
+    np.maximum.at(out, pathset.query_ids, path_lats)
     return out
 
 
@@ -213,8 +188,15 @@ def path_latency_reference(path: list[int], mask: np.ndarray, shard: np.ndarray)
 
 
 def is_latency_feasible(
-    pathset: PathSet, scheme: ReplicationScheme, t: int | np.ndarray
+    pathset: PathSet,
+    scheme: ReplicationScheme,
+    t: int | np.ndarray,
+    path_lats: np.ndarray | None = None,
 ) -> bool:
-    """All queries within their latency constraint t_Q (Def 4.4 constraint 1)."""
-    lq = query_latencies(pathset, scheme)
+    """All queries within their latency constraint t_Q (Def 4.4 constraint 1).
+
+    Pass ``path_lats`` (per-path traversal counts) when already computed —
+    the check then skips the full Eqn 1-2 re-scan entirely.
+    """
+    lq = query_latencies(pathset, scheme, path_lats=path_lats)
     return bool(np.all(lq <= np.asarray(t)))

@@ -19,9 +19,11 @@ paper's "2-hop local is 30X faster than 8-node distributed" citation.
 Both parameters are configurable; a small lognormal jitter produces the
 tail the paper plots (p99).
 
-The executor is fully vectorized over query batches (numpy) — the same
-access-function scan as ``repro.core.replication`` but additionally
-accumulating latencies and per-server load counters.
+The access-function walk itself is ``repro.engine``'s: the executor packs
+the liveness-filtered mask, asks the engine for the per-position access
+trace (visited server + locality under Eqn 1 with fail-over homes), and
+merely decorates those outputs with the RPC latency model and per-server
+load counters.
 """
 from __future__ import annotations
 
@@ -32,6 +34,8 @@ import numpy as np
 from repro.core.paths import PathSet
 from repro.core.replication import ReplicationScheme
 from repro.distsys.cluster import Cluster
+from repro.engine import pack_bool_mask, to_device
+from repro.engine.backends import access_trace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,7 +95,7 @@ class ExecutionReport:
 def _path_costs(
     pathset: PathSet, scheme: ReplicationScheme, alive: np.ndarray
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
-    """Vectorized access-function walk (Eqn 1) with liveness.
+    """Engine-backed access walk (Eqn 1) with liveness, plus counters.
 
     Returns (n_local [P], n_remote [P], local_per_server [S], rpc_per_server [S]).
     A dead server's copies are unavailable; originals of dead servers are
@@ -105,31 +109,27 @@ def _path_costs(
     orig_alive = alive[scheme.shard]
     first_alive = np.where(
         mask.any(axis=1), mask.argmax(axis=1), -1
-    ).astype(np.int64)
-    home = np.where(orig_alive, scheme.shard, first_alive)
+    ).astype(np.int32)
+    home = np.where(orig_alive, scheme.shard, first_alive).astype(np.int32)
 
-    objs = np.maximum(pathset.objects, 0)
+    # the walk itself is the engine's (packed upload, 32x below bool):
+    servers, local = access_trace(
+        to_device(np.asarray(pathset.objects, np.int32)),
+        to_device(np.asarray(pathset.lengths, np.int32)),
+        to_device(pack_bool_mask(mask)),
+        to_device(home),
+    )
+    servers = np.asarray(servers)
+    local = np.asarray(local)
+
     valid = pathset.objects >= 0
-    n_local = np.zeros(P, np.int64)
-    n_remote = np.zeros(P, np.int64)
-    local_srv = np.zeros(S, np.int64)
-    rpc_srv = np.zeros(S, np.int64)
+    remote = valid & ~local  # only positions >= 1 can be remote
+    n_local = local.sum(axis=1).astype(np.int64)
+    n_remote = remote.sum(axis=1).astype(np.int64)
 
-    server = home[objs[:, 0]]
-    server = np.where(valid[:, 0], server, 0)
-    np.add.at(local_srv, server[valid[:, 0]], 1)
-    n_local += valid[:, 0].astype(np.int64)
-    for i in range(1, L):
-        v = objs[:, i]
-        ok = valid[:, i]
-        has_local = mask[v, np.maximum(server, 0)] & (server >= 0)
-        nxt = np.where(has_local, server, home[v])
-        remote = ok & ~has_local
-        n_remote += remote.astype(np.int64)
-        n_local += (ok & has_local).astype(np.int64)
-        np.add.at(rpc_srv, np.maximum(nxt, 0)[remote], 1)
-        np.add.at(local_srv, np.maximum(server, 0)[ok & has_local], 1)
-        server = np.where(ok, nxt, server)
+    srv_c = np.maximum(servers, 0)
+    local_srv = np.bincount(srv_c[local], minlength=S).astype(np.int64)
+    rpc_srv = np.bincount(srv_c[remote], minlength=S).astype(np.int64)
     return n_local, n_remote, local_srv, rpc_srv
 
 

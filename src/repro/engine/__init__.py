@@ -1,0 +1,28 @@
+"""Unified device-resident latency-evaluation engine.
+
+One backend-dispatched implementation of the paper's hot primitive —
+h(p, r, rho), the distributed-traversal count of a path under a
+replication scheme (Eqns 1-3) — shared by the greedy UPDATE driver, the
+exact reference, the baselines, the distsys executor, the workload
+analyzer, and every benchmark.
+
+  LatencyEngine  — path_latencies / query_latencies / is_feasible /
+                   margin_costs behind "reference" | "jnp" | "pallas"
+  PackedScheme   — the device-resident packed uint32 bitmask state
+  TRANSFER       — host<->device transfer accounting (perf benchmarks)
+"""
+from repro.engine.engine import DevicePaths, LatencyEngine
+from repro.engine.packed import PackedScheme, pack_bool_mask, unpack_words
+from repro.engine.streaming import TRANSFER, to_device
+from repro.engine.backends import BACKENDS
+
+__all__ = [
+    "LatencyEngine",
+    "DevicePaths",
+    "PackedScheme",
+    "pack_bool_mask",
+    "unpack_words",
+    "TRANSFER",
+    "to_device",
+    "BACKENDS",
+]

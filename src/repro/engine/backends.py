@@ -1,0 +1,182 @@
+"""The three latency-evaluation backends behind ``LatencyEngine``.
+
+All backends compute the same quantity — h(p, r, rho), the number of
+distributed traversals of a path under the access function (paper
+Eqns 1-2) — with identical integer semantics:
+
+  ``reference``  pure-python oracle (``repro.core.reference``), host mask.
+  ``jnp``        vectorized ``lax.scan`` over the packed device words.
+  ``pallas``     ``repro.kernels.path_latency`` TPU kernel (interpret mode
+                 on CPU); inputs are gathered on device from the packed
+                 words, so only the int32 path chunk crosses the host
+                 boundary.
+
+The legacy unpacked-bool scan (the old ``core.replication``
+``_path_latencies_jit``) is retained as ``bool_scan`` for the
+``resident=False`` compatibility/benchmark mode that re-uploads the bool
+mask per call the way the seed implementation did.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.packed import test_bits
+from repro.kernels.path_latency import path_latency_pallas
+
+BACKENDS = ("reference", "jnp", "pallas")
+
+
+def _valid_home(objects, lengths, shard, fill):
+    L = objects.shape[1]
+    valid = jnp.arange(L)[None, :] < lengths[:, None]
+    safe = jnp.maximum(objects, 0)
+    home = jnp.where(valid, shard[safe], fill).astype(jnp.int32)
+    return valid, safe, home
+
+
+@jax.jit
+def words_scan(objects, lengths, words, shard):
+    """Packed-words ``lax.scan`` walk of the access function."""
+    valid, safe, home = _valid_home(objects, lengths, shard, 0)
+    rows = words[safe]  # [P, L, W] uint32
+
+    def step(server, xs):
+        home_t, rows_t, valid_t = xs
+        # rows_t is [P, W]; word select + bit test per lane (Eqn 1):
+        widx = server // 32
+        bit = (server % 32).astype(jnp.uint32)
+        word = jnp.take_along_axis(rows_t, widx[:, None], axis=1)[:, 0]
+        local = ((word >> bit) & jnp.uint32(1)).astype(jnp.bool_)
+        nxt = jnp.where(local, server, home_t)
+        cost = (~local) & valid_t
+        nxt = jnp.where(valid_t, nxt, server)
+        return nxt, cost
+
+    server0 = home[:, 0]
+    xs = (
+        jnp.moveaxis(home[:, 1:], 1, 0),
+        jnp.moveaxis(rows[:, 1:], 1, 0),
+        jnp.moveaxis(valid[:, 1:], 1, 0),
+    )
+    _, costs = jax.lax.scan(step, server0, xs)
+    return jnp.sum(costs.astype(jnp.int32), axis=0)
+
+
+@jax.jit
+def bool_scan(objects, lengths, mask, shard):
+    """Legacy unpacked-bool walk (seed ``_path_latencies_jit`` semantics)."""
+    valid, safe, home = _valid_home(objects, lengths, shard, 0)
+    rloc = mask[safe]  # [P, L, S] bool
+
+    def step(server, xs):
+        home_t, rloc_t, valid_t = xs
+        local = jnp.take_along_axis(rloc_t, server[:, None], axis=1)[:, 0]
+        nxt = jnp.where(local, server, home_t)
+        cost = (~local) & valid_t
+        nxt = jnp.where(valid_t, nxt, server)
+        return nxt, cost
+
+    server0 = home[:, 0]
+    xs = (
+        jnp.moveaxis(home[:, 1:], 1, 0),
+        jnp.moveaxis(rloc[:, 1:], 1, 0),
+        jnp.moveaxis(valid[:, 1:], 1, 0),
+    )
+    _, costs = jax.lax.scan(step, server0, xs)
+    return jnp.sum(costs.astype(jnp.int32), axis=0)
+
+
+@jax.jit
+def pallas_prep(objects, lengths, words, shard):
+    """Gather the kernel's (home, masks) inputs on device from the words."""
+    valid, safe, home = _valid_home(objects, lengths, shard, -1)
+    masks = words[safe]  # [P, L, W]
+    return home, masks
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pallas_eval(objects, lengths, words, shard, block: int = 128):
+    """Pallas-backed chunk evaluation; stays on device end to end."""
+    home, masks = pallas_prep(objects, lengths, words, shard)
+    return path_latency_pallas(
+        home, masks, lengths, block=block, interpret=not _on_tpu()
+    )
+
+
+def reference_eval(objects, lengths, mask, shard) -> np.ndarray:
+    """Pure-python oracle over a host mask (``repro.core.reference``)."""
+    from repro.core.reference import path_latencies_reference  # lazy: no cycle
+
+    return path_latencies_reference(objects, lengths, mask, shard)
+
+
+# ---------------------------------------------------------------------------
+# Access trace (executor decoration): per-position visited server + locality.
+# ---------------------------------------------------------------------------
+@jax.jit
+def access_trace(objects, lengths, words, home):
+    """Walk Eqn 1 recording the visited server and locality per position.
+
+    ``home`` is a per-object routing target (the sharding function, or the
+    executor's fail-over map; may be -1 when no alive copy exists).
+
+    Returns (servers int32 [P, L], local bool [P, L]); position 0 counts as
+    local when the path is non-empty, matching the executor's accounting.
+    The distributed-traversal count is ``(valid[:, 1:] & ~local[:, 1:]).sum``.
+    """
+    P, L = objects.shape
+    valid = jnp.arange(L)[None, :] < lengths[:, None]
+    safe = jnp.maximum(objects, 0)
+    hrows = home[safe]  # [P, L]
+    wrows = words[safe]  # [P, L, W]
+
+    server0 = jnp.where(valid[:, 0], hrows[:, 0], 0).astype(jnp.int32)
+
+    def step(server, xs):
+        h_t, w_t, v_t = xs
+        srv_c = jnp.maximum(server, 0)
+        word = jnp.take_along_axis(w_t, (srv_c // 32)[:, None], axis=1)[:, 0]
+        bit = (srv_c % 32).astype(jnp.uint32)
+        has_local = ((word >> bit) & jnp.uint32(1)).astype(jnp.bool_)
+        has_local = has_local & (server >= 0)
+        nxt = jnp.where(has_local, server, h_t).astype(jnp.int32)
+        nxt = jnp.where(v_t, nxt, server)
+        return nxt, (nxt, has_local & v_t)
+
+    xs = (
+        jnp.moveaxis(hrows[:, 1:], 1, 0),
+        jnp.moveaxis(wrows[:, 1:], 1, 0),
+        jnp.moveaxis(valid[:, 1:], 1, 0),
+    )
+    _, (srv_rest, loc_rest) = jax.lax.scan(step, server0, xs)
+    servers = jnp.concatenate(
+        [server0[:, None], jnp.moveaxis(srv_rest, 0, 1)], axis=1
+    )
+    local = jnp.concatenate(
+        [valid[:, :1], jnp.moveaxis(loc_rest, 0, 1)], axis=1
+    )
+    return servers, local
+
+
+@jax.jit
+def margin_cost(words, f, objects, servers):
+    """Marginal storage cost of candidate (object, server) additions.
+
+    Snapshot semantics against the device-resident words: each pair whose
+    bit is not yet set contributes ``f[v]``; duplicate pairs count once per
+    occurrence (the greedy UPDATE's lock-free estimate).  Pairs with a
+    negative object or server are ignored.  Reduces over the last axis.
+    """
+    ok = (objects >= 0) & (servers >= 0)
+    o = jnp.maximum(objects, 0)
+    s = jnp.maximum(servers, 0)
+    present = test_bits(words, o, s)
+    need = ok & ~present
+    return jnp.sum(jnp.where(need, f[o], 0.0), axis=-1)

@@ -1,0 +1,254 @@
+"""LatencyEngine: one backend-dispatched evaluation core for h(p, r, rho).
+
+The paper's whole algorithm family reduces to evaluating the latency of
+many paths against an evolving replication scheme; this class is the single
+implementation every consumer (greedy UPDATE driver, exact reference,
+baselines, the distsys executor, the workload analyzer, and all
+benchmarks) routes through.
+
+  engine = LatencyEngine(scheme, backend="pallas")
+  h  = engine.path_latencies(pathset)        # int32 [n_paths]
+  lq = engine.query_latencies(pathset, h)    # int32 [n_queries]
+  ok = engine.is_feasible(pathset, t, path_lats=h)
+  dc = engine.margin_costs(cand_objs, cand_srvs, f)   # vs device snapshot
+  engine.add_replicas(objs, srvs)            # on-device scatter-OR
+
+State model: by default (``resident=True``) the scheme lives on device as
+a :class:`~repro.engine.packed.PackedScheme` — one packed upload at
+construction, incremental scatter-OR updates afterwards, and chunked
+evaluation streams only the int32 path chunks (double-buffered, see
+``streaming``).  ``resident=False`` reproduces the seed implementation's
+transfer profile (bool mask re-uploaded every call) and exists for the
+perf benchmarks and regression comparisons.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.engine import backends
+from repro.engine.packed import PackedScheme, pack_bool_mask
+from repro.engine.streaming import stream_chunks, to_device
+
+DEFAULT_CHUNK = 8192
+
+
+class DevicePaths:
+    """A PathSet pinned to the device (uploaded once, reused per call)."""
+
+    def __init__(self, pathset):
+        self.n_paths = pathset.n_paths
+        self.n_queries = pathset.n_queries
+        self.query_ids = np.asarray(pathset.query_ids)
+        self.objects = to_device(np.asarray(pathset.objects, np.int32))
+        self.lengths = to_device(np.asarray(pathset.lengths, np.int32))
+
+
+class LatencyEngine:
+    """Backend-dispatched latency evaluation over a replication scheme.
+
+    Args:
+      scheme: anything with ``.mask`` (bool [n, S]) and ``.shard``
+        (int [n]) — typically ``repro.core.ReplicationScheme`` — or None
+        when ``packed`` is given directly.
+      backend: "reference" | "jnp" | "pallas".
+      chunk: paths per evaluation chunk (streaming granularity).
+      block: Pallas path-block (lane) size.
+      resident: keep the packed scheme device-resident (default).  When
+        False the engine re-uploads the unpacked bool mask on every
+        ``path_latencies`` call, mimicking the seed implementation.
+    """
+
+    def __init__(
+        self,
+        scheme=None,
+        *,
+        packed: PackedScheme | None = None,
+        backend: str = "jnp",
+        chunk: int = DEFAULT_CHUNK,
+        block: int = 128,
+        resident: bool = True,
+    ):
+        if backend not in backends.BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; use {backends.BACKENDS}")
+        if scheme is None and packed is None:
+            raise ValueError("need a scheme or a PackedScheme")
+        self.backend = backend
+        self.chunk = int(chunk)
+        self.block = int(block)
+        self.resident = resident or packed is not None
+        self.scheme = scheme
+        self.packed: PackedScheme | None = packed
+        if self.packed is None and self.resident:
+            self.packed = PackedScheme.from_mask(scheme.mask, scheme.shard)
+
+    # -- classmethods -----------------------------------------------------
+    @classmethod
+    def from_arrays(cls, mask: np.ndarray, shard: np.ndarray, **kw) -> "LatencyEngine":
+        class _Raw:  # minimal scheme duck type
+            pass
+
+        raw = _Raw()
+        raw.mask = np.asarray(mask, bool)
+        raw.shard = np.asarray(shard, np.int32)
+        return cls(raw, **kw)
+
+    # -- state ------------------------------------------------------------
+    @property
+    def n_servers(self) -> int:
+        if self.packed is not None:
+            return self.packed.n_servers
+        return self.scheme.mask.shape[1]
+
+    def host_mask(self) -> np.ndarray:
+        """Current bool mask on host (readback when device-resident)."""
+        if self.packed is not None:
+            return self.packed.unpack()
+        return np.asarray(self.scheme.mask, bool)
+
+    def host_shard(self) -> np.ndarray:
+        if self.packed is not None:
+            return np.asarray(self.packed.shard)
+        return np.asarray(self.scheme.shard, np.int32)
+
+    def refresh(self) -> None:
+        """Re-pack after the host scheme's mask was mutated directly."""
+        if self.scheme is not None and self.resident:
+            self.packed = PackedScheme.from_mask(self.scheme.mask, self.scheme.shard)
+
+    def add_replicas(self, objects, servers) -> None:
+        """Monotone additions, applied on device (and to the host scheme).
+
+        Pairs with a negative object or server are ignored, matching the
+        packed scatter-OR semantics (negative indices must not wrap).
+        """
+        obj = np.asarray(objects)
+        srv = np.asarray(servers)
+        ok = (obj >= 0) & (srv >= 0)
+        obj, srv = obj[ok], srv[ok]
+        if obj.size == 0:
+            return
+        if self.packed is not None:
+            self.packed.add(obj, srv)
+        if self.scheme is not None:
+            self.scheme.mask[obj, srv] = True
+
+    def prepare(self, pathset) -> DevicePaths:
+        """Pin a PathSet on device for repeated evaluation (one upload)."""
+        return DevicePaths(pathset)
+
+    def to_scheme(self):
+        from repro.core.replication import ReplicationScheme  # lazy: no cycle
+
+        return ReplicationScheme(self.host_mask(), self.host_shard())
+
+    # -- evaluation -------------------------------------------------------
+    def path_latencies(self, pathset, chunk: int | None = None) -> np.ndarray:
+        """h(p, r, rho) per path: #distributed traversals (Def 4.2)."""
+        if pathset.n_paths == 0:
+            return np.zeros((0,), dtype=np.int32)
+        if self.backend == "reference":
+            return backends.reference_eval(
+                np.asarray(pathset.objects),
+                np.asarray(pathset.lengths),
+                self.host_mask(),
+                self.host_shard(),
+            )
+        chunk = int(chunk or self.chunk)
+        if isinstance(pathset, DevicePaths):
+            compute = (
+                self._eval_chunk_resident
+                if self.resident
+                else self._make_nonresident_compute()
+            )
+            out = compute(pathset.objects, pathset.lengths)
+            return np.asarray(out)[: pathset.n_paths].astype(np.int32)
+        n = pathset.n_paths
+        if self.resident:
+            compute = self._eval_chunk_resident
+        else:
+            # legacy transfer profile: the unpacked bool mask rides along
+            # with EVERY chunk of every call.
+            compute = self._make_nonresident_compute()
+        outs = stream_chunks(
+            [np.asarray(pathset.objects, np.int32), np.asarray(pathset.lengths, np.int32)],
+            n,
+            chunk,
+            compute,
+            pad_values=[-1, 0],
+            align=self.block,
+        )
+        host = [np.asarray(o) for o in outs]
+        return np.concatenate(host, axis=0)[:n].astype(np.int32)
+
+    def _eval_chunk_resident(self, objects, lengths):
+        if self.backend == "pallas":
+            return backends.pallas_eval(
+                objects, lengths, self.packed.words, self.packed.shard,
+                block=self.block,
+            )
+        return backends.words_scan(
+            objects, lengths, self.packed.words, self.packed.shard
+        )
+
+    def _make_nonresident_compute(self):
+        mask_host = np.asarray(self.scheme.mask, bool)
+        shard_host = np.asarray(self.scheme.shard, np.int32)
+        if self.backend == "pallas":
+            words_host = np.concatenate(
+                [pack_bool_mask(mask_host),
+                 np.zeros((1, (mask_host.shape[1] + 31) // 32), np.uint32)],
+                axis=0,
+            )
+
+            def compute(objects, lengths):
+                return backends.pallas_eval(
+                    objects, lengths, to_device(words_host),
+                    to_device(shard_host), block=self.block,
+                )
+
+            return compute
+
+        def compute(objects, lengths):
+            return backends.bool_scan(
+                objects, lengths, to_device(mask_host), to_device(shard_host)
+            )
+
+        return compute
+
+    def query_latencies(self, pathset, path_lats: np.ndarray | None = None) -> np.ndarray:
+        """l_Q = max over the query's paths (Def 4.3)."""
+        if path_lats is None:
+            path_lats = self.path_latencies(pathset)
+        nq = pathset.n_queries
+        out = np.zeros((nq,), dtype=np.int32)
+        np.maximum.at(out, np.asarray(pathset.query_ids), path_lats)
+        return out
+
+    def is_feasible(
+        self, pathset, t, path_lats: np.ndarray | None = None
+    ) -> bool:
+        """All queries within t_Q (Def 4.4); reuses precomputed latencies."""
+        lq = self.query_latencies(pathset, path_lats)
+        return bool(np.all(lq <= np.asarray(t)))
+
+    def margin_costs(
+        self, objects, servers, f: np.ndarray | None = None
+    ) -> np.ndarray:
+        """Marginal storage cost of candidate additions vs the snapshot.
+
+        ``objects``/``servers`` are int arrays of identical shape
+        ``[..., K]``; negative entries are ignored.  Returns float32
+        ``[...]`` — the sum of ``f[v]`` over pairs not already replicated.
+        """
+        packed = self.packed
+        if packed is None:
+            packed = PackedScheme.from_mask(self.scheme.mask, self.scheme.shard)
+        n = packed.n_objects
+        fv = np.ones((n,), np.float32) if f is None else np.asarray(f, np.float32)
+        out = backends.margin_cost(
+            packed.words,
+            to_device(fv),
+            to_device(np.asarray(objects, np.int32)),
+            to_device(np.asarray(servers, np.int32)),
+        )
+        return np.asarray(out)

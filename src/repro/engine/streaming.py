@@ -1,0 +1,97 @@
+"""Host<->device transfer accounting + double-buffered chunk streaming.
+
+Every host->device transfer the engine performs goes through ``to_device``
+so the byte counter (``TRANSFER``) reflects real traffic; the perf
+benchmarks (``benchmarks/perf_iterate.py engine`` and
+``benchmarks/engine_backends.py``) read it to track the packed-resident
+path's transfer advantage over the legacy per-call bool-mask uploads.
+
+``stream_chunks`` is the engine's evaluation pipeline: while chunk ``i``
+computes on device (JAX dispatch is asynchronous), chunk ``i + 1``'s
+host->device copy is already enqueued — a two-deep software pipeline that
+replaces the old synchronous per-chunk ``jnp.asarray`` + ``np.asarray``
+round trip.  The final chunk is padded to the full chunk shape so every
+step hits the same jit cache entry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class TransferStats:
+    h2d_bytes: int = 0
+    h2d_calls: int = 0
+    d2h_bytes: int = 0
+
+    def reset(self) -> None:
+        self.h2d_bytes = 0
+        self.h2d_calls = 0
+        self.d2h_bytes = 0
+
+    def snapshot(self) -> dict:
+        return {
+            "h2d_bytes": self.h2d_bytes,
+            "h2d_calls": self.h2d_calls,
+            "d2h_bytes": self.d2h_bytes,
+        }
+
+
+TRANSFER = TransferStats()
+
+
+def to_device(x) -> jnp.ndarray:
+    """Counted host->device transfer (the only upload path in the engine)."""
+    a = np.asarray(x)
+    TRANSFER.h2d_bytes += a.nbytes
+    TRANSFER.h2d_calls += 1
+    return jnp.asarray(a)
+
+
+def stream_chunks(
+    arrays: Sequence[np.ndarray],
+    n: int,
+    chunk: int,
+    compute: Callable,
+    pad_values: Sequence[int],
+    align: int = 128,
+) -> list:
+    """Double-buffered map of ``compute`` over row-chunks of ``arrays``.
+
+    ``arrays`` are host arrays sharing leading dimension ``n``.  Full
+    chunks have exactly ``chunk`` rows; the final partial chunk is padded
+    up to a multiple of ``align`` with ``pad_values`` (one per array), so
+    a call compiles at most two shapes.  Returns the list of *device*
+    outputs (callers concatenate / read back once at the end, keeping
+    dispatch async).
+    """
+    if n == 0:
+        return []
+
+    def put(start: int):
+        stop = min(start + chunk, n)
+        rows = stop - start
+        target = chunk if rows == chunk else -(-rows // align) * align
+        out = []
+        for a, pv in zip(arrays, pad_values):
+            piece = a[start:stop]
+            if rows < target:
+                pad = np.full((target - rows,) + a.shape[1:], pv, a.dtype)
+                piece = np.concatenate([piece, pad], axis=0)
+            out.append(to_device(piece))
+        return tuple(out)
+
+    starts = list(range(0, n, chunk))
+    outs = []
+    nxt = put(starts[0])
+    for i, start in enumerate(starts):
+        cur = nxt
+        out = compute(*cur)  # async dispatch; device starts computing
+        if i + 1 < len(starts):
+            nxt = put(starts[i + 1])  # upload overlaps the in-flight compute
+        outs.append(out)
+    return outs

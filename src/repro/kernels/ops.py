@@ -7,13 +7,11 @@ structures (PathSet + ReplicationScheme) to kernel inputs.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.flash_prefill import flash_prefill_pallas
-from repro.kernels.path_latency import path_latency_pallas
 
 
 def _on_tpu() -> bool:
@@ -21,17 +19,17 @@ def _on_tpu() -> bool:
 
 
 def path_latency(pathset, scheme, block: int = 128) -> np.ndarray:
-    """Kernel-backed h(p, r, rho) for a PathSet + ReplicationScheme."""
-    packed = scheme.pack()                       # [n_obj, W] uint32
-    objs = np.maximum(pathset.objects, 0)
-    home = np.where(pathset.objects >= 0,
-                    scheme.shard[objs], -1).astype(np.int32)
-    masks = packed[objs]                         # [P, L, W]
-    out = path_latency_pallas(
-        jnp.asarray(home), jnp.asarray(masks),
-        jnp.asarray(pathset.lengths), block=block,
-        interpret=not _on_tpu())
-    return np.asarray(out)
+    """Kernel-backed h(p, r, rho) for a PathSet + ReplicationScheme.
+
+    Thin wrapper over the unified engine's ``pallas`` backend: the packed
+    scheme is uploaded once and the kernel inputs (home servers + replica
+    words per position) are gathered on device, instead of the former
+    host-side ``[P, L, W]`` gather + transfer.
+    """
+    from repro.engine import LatencyEngine  # lazy: keep kernels importable alone
+
+    eng = LatencyEngine(scheme, backend="pallas", block=block)
+    return eng.path_latencies(pathset)
 
 
 def decode_attention(q, k, v, lengths, block_t: int = 256):

@@ -150,7 +150,8 @@ def init_abstract(cfg: GNNConfig) -> dict:
 
 def init(cfg: GNNConfig, rng: jax.Array) -> dict:
     tree = shapes(cfg)
-    flat, _ = jax.tree.flatten_with_path(tree, is_leaf=_is_shape_leaf)
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=_is_shape_leaf)
     keys = jax.random.split(rng, len(flat))
     leaves = []
     for (path, (shape, dt)), k in zip(flat, keys):

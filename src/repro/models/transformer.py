@@ -203,7 +203,8 @@ def init_abstract(cfg: TransformerConfig) -> dict:
 def init(cfg: TransformerConfig, rng: jax.Array) -> dict:
     """Concrete init (reduced configs / smoke tests only)."""
     tree = shapes(cfg)
-    flat, treedef = jax.tree.flatten_with_path(tree, is_leaf=_is_shape_leaf)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=_is_shape_leaf)
     keys = jax.random.split(rng, len(flat))
     out = []
     for (path, (shape, dt)), k in zip(flat, keys):

@@ -1,5 +1,11 @@
 """Workload analyzers: causal-access-path enumeration per query family."""
-from repro.workload.analyzer import batched, materialize, trace_objects
+from repro.workload.analyzer import (
+    batched,
+    materialize,
+    stream_latencies,
+    trace_objects,
+    workload_latency_summary,
+)
 from repro.workload.snb import snb_workload, snb_workload_materialized, snb_query_paths
 from repro.workload.gnn import gnn_workload, gnn_workload_materialized, gnn_query_paths
 from repro.workload.recsys import recsys_workload, recsys_workload_materialized
@@ -8,6 +14,8 @@ from repro.workload.moe import expert_shard, moe_workload, moe_workload_material
 __all__ = [
     "batched",
     "materialize",
+    "stream_latencies",
+    "workload_latency_summary",
     "trace_objects",
     "snb_workload",
     "snb_workload_materialized",

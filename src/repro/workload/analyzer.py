@@ -8,7 +8,10 @@ currently processed by the UPDATE function."
 
 We mirror that contract: an analyzer is an iterator of ``PathSet`` batches
 so workloads far larger than memory stream through the greedy algorithm.
-``materialize`` concatenates for small benchmark workloads.
+``materialize`` concatenates for small benchmark workloads, and
+``stream_latencies`` / ``workload_latency_summary`` push the batches
+through one device-resident ``LatencyEngine`` — the scheme is uploaded
+(packed) exactly once no matter how many batches stream by.
 """
 from __future__ import annotations
 
@@ -19,6 +22,46 @@ import numpy as np
 from repro.core.paths import PathSet
 
 PathBatchIter = Iterator[PathSet]
+
+
+def stream_latencies(
+    batches: Iterable[PathSet], scheme, backend: str = "jnp"
+) -> Iterator[np.ndarray]:
+    """Yield per-path h(p, r, rho) for each streamed batch.
+
+    ``scheme`` is a ``ReplicationScheme`` or an already-built
+    ``LatencyEngine`` (reused as-is, keeping the scheme device-resident).
+    """
+    from repro.engine import LatencyEngine
+
+    eng = scheme if isinstance(scheme, LatencyEngine) else LatencyEngine(
+        scheme, backend=backend
+    )
+    for ps in batches:
+        yield eng.path_latencies(ps)
+
+
+def workload_latency_summary(
+    batches: Iterable[PathSet], scheme, t: int | None = None,
+    backend: str = "jnp",
+) -> dict:
+    """Streamed workload analysis: latency histogram + feasibility vs t."""
+    counts: dict[int, int] = {}
+    n_paths = 0
+    worst = 0
+    for pl in stream_latencies(batches, scheme, backend):
+        n_paths += len(pl)
+        vals, cnt = np.unique(pl, return_counts=True)
+        for v, c in zip(vals.tolist(), cnt.tolist()):
+            counts[int(v)] = counts.get(int(v), 0) + int(c)
+        if len(pl):
+            worst = max(worst, int(pl.max()))
+    return {
+        "n_paths": n_paths,
+        "max_traversals": worst,
+        "histogram": dict(sorted(counts.items())),
+        "feasible": (worst <= t) if t is not None else None,
+    }
 
 
 def materialize(batches: Iterable[PathSet]) -> PathSet:

@@ -6,6 +6,30 @@ import pytest
 from repro.core.paths import PathSet
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow", action="store_true", default=False,
+        help="run tests marked slow (full-size / compile-heavy problems)",
+    )
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running test (full-size / compile-heavy problem); "
+        "skipped unless --runslow is given, keeping tier-1 fast",
+    )
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip = pytest.mark.skip(reason="slow test: pass --runslow to run")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

@@ -17,8 +17,7 @@ def test_ten_archs_registered():
         assert expected in ALL_ARCHS
 
 
-@pytest.mark.parametrize("arch", ALL_ARCHS)
-def test_arch_smoke_step(arch):
+def _smoke_step(arch):
     bundle = get_arch(arch)
     rng = np.random.default_rng(0)
     batch = bundle.smoke_batch(rng)
@@ -27,6 +26,19 @@ def test_arch_smoke_step(arch):
         arr = np.asarray(val)
         assert np.isfinite(arr).all(), f"{arch}:{key} not finite"
     assert "loss" in out
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_arch_smoke_step(arch):
+    _smoke_step(arch)
+
+
+@pytest.mark.parametrize("arch", ["graphsage-reddit"])
+def test_arch_smoke_step_fast(arch):
+    """One cheap representative real step stays in the fast tier (LM
+    forward/backward coverage lives in test_models; full sweep is slow)."""
+    _smoke_step(arch)
 
 
 @pytest.mark.parametrize("arch", ALL_ARCHS)

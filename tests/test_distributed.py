@@ -5,6 +5,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess + 8-device XLA compile: minutes
+
 SCRIPT_AGG = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

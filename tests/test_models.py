@@ -27,6 +27,7 @@ LM_VARIANTS = {
 }
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", list(LM_VARIANTS))
 def test_lm_train_and_serve(name, rng):
     cfg = LM_VARIANTS[name]
@@ -45,7 +46,10 @@ def test_lm_train_and_serve(name, rng):
                                atol=1e-4, rtol=1e-4)
 
 
-@pytest.mark.parametrize("name", ["dense", "swa", "mla_moe"])
+@pytest.mark.parametrize("name", [
+    "dense", "swa",
+    pytest.param("mla_moe", marks=pytest.mark.slow),  # heaviest compile
+])
 def test_lm_decode_consistency(name, rng):
     """prefill(S) + decode(token S) logits == forward(S+1) last logits."""
     cfg = LM_VARIANTS[name]
@@ -59,6 +63,7 @@ def test_lm_decode_consistency(name, rng):
                                atol=2e-3, rtol=2e-3)
 
 
+@pytest.mark.slow
 def test_swa_ring_buffer_decode(rng):
     """Decode far past the window: ring cache must match full forward."""
     cfg = lm_cfg(sliding_window=8, n_kv_heads=4)
@@ -198,6 +203,7 @@ def test_gnn_isolated_nodes_no_nan(rng):
 
 
 # --- MIND ------------------------------------------------------------------
+@pytest.mark.slow
 def test_mind_training_reduces_loss(rng):
     cfg = R.MINDConfig(n_items=200, n_user_feats=20, embed_dim=16,
                        n_interests=2, capsule_iters=2, hist_len=8,

@@ -8,6 +8,9 @@
   * Feasibility for every prefix of the workload (Alg 1 invariant).
 """
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
