@@ -7,16 +7,23 @@
   reshard_cost          — §5.4 incremental-update cost
   beyond_paper          — MoE expert + recsys hot-row replication
   engine_backends       — LatencyEngine backend/chunk/transfer micro-bench
+  perf_iterate          — engine transfer profile (resident vs legacy h2d)
+  serve_tail            — serving simulator p99 vs load + controller value
 
 Usage: PYTHONPATH=src python -m benchmarks.run [module ...]
 Prints ``bench,metric,tags,value`` CSV.
 """
+import json
 import sys
 import time
 
 MODULES = ["fig2_traversals", "fig6_latency_tradeoff", "fig7_sharding",
            "table4_runtime", "reshard_cost", "beyond_paper",
-           "engine_backends"]
+           "engine_backends", "perf_iterate", "serve_tail"]
+
+# zero-arg entry point per module when it isn't ``run`` (perf_iterate's
+# ``run`` is the arch-cell driver; its benchmark entry is ``run_engine``)
+ENTRY = {"perf_iterate": "run_engine"}
 
 
 def main() -> None:
@@ -24,9 +31,14 @@ def main() -> None:
     t0 = time.perf_counter()
     print("bench,metric,tags,value")
     for name in want:
-        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        entry = ENTRY.get(name, "run")
+        mod = __import__(f"benchmarks.{name}", fromlist=[entry])
         t1 = time.perf_counter()
-        mod.run()
+        out = getattr(mod, entry)()
+        if name in ENTRY and out is not None:
+            # detail blob; '#'-prefixed to keep the CSV stream parseable
+            for line in json.dumps(out, indent=2).splitlines():
+                print(f"# {line}")
         print(f"# {name} done in {time.perf_counter()-t1:.1f}s")
     print(f"# total {time.perf_counter()-t0:.1f}s")
 

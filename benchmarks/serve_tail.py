@@ -1,0 +1,242 @@
+"""Serving-tail benchmark: p99 under load + adaptive-controller value.
+
+Three measurements, written to ``BENCH_serve.json`` (and emitted as CSV
+rows via ``benchmarks.common``):
+
+  1. **low-load validation** — at near-zero utilization the discrete-event
+     simulator's mean latency must match the closed-form executor model
+     within 10% (same access counts, same RPC constants, queueing -> 0);
+  2. **p99 vs offered load x {static scheme, controller-on}** — the
+     workload's hotspot moves (scripted drift phase); the static scheme
+     serves the drifted phase as-is, the controller-repaired scheme serves
+     it after adaptation, both swept over offered load;
+  3. **adaptation** — per drift phase: detection-to-feasible lag (queries
+     and simulated time), bytes replicated by the incremental repair, and
+     the same repair priced as a *from-scratch greedy rebuild* (bytes of
+     new copies the rebuilt scheme would have to ship vs the pre-drift
+     scheme).  The incremental path must ship strictly fewer bytes.
+
+Usage: PYTHONPATH=src python -m benchmarks.serve_tail [out.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import replicate_workload
+from repro.distsys import Cluster, LatencyModel
+from repro.graph import make_sharding, snb_like
+from repro.serve import (
+    AdaptiveController,
+    ControllerConfig,
+    drift_stream,
+    simulate,
+    snb_drift,
+)
+
+T = 1
+N_SERVERS = 6
+QUERIES_PER_PHASE = 800
+BATCH_QUERIES = 100
+LOAD_SWEEP = (2_000, 20_000, 60_000, 120_000)
+
+
+def _scheme_delta_bytes(old_mask, new_mask, f) -> float:
+    """f-weighted bytes of copies present in ``new`` but not ``old``."""
+    added = new_mask & ~old_mask
+    return float((f[:, None] * added).sum())
+
+
+def _serve_phase_with_controller(
+    controller: AdaptiveController,
+    cluster: Cluster,
+    pathset,
+    rate_qps: float,
+    model: LatencyModel,
+    seed: int,
+) -> dict:
+    """Feed one phase batch-by-batch; record adaptation lag + bytes."""
+    nq = pathset.n_queries
+    t_sim = 0.0
+    lag_queries = None
+    lag_sim_us = None
+    bytes_added = 0.0
+    replicas_added = 0
+    n_adapts = 0
+    served = 0
+    for lo in range(0, nq, BATCH_QUERIES):
+        batch = pathset.select_queries(lo, min(lo + BATCH_QUERIES, nq))
+        if batch.n_paths == 0:
+            continue
+        rep = simulate(
+            cluster, batch, rate_qps=rate_qps, model=model,
+            seed=seed + lo,
+        )
+        served += batch.n_queries
+        t_sim += float(rep.duration_us)
+        act = controller.observe(batch, latency_us=rep.latency_us)
+        if act is not None:
+            n_adapts += 1
+            bytes_added += act.bytes_added
+            replicas_added += act.replicas_added
+            if act.feasible_after and lag_queries is None:
+                lag_queries = served
+                lag_sim_us = t_sim
+    return {
+        "adaptations": n_adapts,
+        "adaptation_lag_queries": lag_queries,
+        "adaptation_lag_sim_us": lag_sim_us,
+        "bytes_replicated": bytes_added,
+        "replicas_added": replicas_added,
+    }
+
+
+def run(out_path: str = "BENCH_serve.json") -> dict:
+    snb = snb_like(1, seed=0)
+    f = snb.graph.object_sizes().astype(np.float32)
+    shard = make_sharding("hash", snb.graph, N_SERVERS, seed=0)
+    model = LatencyModel()
+
+    phases = snb_drift(
+        snb, n_phases=3, queries_per_phase=QUERIES_PER_PHASE, seed=0
+    )
+    ps0 = phases[0].pathset
+
+    # static scheme: greedy on the phase-0 workload only
+    static_scheme, _ = replicate_workload(ps0, shard, N_SERVERS, t=T, f=f)
+    static_cluster = Cluster(static_scheme, f=f)
+
+    result: dict = {
+        "t": T,
+        "workload": {
+            "n_servers": N_SERVERS,
+            "queries_per_phase": QUERIES_PER_PHASE,
+            "phase_paths": [p.pathset.n_paths for p in phases],
+        },
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+    }
+
+    # ------------------------------------------------------------------ 1.
+    lo_sim = simulate(static_cluster, ps0, rate_qps=500, model=model, seed=1)
+    from repro.distsys import execute_workload
+
+    closed = execute_workload(Cluster(static_scheme, f=f), ps0, model, seed=1)
+    rel_err = abs(lo_sim.mean_us - closed.mean_us) / closed.mean_us
+    result["lowload_validation"] = {
+        "sim_mean_us": round(lo_sim.mean_us, 2),
+        "closed_form_mean_us": round(closed.mean_us, 2),
+        "rel_err": round(rel_err, 4),
+        "within_10pct": bool(rel_err < 0.10),
+        "max_utilization": round(float(lo_sim.utilization().max()), 4),
+    }
+    emit("serve_tail", "lowload_rel_err", round(rel_err, 4))
+    assert rel_err < 0.10, "simulator no longer matches the latency model"
+
+    # ------------------------------------------------------------------ 3.
+    # drive the drift through an adaptive controller on a fresh cluster
+    ctl_scheme = static_scheme.copy()
+    ctl_cluster = Cluster(ctl_scheme, f=f)
+    controller = AdaptiveController(
+        ctl_cluster,
+        ControllerConfig(t=T, window=4 * BATCH_QUERIES, min_queries=BATCH_QUERIES),
+        f=f,
+    )
+    drift_rows = []
+    pre_drift_mask = static_scheme.mask.copy()
+    for delta in drift_stream(phases):
+        phase_rate = 20_000.0
+        adapt = _serve_phase_with_controller(
+            controller, ctl_cluster, delta.pathset, phase_rate, model,
+            seed=100 + delta.phase,
+        )
+        # price the same phase as a from-scratch rebuild: greedy on the
+        # observed phase workload, bytes = new copies vs the pre-drift
+        # scheme (what a rebuild would have to ship to the cluster)
+        rebuilt, _ = replicate_workload(
+            delta.pathset, shard, N_SERVERS, t=T, f=f
+        )
+        rebuild_bytes = _scheme_delta_bytes(pre_drift_mask, rebuilt.mask, f)
+        row = {
+            "phase": delta.phase,
+            "name": delta.name,
+            "added_paths": delta.added.n_paths,
+            "removed_paths": delta.n_removed,
+            **adapt,
+            "rebuild_bytes": rebuild_bytes,
+            "incremental_lt_rebuild": bool(
+                delta.phase == 0 or adapt["bytes_replicated"] < rebuild_bytes
+            ),
+        }
+        drift_rows.append(row)
+        emit(
+            "serve_tail", "bytes_replicated", round(adapt["bytes_replicated"], 1),
+            phase=delta.phase,
+        )
+        emit(
+            "serve_tail", "rebuild_bytes", round(rebuild_bytes, 1),
+            phase=delta.phase,
+        )
+        if adapt["adaptation_lag_queries"] is not None:
+            emit(
+                "serve_tail", "adaptation_lag_queries",
+                adapt["adaptation_lag_queries"], phase=delta.phase,
+            )
+    result["drift"] = drift_rows
+    drifted = [r for r in drift_rows if r["phase"] > 0 and r["adaptations"]]
+    result["incremental_vs_rebuild_ok"] = bool(
+        drifted and all(r["incremental_lt_rebuild"] for r in drifted)
+    )
+    assert result["incremental_vs_rebuild_ok"], (
+        "incremental repair should ship strictly fewer bytes than a rebuild"
+    )
+
+    # ------------------------------------------------------------------ 2.
+    # p99 vs offered load on the drifted phase: static vs controller-on
+    drifted_ps = phases[-1].pathset
+    sweep = []
+    for qps in LOAD_SWEEP:
+        srow = simulate(
+            static_cluster, drifted_ps, rate_qps=qps, model=model, seed=7
+        )
+        crow = simulate(
+            ctl_cluster, drifted_ps, rate_qps=qps, model=model, seed=7
+        )
+        sweep.append(
+            {
+                "offered_qps": qps,
+                "static": {
+                    "p50_us": round(srow.p50_us, 1),
+                    "p99_us": round(srow.p99_us, 1),
+                    "p999_us": round(srow.p999_us, 1),
+                    "max_utilization": round(
+                        float(srow.utilization().max()), 4
+                    ),
+                },
+                "controller": {
+                    "p50_us": round(crow.p50_us, 1),
+                    "p99_us": round(crow.p99_us, 1),
+                    "p999_us": round(crow.p999_us, 1),
+                    "max_utilization": round(
+                        float(crow.utilization().max()), 4
+                    ),
+                },
+            }
+        )
+        emit("serve_tail", "p99_us", round(srow.p99_us, 1),
+             qps=qps, scheme="static")
+        emit("serve_tail", "p99_us", round(crow.p99_us, 1),
+             qps=qps, scheme="controller")
+    result["load_sweep"] = sweep
+
+    with open(out_path, "w") as fh:
+        json.dump(result, fh, indent=2)
+    print(f"# wrote {out_path}")
+    return result
+
+
+if __name__ == "__main__":
+    run(sys.argv[1] if len(sys.argv) > 1 else "BENCH_serve.json")

@@ -25,7 +25,7 @@ from repro.core.replication import (
     query_latencies,
     subpath_structure,
 )
-from repro.core.greedy import GreedyStats, replicate_workload
+from repro.core.greedy import GreedyStats, replicate_delta, replicate_workload
 from repro.core.reference import (
     path_latencies_reference,
     replicate_workload_exact,
@@ -63,6 +63,7 @@ __all__ = [
     "query_latencies",
     "subpath_structure",
     "GreedyStats",
+    "replicate_delta",
     "replicate_workload",
     "replicate_workload_exact",
     "path_latencies_reference",

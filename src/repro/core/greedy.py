@@ -186,6 +186,90 @@ class GreedyStats:
     rm: list | None = None
 
 
+def _run_update_batches(
+    packed: PackedScheme,
+    vec_objects: np.ndarray,
+    vec_lengths: np.ndarray,
+    shard_j,
+    f_arr: np.ndarray,
+    f_j,
+    tables,
+    counts,
+    t_j,
+    load,
+    cap_j,
+    eps_j,
+    check_capacity: bool,
+    batch_size: int,
+    stats: GreedyStats,
+    track_rm: bool,
+    collect_additions: bool = False,
+):
+    """The batched UPDATE loop over vectorizable paths (shared by the
+    from-scratch driver and the incremental delta driver).
+
+    Mutates ``packed`` (donated words) and ``stats``; returns the final
+    device load and, when ``collect_additions``, the applied (object,
+    server) pairs as two int64 arrays.
+    """
+    add_obj: list[np.ndarray] = []
+    add_srv: list[np.ndarray] = []
+    nb = len(vec_objects)
+    for i in range(0, nb, batch_size):
+        o = vec_objects[i : i + batch_size]
+        l = vec_lengths[i : i + batch_size]
+        if o.shape[0] < batch_size:  # pad batch to a fixed shape
+            padn = batch_size - o.shape[0]
+            o = np.concatenate([o, np.full((padn, o.shape[1]), -1, np.int32)])
+            l = np.concatenate([l, np.zeros((padn,), np.int32)])
+        packed.words, costs, failed, chosen, first_obj, srv, load = _update_batch(
+            packed.words,
+            to_device(o),
+            to_device(l),
+            shard_j,
+            f_j,
+            tables,
+            counts,
+            t_j,
+            load,
+            cap_j,
+            eps_j,
+            check_capacity,
+        )
+        k = min(batch_size, nb - i)
+        stats.total_cost += float(np.asarray(costs)[:k].sum())
+        stats.failed_paths += int(np.asarray(failed)[:k].sum())
+        if check_capacity:
+            # exact load from the packed words, computed on device (the
+            # incremental estimate can over-count duplicate additions
+            # within a batch) — no host round trip of the mask.
+            load = jnp.asarray(
+                packed.storage_per_server(f_arr).astype(np.float32)
+            )
+        if track_rm or collect_additions:
+            ch = np.asarray(chosen)[:k]
+            sv = np.asarray(srv)[:k]
+            bb, xx, kk = np.nonzero(ch)
+            if collect_additions:
+                add_obj.append(o[bb, xx].astype(np.int64))
+                add_srv.append(sv[bb, kk].astype(np.int64))
+            if track_rm:
+                fo = np.asarray(first_obj)[:k]
+                for b, x, kk_ in zip(bb, xx, kk):
+                    stats.rm.append(
+                        (int(fo[b, kk_]), int(o[b, x]), int(sv[b, kk_]))
+                    )
+    additions = (
+        (
+            np.concatenate(add_obj) if add_obj else np.zeros(0, np.int64),
+            np.concatenate(add_srv) if add_srv else np.zeros(0, np.int64),
+        )
+        if collect_additions
+        else None
+    )
+    return load, additions
+
+
 def replicate_workload(
     pathset: PathSet,
     shard: np.ndarray,
@@ -259,49 +343,24 @@ def replicate_workload(
     cap_j = jnp.asarray(cap_arr)
     eps_j = jnp.asarray(eps)
 
-    vec_objects = ps.objects[vec_idx]
-    vec_lengths = ps.lengths[vec_idx]
-    nb = len(vec_idx)
-    for i in range(0, nb, batch_size):
-        o = vec_objects[i : i + batch_size]
-        l = vec_lengths[i : i + batch_size]
-        if o.shape[0] < batch_size:  # pad batch to a fixed shape
-            padn = batch_size - o.shape[0]
-            o = np.concatenate([o, np.full((padn, o.shape[1]), -1, np.int32)])
-            l = np.concatenate([l, np.zeros((padn,), np.int32)])
-        packed.words, costs, failed, chosen, first_obj, srv, load = _update_batch(
-            packed.words,
-            to_device(o),
-            to_device(l),
-            shard_j,
-            f_j,
-            tables,
-            counts,
-            t_j,
-            load,
-            cap_j,
-            eps_j,
-            check_capacity,
-        )
-        k = min(batch_size, nb - i)
-        stats.total_cost += float(np.asarray(costs)[:k].sum())
-        stats.failed_paths += int(np.asarray(failed)[:k].sum())
-        if check_capacity:
-            # exact load from the packed words, computed on device (the
-            # incremental estimate can over-count duplicate additions
-            # within a batch) — no host round trip of the mask.
-            load = jnp.asarray(
-                packed.storage_per_server(f_arr).astype(np.float32)
-            )
-        if track_rm:
-            ch = np.asarray(chosen)[:k]
-            fo = np.asarray(first_obj)[:k]
-            sv = np.asarray(srv)[:k]
-            bb, xx, kk = np.nonzero(ch)
-            for b, x, kk_ in zip(bb, xx, kk):
-                stats.rm.append(
-                    (int(fo[b, kk_]), int(o[b, x]), int(sv[b, kk_]))
-                )
+    _run_update_batches(
+        packed,
+        ps.objects[vec_idx],
+        ps.lengths[vec_idx],
+        shard_j,
+        f_arr,
+        f_j,
+        tables,
+        counts,
+        t_j,
+        load,
+        cap_j,
+        eps_j,
+        check_capacity,
+        batch_size,
+        stats,
+        track_rm,
+    )
 
     # single host readback of the packed words (vs. per-batch bool mask)
     scheme.mask = packed.unpack()
@@ -328,3 +387,144 @@ def replicate_workload(
         engine = LatencyEngine(scheme, packed=None if fallback_added else packed)
         return scheme, stats, engine
     return scheme, stats
+
+
+def replicate_delta(
+    pathset: PathSet,
+    engine: LatencyEngine,
+    t: int,
+    f: np.ndarray | None = None,
+    capacity: np.ndarray | float | None = None,
+    epsilon: float | None = None,
+    batch_size: int = 256,
+    max_candidates: int = 2048,
+    prune: bool = True,
+    track_rm: bool = False,
+):
+    """Warm-start incremental UPDATE over *delta* paths (online serving).
+
+    Runs the same batched Alg 2 UPDATE loop as :func:`replicate_workload`,
+    but against the scheme an existing :class:`LatencyEngine` already holds
+    device-resident — no from-scratch rebuild, no re-upload.  The additions
+    are scatter-ORed into the engine's ``PackedScheme`` on device and
+    mirrored into the engine's host scheme (when it has one), so a live
+    ``Cluster`` sharing that scheme object sees the delta immediately.
+
+    By Thm 5.3 (latency-robustness) the existing replicas can only lower
+    candidate costs, never invalidate previously established bounds, so
+    warm-starting over a path delta is exactly as sound as processing those
+    paths later in a longer from-scratch run — with batch boundaries
+    aligned, the two produce identical schemes (see tests/test_serve.py).
+
+    Returns ``(stats, (objects, servers))`` — the greedy stats for the
+    delta and the applied replica additions as two int64 arrays (the
+    scheme delta a controller ships to the cluster / replays on restart).
+    """
+    t0 = time.perf_counter()
+    if engine.packed is None:
+        engine.packed = PackedScheme.from_mask(
+            engine.scheme.mask, engine.scheme.shard
+        )
+    packed = engine.packed
+    shard = engine.host_shard()
+    n = packed.n_objects
+    n_servers = packed.n_servers
+    ps = pathset.prune_redundant(shard) if prune else pathset
+    stats = GreedyStats(rm=[] if track_rm else None)
+    stats.paths_processed = ps.n_paths
+    empty = (np.zeros(0, np.int64), np.zeros(0, np.int64))
+    if ps.n_paths == 0:
+        stats.runtime_s = time.perf_counter() - t0
+        return stats, empty
+
+    f_arr = np.ones((n,), np.float32) if f is None else f.astype(np.float32)
+    f_j = to_device(f_arr)
+    shard_j = packed.shard
+
+    _, _, h_all = subpath_structure(
+        jnp.asarray(ps.objects), jnp.asarray(ps.lengths), shard_j
+    )
+    h_all = np.asarray(h_all)
+    H_needed = int(h_all.max()) if ps.n_paths else 0
+    H_vec = combi.max_h_within_budget(t, max_candidates, H_needed)
+    vec_idx = np.nonzero(h_all <= H_vec)[0]
+    seq_idx = np.nonzero(h_all > H_vec)[0]
+
+    tables_np, counts_np = combi.stacked_tables(max(H_vec, t, 1), t)
+    tables = to_device(tables_np)
+    counts = to_device(counts_np)
+
+    check_capacity = capacity is not None or epsilon is not None
+    cap_arr = np.full((n_servers,), np.inf, np.float32)
+    if capacity is not None:
+        cap_arr = np.broadcast_to(
+            np.asarray(capacity, np.float32), (n_servers,)
+        ).copy()
+    eps = np.float32(epsilon if epsilon is not None else np.inf)
+    load = jnp.asarray(packed.storage_per_server(f_arr).astype(np.float32))
+
+    _, additions = _run_update_batches(
+        packed,
+        ps.objects[vec_idx],
+        ps.lengths[vec_idx],
+        shard_j,
+        f_arr,
+        f_j,
+        tables,
+        counts,
+        jnp.int32(t),
+        load,
+        jnp.asarray(cap_arr),
+        jnp.asarray(eps),
+        check_capacity,
+        batch_size,
+        stats,
+        track_rm,
+        collect_additions=True,
+    )
+    add_obj, add_srv = additions
+
+    # Mirror the vectorized additions into the host scheme FIRST: the
+    # exact fallback below prices candidates against the host mask, which
+    # must reflect what this call already scatter-ORed into the words.
+    if engine.scheme is not None and len(add_obj):
+        engine.scheme.mask[add_obj, add_srv] = True
+
+    # Exact fallback for enumeration-heavy delta paths: run against a host
+    # scheme and replay the additions into the device-resident words.
+    if len(seq_idx):
+        host = (
+            engine.scheme
+            if engine.scheme is not None
+            else engine.to_scheme()
+        )
+        fb_obj: list[int] = []
+        fb_srv: list[int] = []
+        for i in seq_idx:
+            res = update_exact(
+                host, ps.path(int(i)), t, f_arr, capacity, epsilon
+            )
+            stats.fallback_paths += 1
+            if res.feasible:
+                stats.total_cost += res.cost
+                fb_obj.extend(v for v, _ in res.additions)
+                fb_srv.extend(s for _, s in res.additions)
+                if track_rm:
+                    stats.rm.extend(res.rm_entries)
+            else:
+                stats.failed_paths += 1
+        if fb_obj:
+            packed.add(np.asarray(fb_obj), np.asarray(fb_srv))
+            add_obj = np.concatenate([add_obj, np.asarray(fb_obj, np.int64)])
+            add_srv = np.concatenate([add_srv, np.asarray(fb_srv, np.int64)])
+
+    # Dedupe (a batch can choose the same (v, s) for several paths; the
+    # scatter-OR is idempotent, but the returned delta is the exact set of
+    # new copies — the bytes a controller actually ships).
+    if len(add_obj):
+        pairs = np.unique(np.stack([add_obj, add_srv], axis=1), axis=0)
+        add_obj, add_srv = pairs[:, 0], pairs[:, 1]
+
+    stats.replicas = int(len(add_obj))
+    stats.runtime_s = time.perf_counter() - t0
+    return stats, (add_obj, add_srv)

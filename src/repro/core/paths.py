@@ -59,6 +59,20 @@ class PathSet:
     def select(self, idx: np.ndarray) -> "PathSet":
         return PathSet(self.objects[idx], self.lengths[idx], self.query_ids[idx])
 
+    def select_queries(self, lo: int, hi: int) -> "PathSet":
+        """Paths of queries with id in [lo, hi), query ids rebased to 0.
+
+        The serving layer uses this to feed a workload to the simulator /
+        controller in arrival-order batches.
+        """
+        keep = (self.query_ids >= lo) & (self.query_ids < hi)
+        idx = np.nonzero(keep)[0]
+        return PathSet(
+            self.objects[idx],
+            self.lengths[idx],
+            (self.query_ids[idx] - lo).astype(np.int32),
+        )
+
     def max_objects_touched(self) -> int:
         return int(self.objects.max()) + 1
 

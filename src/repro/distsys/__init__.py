@@ -1,6 +1,12 @@
 """Simulated distributed query-execution system + fault tolerance substrate."""
 from repro.distsys.cluster import Cluster, ServerState
-from repro.distsys.executor import ExecutionReport, LatencyModel, execute_workload
+from repro.distsys.executor import (
+    ExecutionReport,
+    LatencyModel,
+    execute_workload,
+    failover_home,
+    trace_paths,
+)
 from repro.distsys.router import Router
 from repro.distsys.checkpoint import CheckpointManager
 from repro.distsys.faults import Event, apply_event, event_schedule, run_schedule
@@ -11,6 +17,8 @@ __all__ = [
     "ExecutionReport",
     "LatencyModel",
     "execute_workload",
+    "failover_home",
+    "trace_paths",
     "Router",
     "CheckpointManager",
     "Event",

@@ -25,6 +25,10 @@ class ServerState:
     local_accesses: int = 0
     remote_rpcs_in: int = 0
     queries_coordinated: int = 0
+    # live queueing state maintained by the serving simulator
+    # (repro.serve.simulator): outstanding requests + in-service count.
+    queue_depth: int = 0
+    busy: int = 0
 
 
 @dataclasses.dataclass
@@ -67,6 +71,26 @@ class Cluster:
             ),
         }
 
+    def queue_depths(self) -> np.ndarray:
+        """Live outstanding work per server (queue-aware routing input)."""
+        return np.asarray(
+            [s.queue_depth + s.busy for s in self.servers], np.int64
+        )
+
+    def apply_scheme_delta(self, objects, servers) -> None:
+        """Apply a monotone replica-addition delta to the live scheme.
+
+        This is the controller's hot path: the delta produced by
+        ``repro.core.greedy.replicate_delta`` lands on the serving cluster
+        as plain 0->1 mask flips — no scheme rebuild, no re-routing pause.
+        Negative pairs (failed routing sentinels) are ignored.
+        """
+        obj = np.asarray(objects)
+        srv = np.asarray(servers)
+        ok = (obj >= 0) & (srv >= 0)
+        if ok.any():
+            self.scheme.add(obj[ok], srv[ok])
+
     def fail_server(self, server: int) -> None:
         self.servers[server].alive = False
 
@@ -78,3 +102,5 @@ class Cluster:
             s.local_accesses = 0
             s.remote_rpcs_in = 0
             s.queries_coordinated = 0
+            s.queue_depth = 0
+            s.busy = 0

@@ -1,11 +1,12 @@
 """Distributed query executor with a calibrated RPC latency model (§2, §3.1).
 
 Execution follows the paper's subquery-shipping model: a query is routed to
-the home server of its root; each subsequent access is local when a copy
-exists at the current server (Eqn 1), otherwise a nested RPC ships the
-subquery to the home server of the next object.  Parallel sibling paths
-overlap; the query completes when its slowest root-to-leaf path completes
-(Def 4.3), plus a result-gathering barrier at the coordinator.
+the home server of its root (or to a replica holder picked by a
+``Router`` policy); each subsequent access is local when a copy exists at
+the current server (Eqn 1), otherwise a nested RPC ships the subquery to
+the home server of the next object.  Parallel sibling paths overlap; the
+query completes when its slowest root-to-leaf path completes (Def 4.3),
+plus a result-gathering barrier at the coordinator.
 
 Latency model.  The paper's measurements (Fig 2a, Fig 6b) show latency
 linear in the number of distributed traversals on the critical path, with
@@ -24,6 +25,13 @@ the liveness-filtered mask, asks the engine for the per-position access
 trace (visited server + locality under Eqn 1 with fail-over homes), and
 merely decorates those outputs with the RPC latency model and per-server
 load counters.
+
+Failure semantics: an access whose object has *no alive copy* routes to
+server -1.  The executor keeps serving the rest of the batch and surfaces
+those queries in ``ExecutionReport.query_failed`` (their partial-walk
+latency is still reported); it never crashes.  A ``Router`` with the
+``hedged`` policy makes the executor race the primary and backup
+coordinator picks per query and keep the min-latency completion.
 """
 from __future__ import annotations
 
@@ -34,6 +42,7 @@ import numpy as np
 from repro.core.paths import PathSet
 from repro.core.replication import ReplicationScheme
 from repro.distsys.cluster import Cluster
+from repro.distsys.router import Router
 from repro.engine import pack_bool_mask, to_device
 from repro.engine.backends import access_trace
 
@@ -66,6 +75,7 @@ class ExecutionReport:
     per_server_local: np.ndarray      # [S]
     per_server_rpcs: np.ndarray       # [S]
     throughput_qps: float
+    query_failed: np.ndarray | None = None  # [n_queries] no-alive-copy hit
 
     def percentile(self, q: float) -> float:
         return float(np.percentile(self.query_latency_us, q))
@@ -78,6 +88,10 @@ class ExecutionReport:
     def p99_us(self) -> float:
         return self.percentile(99.0)
 
+    @property
+    def n_failed(self) -> int:
+        return int(self.query_failed.sum()) if self.query_failed is not None else 0
+
     def summary(self) -> dict:
         return {
             "mean_us": self.mean_us,
@@ -89,48 +103,87 @@ class ExecutionReport:
             if len(self.query_traversals)
             else 0.0,
             "throughput_qps": self.throughput_qps,
+            "failed_queries": self.n_failed,
         }
 
 
-def _path_costs(
-    pathset: PathSet, scheme: ReplicationScheme, alive: np.ndarray
-) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
-    """Engine-backed access walk (Eqn 1) with liveness, plus counters.
+def failover_home(scheme: ReplicationScheme, alive: np.ndarray) -> np.ndarray:
+    """Per-object routing target under liveness (executor + simulator).
 
-    Returns (n_local [P], n_remote [P], local_per_server [S], rpc_per_server [S]).
-    A dead server's copies are unavailable; originals of dead servers are
-    served by the lowest-id alive replica holder (fail-over), else the
-    access is charged as remote to a random alive server (degraded read).
+    Original if its server is alive, else the lowest-id alive copy holder,
+    else -1 (object unavailable — the access fails).
     """
-    P, L = pathset.objects.shape
-    S = scheme.n_servers
     mask = scheme.mask & alive[None, :]
-    # fail-over home: original if alive, else first alive copy, else -1
     orig_alive = alive[scheme.shard]
-    first_alive = np.where(
-        mask.any(axis=1), mask.argmax(axis=1), -1
-    ).astype(np.int32)
-    home = np.where(orig_alive, scheme.shard, first_alive).astype(np.int32)
+    first_alive = np.where(mask.any(axis=1), mask.argmax(axis=1), -1).astype(
+        np.int32
+    )
+    return np.where(orig_alive, scheme.shard, first_alive).astype(np.int32)
 
-    # the walk itself is the engine's (packed upload, 32x below bool):
+
+def trace_paths(
+    pathset: PathSet,
+    scheme: ReplicationScheme,
+    alive: np.ndarray,
+    start: np.ndarray | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Engine-backed access walk (Eqn 1) under liveness.
+
+    Returns (servers int32 [P, L], local bool [P, L]); ``start`` optionally
+    sets the per-path start server (a router's coordinator picks).  Visited
+    server -1 means the access had no alive copy to go to.
+    """
+    mask = scheme.mask & alive[None, :]
+    home = failover_home(scheme, alive)
+    kw = {}
+    if start is not None:
+        kw["start"] = to_device(np.asarray(start, np.int32))
     servers, local = access_trace(
         to_device(np.asarray(pathset.objects, np.int32)),
         to_device(np.asarray(pathset.lengths, np.int32)),
         to_device(pack_bool_mask(mask)),
         to_device(home),
+        **kw,
     )
-    servers = np.asarray(servers)
-    local = np.asarray(local)
+    return np.asarray(servers), np.asarray(local)
+
+
+def _path_costs(
+    pathset: PathSet,
+    scheme: ReplicationScheme,
+    alive: np.ndarray,
+    start: np.ndarray | None = None,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Access walk + counters.
+
+    Returns (n_local [P], n_remote [P], local_per_server [S],
+    rpc_per_server [S], dead [P]).  A dead server's copies are unavailable;
+    originals of dead servers are served by the lowest-id alive replica
+    holder (fail-over).  ``dead[p]`` marks paths that hit an object with no
+    alive copy at all (visited server -1).
+    """
+    S = scheme.n_servers
+    servers, local = trace_paths(pathset, scheme, alive, start)
 
     valid = pathset.objects >= 0
     remote = valid & ~local  # only positions >= 1 can be remote
+    dead = ((servers < 0) & valid).any(axis=1)
     n_local = local.sum(axis=1).astype(np.int64)
     n_remote = remote.sum(axis=1).astype(np.int64)
 
     srv_c = np.maximum(servers, 0)
     local_srv = np.bincount(srv_c[local], minlength=S).astype(np.int64)
     rpc_srv = np.bincount(srv_c[remote], minlength=S).astype(np.int64)
-    return n_local, n_remote, local_srv, rpc_srv
+    return n_local, n_remote, local_srv, rpc_srv, dead
+
+
+def _query_roots(pathset: PathSet) -> np.ndarray:
+    """Root object per query (the root is shared by all the query's paths)."""
+    roots = np.zeros(pathset.n_queries, np.int64)
+    np.maximum.at(
+        roots, np.asarray(pathset.query_ids), np.maximum(pathset.objects[:, 0], 0)
+    )
+    return roots
 
 
 def execute_workload(
@@ -139,19 +192,49 @@ def execute_workload(
     model: LatencyModel | None = None,
     seed: int = 0,
     hedge_replicas: bool = False,
+    router: Router | None = None,
 ) -> ExecutionReport:
     """Execute a workload; per-query latency = slowest path + coordination.
 
-    ``hedge_replicas``: straggler mitigation — when a remote hop has >1
-    alive copy, the executor issues hedged requests and takes the faster
-    jitter draw (min of two lognormals), a direct secondary benefit of the
-    replication scheme.
+    ``router``: replica-aware coordinator selection.  ``replica_lb`` starts
+    each query at the least-loaded alive copy holder of its root (seeded
+    with the cluster's live queue depths); ``hedged`` additionally races a
+    backup coordinator and keeps the per-query min-latency completion
+    (counters are charged to the primary — the backup's work is the price
+    of hedging and is reflected in its latency draw, not double-counted
+    into throughput).
+
+    ``hedge_replicas``: per-hop straggler mitigation — when a remote hop
+    has >1 alive copy, the executor issues hedged requests and takes the
+    faster jitter draw (min of two lognormals), a direct secondary benefit
+    of the replication scheme.
     """
     model = model or LatencyModel()
     rng = np.random.default_rng(seed)
     alive = np.asarray([s.alive for s in cluster.servers], bool)
-    n_local, n_remote, local_srv, rpc_srv = _path_costs(
-        pathset, cluster.scheme, alive
+    nq = pathset.n_queries
+    qids = np.asarray(pathset.query_ids)
+
+    start = backup_start = None
+    coord = None
+    has_backup = None
+    if router is not None and router.policy != "home":
+        roots = _query_roots(pathset)
+        if router.policy == "hedged":
+            coord, backup = router.route_roots_hedged(
+                roots, alive, seed=seed, load=cluster.queue_depths()
+            )
+            has_backup = backup >= 0
+            if has_backup.any():
+                backup_start = np.where(has_backup, backup, coord)[qids]
+        else:
+            coord = router.route_roots(
+                roots, alive, seed=seed, load=cluster.queue_depths()
+            )
+        start = coord[qids]
+
+    n_local, n_remote, local_srv, rpc_srv, dead = _path_costs(
+        pathset, cluster.scheme, alive, start
     )
 
     lat = model.sample(n_local.astype(np.float64), n_remote.astype(np.float64), rng)
@@ -165,15 +248,45 @@ def execute_workload(
         hedgeable = (n_copies.max(axis=1) > 1)
         lat = np.where(hedgeable, np.minimum(lat, alt), lat)
 
-    nq = pathset.n_queries
     q_lat = np.zeros(nq, np.float64)
     q_trav = np.zeros(nq, np.int64)
-    np.maximum.at(q_lat, pathset.query_ids, lat)
-    np.maximum.at(q_trav, pathset.query_ids, n_remote)
+    q_dead = np.zeros(nq, bool)
+    np.maximum.at(q_lat, qids, lat)
+    np.maximum.at(q_trav, qids, n_remote)
+    np.maximum.at(q_dead, qids, dead)
+
+    if backup_start is not None:
+        # race the backup coordinator pick: independent walk + jitter draw,
+        # keep the faster completion per query (min of two path-maxima).
+        b_local, b_remote, _, _, b_dead = _path_costs(
+            pathset, cluster.scheme, alive, backup_start
+        )
+        b_lat = model.sample(
+            b_local.astype(np.float64), b_remote.astype(np.float64), rng
+        )
+        bq_lat = np.zeros(nq, np.float64)
+        bq_trav = np.zeros(nq, np.int64)
+        bq_dead = np.zeros(nq, bool)
+        np.maximum.at(bq_lat, qids, b_lat)
+        np.maximum.at(bq_trav, qids, b_remote)
+        np.maximum.at(bq_dead, qids, b_dead)
+        # only queries with a real backup pick get the min-of-two; a lone
+        # copy holder has nothing to hedge against (its second walk would
+        # just be a free extra jitter draw)
+        faster = (bq_lat < q_lat) & has_backup
+        q_lat = np.where(faster, bq_lat, q_lat)
+        q_trav = np.where(faster, bq_trav, q_trav)
+        q_dead = q_dead & bq_dead  # failed only if both picks hit a dead end
 
     for s in cluster.servers:
         s.local_accesses += int(local_srv[s.server_id])
         s.remote_rpcs_in += int(rpc_srv[s.server_id])
+    if coord is not None:
+        counts = np.bincount(
+            np.maximum(coord, 0)[coord >= 0], minlength=cluster.n_servers
+        )
+        for s in cluster.servers:
+            s.queries_coordinated += int(counts[s.server_id])
 
     # throughput model: per-server service capacity is shared; the
     # bottleneck server's work bounds qps (open-loop approximation).
@@ -186,4 +299,5 @@ def execute_workload(
         per_server_local=local_srv,
         per_server_rpcs=rpc_srv,
         throughput_qps=qps,
+        query_failed=q_dead,
     )

@@ -121,23 +121,14 @@ def reference_eval(objects, lengths, mask, shard) -> np.ndarray:
 # Access trace (executor decoration): per-position visited server + locality.
 # ---------------------------------------------------------------------------
 @jax.jit
-def access_trace(objects, lengths, words, home):
-    """Walk Eqn 1 recording the visited server and locality per position.
-
-    ``home`` is a per-object routing target (the sharding function, or the
-    executor's fail-over map; may be -1 when no alive copy exists).
-
-    Returns (servers int32 [P, L], local bool [P, L]); position 0 counts as
-    local when the path is non-empty, matching the executor's accounting.
-    The distributed-traversal count is ``(valid[:, 1:] & ~local[:, 1:]).sum``.
-    """
+def _access_trace_impl(objects, lengths, words, home, start):
     P, L = objects.shape
     valid = jnp.arange(L)[None, :] < lengths[:, None]
     safe = jnp.maximum(objects, 0)
     hrows = home[safe]  # [P, L]
     wrows = words[safe]  # [P, L, W]
 
-    server0 = jnp.where(valid[:, 0], hrows[:, 0], 0).astype(jnp.int32)
+    server0 = jnp.where(valid[:, 0], start, 0).astype(jnp.int32)
 
     def step(server, xs):
         h_t, w_t, v_t = xs
@@ -163,6 +154,29 @@ def access_trace(objects, lengths, words, home):
         [valid[:, :1], jnp.moveaxis(loc_rest, 0, 1)], axis=1
     )
     return servers, local
+
+
+@jax.jit
+def _root_home(objects, home):
+    return home[jnp.maximum(objects[:, 0], 0)].astype(jnp.int32)
+
+
+def access_trace(objects, lengths, words, home, start=None):
+    """Walk Eqn 1 recording the visited server and locality per position.
+
+    ``home`` is a per-object routing target (the sharding function, or the
+    executor's fail-over map; may be -1 when no alive copy exists).
+    ``start`` optionally overrides the per-path start server (int32 [P]) —
+    the router's coordinator pick when it differs from ``home[root]``
+    (replica_lb / hedged routing); default is ``home[root]``.
+
+    Returns (servers int32 [P, L], local bool [P, L]); position 0 counts as
+    local when the path is non-empty, matching the executor's accounting.
+    The distributed-traversal count is ``(valid[:, 1:] & ~local[:, 1:]).sum``.
+    """
+    if start is None:
+        start = _root_home(objects, home)
+    return _access_trace_impl(objects, lengths, words, home, start)
 
 
 @jax.jit

@@ -1,0 +1,50 @@
+"""Online serving layer: simulator, drifting workloads, adaptive control.
+
+The first time-dimensioned layer of the system (ROADMAP: "serves heavy
+traffic from millions of users").  Three pieces:
+
+  simulator   — discrete-event serving simulator: open-loop Poisson/trace
+                arrivals, per-server FIFO queues, queries as routed hop
+                sequences from the engine's access trace; p50/p99/p999,
+                per-server utilization, throughput-vs-offered-load
+  drift       — time-phased query mixes + rotating root hotspots over the
+                SNB/GNN/recsys workloads, emitting PathSet deltas
+  controller  — sliding-window monitor + incremental repair: warm-started
+                greedy (``replicate_delta``) against the resident
+                PackedScheme, scheme deltas applied to the live Cluster,
+                RM-aware cold-replica eviction
+"""
+from repro.serve.simulator import SimReport, simulate
+from repro.serve.drift import (
+    DriftPhase,
+    PhaseDelta,
+    drift_stream,
+    gnn_drift,
+    hotspot_phases,
+    path_delta,
+    recsys_drift,
+    snb_drift,
+)
+from repro.serve.controller import (
+    AdaptationReport,
+    AdaptiveController,
+    ControllerConfig,
+    evict_cold_replicas,
+)
+
+__all__ = [
+    "SimReport",
+    "simulate",
+    "DriftPhase",
+    "PhaseDelta",
+    "drift_stream",
+    "path_delta",
+    "hotspot_phases",
+    "snb_drift",
+    "gnn_drift",
+    "recsys_drift",
+    "AdaptationReport",
+    "AdaptiveController",
+    "ControllerConfig",
+    "evict_cold_replicas",
+]

@@ -1,0 +1,311 @@
+"""Adaptive replication controller: close the loop around the greedy core.
+
+The paper's algorithm is offline — analyze the workload, replicate once,
+serve.  Under drift the hotspot moves and the scheme silently stops being
+feasible; rebuilding from scratch re-prices every path and re-ships the
+whole replica set.  This controller instead watches a **sliding window**
+of served queries and, on violation, repairs *incrementally*:
+
+  1. **monitor** — every completed batch feeds per-query traversal counts
+     (from the resident ``LatencyEngine``, one streamed evaluation) and,
+     when available, simulated wall-clock latencies into the window; the
+     trigger is either a feasibility violation (> ``violation_frac`` of
+     windowed queries exceed ``t`` traversals) or a wall-clock p99 SLO
+     breach;
+  2. **repair** — the *violating paths observed in the window* (a tiny
+     delta, not the workload) go through
+     :func:`repro.core.greedy.replicate_delta`: the batched Alg 2 UPDATE
+     warm-started against the engine's device-resident ``PackedScheme``
+     (bit-tests + scatter-OR adds, no rebuild, sound by Thm 5.3);
+  3. **apply** — the returned (object, server) delta lands on the live
+     ``Cluster`` via ``apply_scheme_delta`` (monotone mask flips) and its
+     resharding-map entries are recorded, so later reshards still work;
+  4. **evict** — when storage pressure exceeds capacity, replicas that are
+     cold (not touched by any windowed path) *and* unreferenced by the
+     §5.4 resharding map (RC == 0 — evicting them cannot strand a future
+     incremental reshard) are dropped, largest first, until the cluster
+     fits.  Eviction re-packs the engine (removals are not monotone).
+
+The controller never blocks serving: observe() is one engine evaluation
+plus (rarely) one warm-started greedy pass over a few hundred paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import numpy as np
+
+from repro.core.greedy import replicate_delta
+from repro.core.paths import PathSet
+from repro.core.reshard import ReshardingMap
+from repro.distsys.cluster import Cluster
+from repro.engine import LatencyEngine
+
+
+@dataclasses.dataclass
+class ControllerConfig:
+    t: int                                  # latency bound (traversals)
+    window: int = 1024                      # queries kept in the window
+    violation_frac: float = 0.01            # windowed infeasible-query frac
+    p99_slo_us: float | None = None         # optional wall-clock p99 SLO
+    capacity: np.ndarray | float | None = None
+    epsilon: float | None = None
+    min_queries: int = 64                   # don't trigger on tiny windows
+
+
+@dataclasses.dataclass
+class AdaptationReport:
+    """What one repair did (the benchmark's bytes-replicated accounting)."""
+
+    step: int
+    trigger: str                   # "feasibility" | "p99_slo"
+    paths_repaired: int
+    replicas_added: int
+    bytes_added: float
+    replicas_evicted: int
+    bytes_evicted: float
+    feasible_after: bool
+    runtime_s: float
+    additions: tuple[np.ndarray, np.ndarray] = dataclasses.field(
+        default=(np.zeros(0, np.int64), np.zeros(0, np.int64)), repr=False
+    )
+
+
+def evict_cold_replicas(
+    cluster: Cluster,
+    rmap: ReshardingMap,
+    active_objects: np.ndarray,
+    f: np.ndarray | None = None,
+    capacity: np.ndarray | float | None = None,
+) -> tuple[int, float]:
+    """Drop cold, RM-unreferenced replicas until every server fits.
+
+    Cost-aware in the §5.4 sense: only replicas with ``RC(v, s) == 0`` are
+    candidates — the resharding map holds no association that would have to
+    be re-transferred after an original-copy move — and originals and
+    window-active objects are never touched.  Within a server, largest
+    ``f(v)`` goes first (frees the most bytes per eviction).
+    """
+    scheme = cluster.scheme
+    if capacity is None:
+        return 0, 0.0
+    fv = (
+        np.ones(scheme.n_objects, np.float64)
+        if f is None
+        else np.asarray(f, np.float64)
+    )
+    cap = np.broadcast_to(
+        np.asarray(capacity, np.float64), (scheme.n_servers,)
+    )
+    load = scheme.storage_per_server(fv)
+    active = np.zeros(scheme.n_objects, bool)
+    active[np.asarray(active_objects, np.int64)] = True
+    n_evicted = 0
+    bytes_evicted = 0.0
+    for s in np.argsort(-(load - cap)):
+        if load[s] <= cap[s]:
+            continue
+        cands = np.nonzero(
+            scheme.mask[:, s] & (scheme.shard != s) & ~active
+        )[0]
+        cands = [
+            int(v) for v in cands if rmap.rc.get((int(v), int(s)), 0) == 0
+        ]
+        cands.sort(key=lambda v: -fv[v])
+        for v in cands:
+            if load[s] <= cap[s]:
+                break
+            scheme.mask[v, s] = False
+            load[s] -= fv[v]
+            n_evicted += 1
+            bytes_evicted += float(fv[v])
+    return n_evicted, bytes_evicted
+
+
+class AdaptiveController:
+    """Sliding-window monitor + incremental repair over a live cluster.
+
+    The controller shares the cluster's ``ReplicationScheme`` object with
+    its ``LatencyEngine``, so the engine's device-resident packed words,
+    the host mask, and the cluster's routing state stay one source of
+    truth: warm-start additions scatter-OR into the packed words and flip
+    the same host mask the router reads.
+    """
+
+    def __init__(
+        self,
+        cluster: Cluster,
+        config: ControllerConfig,
+        f: np.ndarray | None = None,
+        engine: LatencyEngine | None = None,
+        rmap: ReshardingMap | None = None,
+    ):
+        self.cluster = cluster
+        self.config = config
+        self.f = None if f is None else np.asarray(f, np.float32)
+        self.engine = engine or LatencyEngine(cluster.scheme)
+        assert self.engine.scheme is cluster.scheme, (
+            "controller engine must wrap the cluster's live scheme"
+        )
+        self.rmap = rmap or ReshardingMap({}, {})
+        # window: deque of (pathset, path_lats, n_queries, latency_us|None,
+        # n_queries_over_t) — the violation count is cached per entry so the
+        # per-batch monitoring path stays O(batch), not O(window)
+        self._window: deque = deque()
+        self._window_queries = 0
+        self.step = 0
+        self.reports: list[AdaptationReport] = []
+
+    # -- monitoring --------------------------------------------------------
+    def _count_bad(self, ps: PathSet, pl: np.ndarray, nq: int) -> int:
+        """Queries of one batch whose slowest path exceeds t."""
+        ql = np.zeros(nq, np.int32)
+        np.maximum.at(ql, np.asarray(ps.query_ids), pl)
+        return int((ql > self.config.t).sum())
+
+    def _window_stats(self, want_p99: bool = True) -> tuple[float, float | None]:
+        bad = 0
+        total = 0
+        lats: list[np.ndarray] = []
+        for _, _, nq, lat_us, n_bad in self._window:
+            bad += n_bad
+            total += nq
+            if want_p99 and lat_us is not None:
+                lats.append(lat_us)
+        frac = bad / total if total else 0.0
+        p99 = (
+            float(np.percentile(np.concatenate(lats), 99.0)) if lats else None
+        )
+        return frac, p99
+
+    def window_feasible_frac(self) -> float:
+        """1 - fraction of windowed queries exceeding t (diagnostics)."""
+        frac, _ = self._window_stats()
+        return 1.0 - frac
+
+    def observe(
+        self,
+        pathset: PathSet,
+        latency_us: np.ndarray | None = None,
+    ) -> AdaptationReport | None:
+        """Feed one served batch; repair and return a report on violation.
+
+        ``pathset`` is the batch's observed access paths (what the serving
+        layer routed); ``latency_us`` the simulator's per-query sojourn
+        times for the optional wall-clock SLO trigger.
+        """
+        self.step += 1
+        pl = self.engine.path_latencies(pathset)
+        nq = pathset.n_queries
+        self._window.append(
+            (pathset, pl, nq, latency_us, self._count_bad(pathset, pl, nq))
+        )
+        self._window_queries += nq
+        while (
+            self._window_queries > self.config.window
+            and len(self._window) > 1
+        ):
+            self._window_queries -= self._window.popleft()[2]
+
+        if self._window_queries < self.config.min_queries:
+            return None
+        # the percentile over the windowed latencies is the only O(window)
+        # part of monitoring — skip it unless a wall-clock SLO is configured
+        frac, p99 = self._window_stats(
+            want_p99=self.config.p99_slo_us is not None
+        )
+        trigger = None
+        if frac > self.config.violation_frac:
+            trigger = "feasibility"
+        elif (
+            self.config.p99_slo_us is not None
+            and p99 is not None
+            and p99 > self.config.p99_slo_us
+        ):
+            trigger = "p99_slo"
+        if trigger is None:
+            return None
+        return self._adapt(trigger)
+
+    # -- repair ------------------------------------------------------------
+    def _violating_paths(self) -> PathSet:
+        parts = []
+        for ps, pl, _, _, _ in self._window:
+            idx = np.nonzero(pl > self.config.t)[0]
+            if len(idx):
+                parts.append(ps.select(idx))
+        if not parts:
+            return PathSet.from_lists([])
+        return PathSet.concatenate(parts)
+
+    def _active_objects(self) -> np.ndarray:
+        objs = [
+            np.asarray(ps.objects).ravel() for ps, _, _, _, _ in self._window
+        ]
+        cat = np.concatenate(objs) if objs else np.zeros(0, np.int64)
+        return np.unique(cat[cat >= 0])
+
+    def _adapt(self, trigger: str) -> AdaptationReport:
+        t0 = time.perf_counter()
+        bad = self._violating_paths()
+        stats, (add_obj, add_srv) = replicate_delta(
+            bad,
+            self.engine,
+            self.config.t,
+            f=self.f,
+            capacity=self.config.capacity,
+            epsilon=self.config.epsilon,
+            track_rm=True,
+        )
+        # the engine already flipped the shared host mask; this records the
+        # delta through the cluster's own hook (idempotent monotone flips)
+        self.cluster.apply_scheme_delta(add_obj, add_srv)
+        for u, v, s in stats.rm or ():
+            self.rmap.rm.setdefault(int(u), set()).add(int(v))
+            self.rmap.rc[(int(v), int(s))] = (
+                self.rmap.rc.get((int(v), int(s)), 0) + 1
+            )
+
+        n_ev, bytes_ev = evict_cold_replicas(
+            self.cluster, self.rmap, self._active_objects(), self.f,
+            self.config.capacity,
+        )
+        if n_ev:
+            self.engine.refresh()  # removals are not monotone: re-pack
+
+        fv = (
+            np.ones(len(add_obj))
+            if self.f is None
+            else self.f[add_obj]
+        )
+        # re-evaluate the window against the repaired scheme: the stored
+        # per-path latencies are stale and would re-trigger forever, and the
+        # wall-clock latencies were measured against the pre-repair scheme —
+        # keeping them would make a queueing-only p99 breach re-fire no-op
+        # repairs until the batch ages out, so they are dropped too (the
+        # p99 trigger re-arms on fresh measurements).
+        feasible = True
+        fresh: deque = deque()
+        for ps, _, nq, _, _ in self._window:
+            pl = self.engine.path_latencies(ps)
+            n_bad = self._count_bad(ps, pl, nq)
+            fresh.append((ps, pl, nq, None, n_bad))
+            if n_bad:
+                feasible = False
+        self._window = fresh
+        report = AdaptationReport(
+            step=self.step,
+            trigger=trigger,
+            paths_repaired=bad.n_paths,
+            replicas_added=int(len(add_obj)),
+            bytes_added=float(np.sum(fv)) if len(add_obj) else 0.0,
+            replicas_evicted=n_ev,
+            bytes_evicted=bytes_ev,
+            feasible_after=feasible,
+            runtime_s=time.perf_counter() - t0,
+            additions=(add_obj, add_srv),
+        )
+        self.reports.append(report)
+        return report

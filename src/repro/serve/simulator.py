@@ -1,0 +1,360 @@
+"""Discrete-event serving simulator: the paper's latency model under load.
+
+The closed-form executor (``repro.distsys.executor``) prices each query in
+isolation — latency is the critical path's access costs plus jitter, with
+no queueing.  Under traffic that is exactly the regime where tail latency
+is decided: requests contend for per-server service capacity, and the p99
+the paper tunes (Fig 6b) emerges from queueing delay on the hottest
+server, not from the RPC constants.  This module adds the time dimension:
+
+* **open-loop arrivals** — Poisson at an offered ``rate_qps``, or an
+  explicit per-query arrival-time trace (replay / drift phases);
+* **per-server FIFO queues** — each server serves at most ``concurrency``
+  accesses at once (default 32, two hardware threads per vCPU on the
+  paper's 16-vCPU r5d.4xlarge servers); excess accesses wait in FIFO
+  order;
+* **queries as routed hop sequences** — each query's paths come from the
+  engine's access trace (Eqn 1 under liveness fail-over, the same walk the
+  executor decorates), so a path is a sequence of (server, service-time)
+  stages: local accesses cost ``local_us`` at the current server, each
+  distributed traversal costs ``remote_us`` at the hop's target server.
+  Sibling paths of a query run in parallel; the query completes when its
+  slowest path does, plus the coordinator barrier (Def 4.3);
+* **router integration** — ``replica_lb`` picks, per arrival, whichever of
+  the router's primary/backup coordinators has the shorter live queue
+  (queue-aware routing through ``Cluster.queue_depths``-style state);
+  ``hedged`` launches both and keeps the first completion (the loser's
+  stages still occupy servers — hedging's capacity price is modeled, not
+  assumed away).
+
+At utilization -> 0 queueing delay vanishes and the simulator's mean
+latency converges to the closed-form model (same access counts, same
+service constants, same lognormal jitter mean) — ``benchmarks/serve_tail``
+checks the two agree within 10%.  Accesses whose object has no alive copy
+(visited server -1) complete degraded after ``remote_us`` without queueing
+and mark the query failed rather than crashing the run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import deque
+
+import numpy as np
+
+from repro.core.paths import PathSet
+from repro.distsys.cluster import Cluster
+from repro.distsys.executor import LatencyModel, _query_roots, trace_paths
+from repro.distsys.router import Router
+
+
+@dataclasses.dataclass
+class SimReport:
+    """Statistics of one simulated serving run (all times microseconds)."""
+
+    latency_us: np.ndarray        # [n_queries] completion - arrival
+    arrival_us: np.ndarray        # [n_queries]
+    query_failed: np.ndarray      # [n_queries] hit an object with no copy
+    busy_us: np.ndarray           # [S] total service time per server
+    queue_wait_us: float          # mean FIFO wait per stage
+    duration_us: float            # makespan (last completion)
+    offered_qps: float
+    concurrency: int
+
+    def percentile(self, q: float) -> float:
+        return float(np.percentile(self.latency_us, q))
+
+    @property
+    def mean_us(self) -> float:
+        return float(self.latency_us.mean())
+
+    @property
+    def p50_us(self) -> float:
+        return self.percentile(50.0)
+
+    @property
+    def p99_us(self) -> float:
+        return self.percentile(99.0)
+
+    @property
+    def p999_us(self) -> float:
+        return self.percentile(99.9)
+
+    @property
+    def achieved_qps(self) -> float:
+        if self.duration_us <= 0:
+            return float("inf")
+        return len(self.latency_us) / (self.duration_us / 1e6)
+
+    def utilization(self) -> np.ndarray:
+        """Busy fraction per server (of duration x concurrency)."""
+        if self.duration_us <= 0:
+            return np.zeros_like(self.busy_us)
+        return self.busy_us / (self.duration_us * self.concurrency)
+
+    def summary(self) -> dict:
+        util = self.utilization()
+        return {
+            "mean_us": self.mean_us,
+            "p50_us": self.p50_us,
+            "p99_us": self.p99_us,
+            "p999_us": self.p999_us,
+            "offered_qps": self.offered_qps,
+            "achieved_qps": self.achieved_qps,
+            "max_utilization": float(util.max()) if util.size else 0.0,
+            "mean_queue_wait_us": self.queue_wait_us,
+            "failed_queries": int(self.query_failed.sum()),
+        }
+
+
+def _build_variant(
+    pathset: PathSet,
+    cluster: Cluster,
+    model: LatencyModel,
+    alive: np.ndarray,
+    start: np.ndarray | None,
+):
+    """Precompute one routing variant's per-query access trees.
+
+    A query's root-to-leaf paths share prefixes (they enumerate one access
+    tree, Def 4.1); each shared access executes *once* and fans out — the
+    same structure the closed-form model prices with its max-over-paths.
+    Returns (trees_per_query, dead_per_query) where a tree is
+    ``(nodes, roots)``: ``nodes[i] = [server, base_service_us, children]``
+    and ``roots`` the indices dispatched at arrival.
+    """
+    servers, local = trace_paths(pathset, cluster.scheme, alive, start)
+    nq = pathset.n_queries
+    trees: list[tuple[list, list[int]]] = [([], []) for _ in range(nq)]
+    tries: list[dict] = [dict() for _ in range(nq)]
+    dead = np.zeros(nq, bool)
+    qids = np.asarray(pathset.query_ids)
+    lengths = np.asarray(pathset.lengths)
+    objects = np.asarray(pathset.objects)
+    for p in range(pathset.n_paths):
+        q = int(qids[p])
+        n = int(lengths[p])
+        if n == 0:
+            continue
+        nodes, roots = trees[q]
+        trie = tries[q]
+        prefix: tuple = ()
+        parent = -1
+        for x in range(n):
+            prefix = prefix + (int(objects[p, x]),)
+            idx = trie.get(prefix)
+            if idx is None:
+                s = int(servers[p, x])
+                if s < 0:
+                    dead[q] = True
+                cost = (
+                    model.local_us if bool(local[p, x]) else model.remote_us
+                )
+                idx = len(nodes)
+                nodes.append([s, cost, []])
+                trie[prefix] = idx
+                if parent < 0:
+                    roots.append(idx)
+                else:
+                    nodes[parent][2].append(idx)
+            parent = idx
+    return trees, dead
+
+
+def simulate(
+    cluster: Cluster,
+    pathset: PathSet,
+    rate_qps: float = 1e4,
+    model: LatencyModel | None = None,
+    arrivals_us: np.ndarray | None = None,
+    concurrency: int = 32,
+    router: Router | None = None,
+    seed: int = 0,
+) -> SimReport:
+    """Serve ``pathset``'s queries through per-server FIFO queues.
+
+    Queries arrive open-loop (Poisson at ``rate_qps``, or at the explicit
+    ``arrivals_us`` times) in query-id order; each executes its routed hop
+    sequence against the live cluster state.  Returns per-query sojourn
+    latencies and per-server occupancy — the quantities the controller's
+    sliding window and the tail benchmarks consume.
+    """
+    model = model or LatencyModel()
+    rng = np.random.default_rng(seed)
+    alive = np.asarray([s.alive for s in cluster.servers], bool)
+    S = cluster.n_servers
+    nq = pathset.n_queries
+    if nq == 0:
+        return SimReport(
+            latency_us=np.zeros(0), arrival_us=np.zeros(0),
+            query_failed=np.zeros(0, bool), busy_us=np.zeros(S),
+            queue_wait_us=0.0, duration_us=0.0, offered_qps=rate_qps,
+            concurrency=concurrency,
+        )
+
+    # --- routing variants -------------------------------------------------
+    policy = router.policy if router is not None else "home"
+    if router is not None and policy in ("replica_lb", "hedged"):
+        roots = _query_roots(pathset)
+        primary, backup = router.route_roots_hedged(roots, alive, seed=seed)
+        qids = np.asarray(pathset.query_ids)
+        v1, d1 = _build_variant(
+            pathset, cluster, model, alive, primary[qids]
+        )
+        has_b = backup >= 0
+        v2, d2 = _build_variant(
+            pathset, cluster, model, alive,
+            np.where(has_b, backup, primary)[qids],
+        )
+        variants_trees = [v1, v2]
+        variants_dead = [d1, d2]
+        coords = [primary, np.where(has_b, backup, -1)]
+    else:
+        policy = "home"
+        v0, d0 = _build_variant(pathset, cluster, model, alive, None)
+        variants_trees = [v0]
+        variants_dead = [d0]
+        coords = [None]
+
+    # --- event loop -------------------------------------------------------
+    if arrivals_us is None:
+        arrivals_us = np.cumsum(
+            rng.exponential(1e6 / rate_qps, size=nq)
+        )
+    else:
+        arrivals_us = np.asarray(arrivals_us, np.float64)
+        assert arrivals_us.shape == (nq,)
+
+    queues: list[deque] = [deque() for _ in range(S)]
+    busy = np.zeros(S, np.int64)
+    busy_us = np.zeros(S, np.float64)
+    completion = np.full(nq, -1.0)
+    failed = np.zeros(nq, bool)
+    n_waits = 0
+    wait_us = 0.0
+
+    # a "job" is one access-tree node instance of one (query, variant)
+    # launch: job = (query, variant, node_idx); per-(query, variant)
+    # remaining-node counters decide completion (all accesses done =
+    # slowest root-to-leaf chain done).
+    remaining: dict[tuple[int, int], int] = {}
+
+    heap: list[tuple[float, int, str, object]] = []
+    seq = 0
+
+    def push(t, kind, data):
+        nonlocal seq
+        heapq.heappush(heap, (t, seq, kind, data))
+        seq += 1
+
+    def jitter():
+        return rng.lognormal(0.0, model.jitter_sigma)
+
+    def node_of(job):
+        q, v, i = job
+        return variants_trees[v][q][0][i]
+
+    def start_service(t, s, job):
+        busy[s] += 1
+        svc = node_of(job)[1] * jitter()
+        busy_us[s] += svc
+        push(t + svc, "done", (s, job))
+
+    def dispatch(t, job):
+        s = node_of(job)[0]
+        if s < 0:
+            # no alive copy anywhere: degraded completion, no queueing
+            push(t + model.remote_us, "advance", job)
+            return
+        if busy[s] < concurrency:
+            start_service(t, s, job)
+        else:
+            queues[s].append((t, job))
+
+    def advance(t, job):
+        q, v, i = job
+        for child in node_of(job)[2]:
+            dispatch(t, (q, v, child))
+        remaining[(q, v)] -= 1
+        if remaining[(q, v)] == 0 and completion[q] < 0:
+            completion[q] = t + model.coordinator_us
+
+    def launch(t, q, v):
+        nodes, roots = variants_trees[v][q]
+        remaining[(q, v)] = len(nodes)
+        if not nodes:
+            completion[q] = t + model.coordinator_us
+            return
+        for i in roots:
+            dispatch(t, (q, v, i))
+
+    for q in range(nq):
+        push(float(arrivals_us[q]), "arrive", q)
+
+    arrivals_left = nq
+    live_depth = np.zeros(S, np.int64)
+    live_busy = np.zeros(S, np.int64)
+
+    while heap:
+        t, _, kind, data = heapq.heappop(heap)
+        if kind == "arrive":
+            q = data
+            arrivals_left -= 1
+            if arrivals_left == 0:
+                # snapshot queueing state while traffic is still in flight
+                # (the drained end state is always empty) — this is what
+                # Cluster.queue_depths() hands the router between batches
+                live_depth = np.asarray([len(qu) for qu in queues], np.int64)
+                live_busy = busy.copy()
+            if policy == "hedged":
+                # race both coordinator picks; first completion wins
+                launch(t, q, 0)
+                failed[q] = variants_dead[0][q]
+                if coords[1][q] >= 0:
+                    launch(t, q, 1)
+                    failed[q] = failed[q] and variants_dead[1][q]
+            elif policy == "replica_lb":
+                # queue-aware: per arrival, the less-loaded coordinator
+                c1, c2 = int(coords[0][q]), int(coords[1][q])
+                v = 0
+                if c2 >= 0 and c1 >= 0:
+                    l1 = busy[c1] + len(queues[c1])
+                    l2 = busy[c2] + len(queues[c2])
+                    v = 1 if l2 < l1 else 0
+                launch(t, q, v)
+                failed[q] = variants_dead[v][q]
+            else:
+                launch(t, q, 0)
+                failed[q] = variants_dead[0][q]
+        elif kind == "done":
+            s, job = data
+            busy[s] -= 1
+            if queues[s]:
+                t_enq, nxt = queues[s].popleft()
+                n_waits += 1
+                wait_us += t - t_enq
+                start_service(t, s, nxt)
+            advance(t, job)
+        else:  # "advance" (degraded hop completion)
+            advance(t, data)
+
+    done = completion >= 0
+    assert done.all(), "simulator leaked queries"
+    duration = float(completion.max() - arrivals_us.min()) if nq else 0.0
+
+    # expose the in-flight queueing state (sampled at the last arrival)
+    # through the cluster's queue-aware hooks
+    for s in cluster.servers:
+        s.queue_depth = int(live_depth[s.server_id])
+        s.busy = int(live_busy[s.server_id])
+
+    return SimReport(
+        latency_us=completion - arrivals_us,
+        arrival_us=arrivals_us,
+        query_failed=failed,
+        busy_us=busy_us,
+        queue_wait_us=wait_us / n_waits if n_waits else 0.0,
+        duration_us=duration,
+        offered_qps=rate_qps,
+        concurrency=concurrency,
+    )

@@ -30,6 +30,21 @@ def pytest_collection_modifyitems(config, items):
             item.add_marker(skip)
 
 
+@pytest.fixture(autouse=True)
+def _reset_transfer_counters():
+    """Zero the engine's global transfer accounting around every test.
+
+    ``repro.engine.TRANSFER`` is process-global; without this, a test
+    asserting on h2d/d2h byte counts would see traffic from whichever
+    tests happened to run before it.
+    """
+    from repro.engine import TRANSFER
+
+    TRANSFER.reset()
+    yield
+    TRANSFER.reset()
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

@@ -80,6 +80,62 @@ def test_router_failover():
     assert out[0] == 2
 
 
+def test_router_failover_no_live_replica():
+    """Dead home and no alive copy anywhere must route to -1, not crash."""
+    shard = np.asarray([0, 1], np.int32)
+    scheme = ReplicationScheme.from_sharding(shard, 3)
+    scheme.mask[1, 2] = True  # object 1 has a backup copy; object 0 doesn't
+    alive = np.asarray([False, True, True])
+    roots = np.asarray([0, 1])
+    for policy in ("home", "replica_lb", "hedged"):
+        out = Router(scheme, policy).route_roots(roots, alive)
+        assert out[0] == -1          # dead home, no live replica
+        assert out[1] in (1, 2)      # dead home, live replica -> fail-over
+    primary, backup = Router(scheme, "hedged").route_roots_hedged(roots, alive)
+    assert primary[0] == -1 and backup[0] == -1
+    assert primary[1] in (1, 2)
+
+
+def test_router_hedged_primary_backup_distinct():
+    shard = np.asarray([0, 0], np.int32)
+    scheme = ReplicationScheme.from_sharding(shard, 3)
+    scheme.mask[0, 1] = True     # object 0: copies at {0, 1}
+    roots = np.asarray([0, 1])   # object 1: single copy at 0
+    primary, backup = Router(scheme, "hedged").route_roots_hedged(roots)
+    assert backup[0] >= 0 and backup[0] != primary[0]
+    assert scheme.mask[0, primary[0]] and scheme.mask[0, backup[0]]
+    assert backup[1] == -1       # nothing to hedge against
+
+
+def test_executor_surfaces_failed_queries():
+    """Object with no alive copy: failed query reported, run completes."""
+    from repro.core.paths import PathSet
+
+    shard = np.asarray([0, 1, 1], np.int32)
+    scheme = ReplicationScheme.from_sharding(shard, 2)
+    ps = PathSet.from_lists([[0, 1], [1, 2]])  # query 0 needs server 0
+    cl = Cluster(scheme)
+    cl.fail_server(0)
+    rep = execute_workload(cl, ps, seed=0)
+    assert rep.query_failed is not None
+    assert bool(rep.query_failed[0])       # root had no alive copy
+    assert not bool(rep.query_failed[1])   # fully on the alive server
+    assert rep.n_failed == 1
+    assert np.isfinite(rep.query_latency_us).all()
+    assert rep.summary()["failed_queries"] == 1
+
+
+def test_executor_hedged_router_min_completion(rng):
+    ps, shard = random_workload(rng, n_paths=300)
+    scheme, _ = replicate_workload(ps, shard, 5, t=0)
+    cl = Cluster(scheme)
+    base = execute_workload(cl, ps, seed=5)
+    hedged = execute_workload(cl, ps, seed=5, router=Router(scheme, "hedged"))
+    # min-of-two completions can only help the tail (same latency model)
+    assert hedged.p99_us <= base.p99_us * 1.05
+    assert np.isfinite(hedged.query_latency_us).all()
+
+
 def test_checkpoint_roundtrip_and_retention():
     with tempfile.TemporaryDirectory() as d:
         mgr = CheckpointManager(d, keep=2)

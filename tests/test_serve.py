@@ -1,0 +1,223 @@
+"""Serving layer: simulator queueing, drift deltas, adaptive controller."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    is_latency_feasible,
+    replicate_delta,
+    replicate_workload,
+)
+from repro.core.paths import PathSet
+from repro.distsys import Cluster, LatencyModel, Router, execute_workload
+from repro.engine import LatencyEngine
+from repro.serve import (
+    AdaptiveController,
+    ControllerConfig,
+    drift_stream,
+    hotspot_phases,
+    path_delta,
+    simulate,
+)
+from tests.conftest import random_workload
+
+
+# ---------------------------------------------------------------------------
+# fixtures
+# ---------------------------------------------------------------------------
+def synthetic_phases(n_phases=2, n_obj=300, n_srv=5, queries=120, seed=0):
+    """Small drifting workload: 3-hop chains rooted in a rotating hot set."""
+
+    def for_phase(k, rng):
+        def paths_fn(root):
+            a = int(rng.integers(0, n_obj))
+            b = int(rng.integers(0, n_obj))
+            return [[int(root) % n_obj, a, b]]
+
+        return paths_fn
+
+    return hotspot_phases(
+        for_phase,
+        np.arange(n_obj),
+        n_phases=n_phases,
+        queries_per_phase=queries,
+        hot_frac=0.08,
+        hot_prob=0.9,
+        seed=seed,
+    )
+
+
+# ---------------------------------------------------------------------------
+# simulator
+# ---------------------------------------------------------------------------
+def test_sim_lowload_matches_closed_form(rng):
+    ps, shard = random_workload(rng, n_paths=300, n_queries=200)
+    scheme, _ = replicate_workload(ps, shard, 5, t=1)
+    model = LatencyModel()
+    sim = simulate(Cluster(scheme), ps, rate_qps=200, model=model, seed=2)
+    closed = execute_workload(Cluster(scheme), ps, model, seed=2)
+    assert abs(sim.mean_us - closed.mean_us) / closed.mean_us < 0.10
+
+
+def test_sim_p99_grows_with_offered_load(rng):
+    ps, shard = random_workload(rng, n_paths=400, n_queries=250)
+    scheme, _ = replicate_workload(ps, shard, 5, t=2)
+    cl = Cluster(scheme)
+    lo = simulate(cl, ps, rate_qps=500, seed=3, concurrency=2)
+    hi = simulate(cl, ps, rate_qps=500_000, seed=3, concurrency=2)
+    assert hi.p99_us > lo.p99_us * 1.5
+    assert hi.utilization().max() > lo.utilization().max()
+    assert hi.queue_wait_us > lo.queue_wait_us
+
+
+def test_sim_routing_policies_and_failure(rng):
+    ps, shard = random_workload(rng, n_paths=200, n_queries=120)
+    scheme, _ = replicate_workload(ps, shard, 5, t=0)
+    cl = Cluster(scheme)
+    for policy in ("replica_lb", "hedged"):
+        rep = simulate(
+            cl, ps, rate_qps=5_000, router=Router(scheme, policy), seed=4
+        )
+        assert np.isfinite(rep.latency_us).all()
+        assert len(rep.latency_us) == ps.n_queries
+    # all servers of some object dead -> failed queries surface, no crash
+    cl.fail_server(0)
+    cl.fail_server(1)
+    rep = simulate(cl, ps, rate_qps=5_000, seed=4)
+    assert np.isfinite(rep.latency_us).all()
+
+
+# ---------------------------------------------------------------------------
+# drift
+# ---------------------------------------------------------------------------
+def test_drift_phases_produce_path_deltas():
+    phases = synthetic_phases(n_phases=3, seed=1)
+    deltas = list(drift_stream(phases))
+    assert deltas[0].added.n_paths == phases[0].pathset.n_paths
+    for d in deltas[1:]:
+        # the hotspot moved: a substantial share of paths is new
+        assert d.added.n_paths > 0
+        assert d.n_removed > 0
+    # hot root sets rotate between phases
+    assert not np.intersect1d(
+        phases[0].hot_roots, phases[1].hot_roots
+    ).size == len(phases[0].hot_roots)
+
+
+def test_path_delta_identity_and_disjoint():
+    ps = PathSet.from_lists([[0, 1], [2, 3]])
+    added, removed = path_delta(ps, ps)
+    assert added.n_paths == 0 and removed == 0
+    other = PathSet.from_lists([[4, 5]])
+    added, removed = path_delta(ps, other)
+    assert added.n_paths == 1 and removed == 2
+
+
+# ---------------------------------------------------------------------------
+# controller
+# ---------------------------------------------------------------------------
+def test_controller_converges_after_drift():
+    phases = synthetic_phases(n_phases=2, queries=150, seed=5)
+    n_obj, n_srv = 300, 5
+    rng = np.random.default_rng(0)
+    shard = rng.integers(0, n_srv, n_obj).astype(np.int32)
+    scheme, _, eng = replicate_workload(
+        phases[0].pathset, shard, n_srv, t=1, return_engine=True
+    )
+    assert is_latency_feasible(phases[0].pathset, scheme, 1)
+    cluster = Cluster(scheme)
+    ctl = AdaptiveController(
+        cluster,
+        ControllerConfig(t=1, window=300, min_queries=20),
+        engine=eng,
+    )
+    # the drifted phase violates the bound; the controller repairs it
+    drifted = phases[1].pathset
+    assert not is_latency_feasible(drifted, scheme, 1)
+    report = ctl.observe(drifted)
+    assert report is not None and report.trigger == "feasibility"
+    assert report.replicas_added > 0
+    assert report.feasible_after
+    assert is_latency_feasible(drifted, cluster.scheme, 1)
+    # engine (packed) and cluster scheme stayed in sync
+    assert np.array_equal(eng.host_mask(), cluster.scheme.mask)
+    # quiet stream afterwards: no further adaptation
+    assert ctl.observe(drifted) is None
+
+
+def test_incremental_matches_rebuild_on_aligned_batches():
+    """replicate_delta == tail batches of one from-scratch greedy run."""
+    rng = np.random.default_rng(7)
+    n_obj, n_srv, bs = 90, 4, 64
+    mk = lambda n: [
+        rng.integers(0, n_obj, rng.integers(2, 6)).tolist() for _ in range(n)
+    ]
+    a, b = mk(bs), mk(40)
+    shard = rng.integers(0, n_srv, n_obj).astype(np.int32)
+    psa = PathSet.from_lists(a, max_len=6)
+    psb = PathSet.from_lists(b, max_len=6)
+    psab = PathSet.from_lists(a + b, max_len=6)
+
+    _, _, eng = replicate_workload(
+        psa, shard, n_srv, t=1, prune=False, batch_size=bs,
+        return_engine=True,
+    )
+    stats, (objs, srvs) = replicate_delta(
+        psb, eng, t=1, prune=False, batch_size=bs
+    )
+    full, _ = replicate_workload(
+        psab, shard, n_srv, t=1, prune=False, batch_size=bs
+    )
+    assert np.array_equal(eng.host_mask(), full.mask)
+    assert is_latency_feasible(psab, eng.to_scheme(), 1)
+    # the returned delta is exactly the new copies
+    delta_mask = np.zeros_like(full.mask)
+    delta_mask[objs, srvs] = True
+    before = replicate_workload(
+        psa, shard, n_srv, t=1, prune=False, batch_size=bs
+    )[0].mask
+    assert np.array_equal(full.mask & ~before, delta_mask)
+
+
+def test_controller_p99_trigger_rearms_on_fresh_latencies():
+    """A queueing-only p99 breach must not re-fire no-op repairs forever."""
+    n_obj, n_srv = 40, 3
+    rng = np.random.default_rng(11)
+    shard = rng.integers(0, n_srv, n_obj).astype(np.int32)
+    ps = PathSet.from_lists([[i, (i + 1) % n_obj] for i in range(n_obj)])
+    scheme, _, eng = replicate_workload(
+        ps, shard, n_srv, t=2, return_engine=True
+    )
+    assert is_latency_feasible(ps, scheme, 2)  # no feasibility violation
+    ctl = AdaptiveController(
+        Cluster(scheme),
+        ControllerConfig(t=2, window=200, min_queries=10, p99_slo_us=100.0),
+        engine=eng,
+    )
+    slow = np.full(ps.n_queries, 500.0)  # queueing pushed p99 over the SLO
+    report = ctl.observe(ps, latency_us=slow)
+    assert report is not None and report.trigger == "p99_slo"
+    # stale pre-repair latencies were dropped: the same feasible window
+    # must not re-trigger until fresh measurements breach the SLO again
+    assert ctl.observe(ps) is None
+    fast = np.full(ps.n_queries, 50.0)
+    assert ctl.observe(ps, latency_us=fast) is None
+
+
+def test_controller_eviction_respects_capacity():
+    from repro.serve import evict_cold_replicas
+    from repro.core import ReshardingMap, ReplicationScheme
+
+    shard = np.zeros(6, np.int32)
+    scheme = ReplicationScheme.from_sharding(shard, 3)
+    scheme.mask[:, 1] = True  # replicas of everything at server 1
+    cluster = Cluster(scheme)
+    rmap = ReshardingMap({}, {(0, 1): 1})  # object 0's replica is RM-pinned
+    n, b = evict_cold_replicas(
+        cluster, rmap, active_objects=np.asarray([1]), capacity=2.0
+    )
+    load = scheme.storage_per_server()
+    assert load[1] <= 2.0
+    assert n > 0 and b > 0
+    assert scheme.mask[0, 1]  # RM-referenced replica survived
+    assert scheme.mask[1, 1]  # window-active replica survived
+    assert scheme.mask[:, 0].all()  # originals untouched
