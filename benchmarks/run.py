@@ -9,6 +9,8 @@
   engine_backends       — LatencyEngine backend/chunk/transfer micro-bench
   perf_iterate          — engine transfer profile (resident vs legacy h2d)
   serve_tail            — serving simulator p99 vs load + controller value
+  tenant_frontier       — multi-tenant SLOs: vector-t frontier, per-tenant
+                          p99 static vs arbitrating controller
 
 Usage: PYTHONPATH=src python -m benchmarks.run [module ...]
 Prints ``bench,metric,tags,value`` CSV.
@@ -19,7 +21,8 @@ import time
 
 MODULES = ["fig2_traversals", "fig6_latency_tradeoff", "fig7_sharding",
            "table4_runtime", "reshard_cost", "beyond_paper",
-           "engine_backends", "perf_iterate", "serve_tail"]
+           "engine_backends", "perf_iterate", "serve_tail",
+           "tenant_frontier"]
 
 # zero-arg entry point per module when it isn't ``run`` (perf_iterate's
 # ``run`` is the arch-cell driver; its benchmark entry is ``run_engine``)

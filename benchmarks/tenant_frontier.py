@@ -1,0 +1,240 @@
+"""Multi-tenant SLO benchmark: vector-t frontier + per-tenant serving.
+
+Three measurements, written to ``BENCH_tenants.json`` (and emitted as CSV
+rows via ``benchmarks.common``):
+
+  1. **scalar-vs-vector parity** — on the fig6 SNB workload,
+     ``replicate_workload(t=k)`` and
+     ``replicate_workload(SLOSpec.uniform(k))`` must produce bit-identical
+     replication masks (the degenerate case really is degenerate);
+  2. **replication-cost frontier** — a two-tenant workload (SNB short
+     reads + GNN sampling over the same graph/object space): the GNN
+     tenant's t_Q tightens step by step while SNB's holds, and the
+     f-weighted replication overhead must rise monotonically — the
+     cost-of-SLO curve a capacity planner reads;
+  3. **per-tenant p99 under drift** — both tenants' hotspots move
+     (scripted drift phases); the drifted phase is served at load on the
+     static phase-0 scheme and on a cluster repaired by the multi-tenant
+     arbitrating controller.  The controller run must show a lower p99
+     for every tenant.
+
+Usage: PYTHONPATH=src python -m benchmarks.tenant_frontier [out.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import build_snb_setup, emit
+from repro.core import PathSet, SLOSpec, replicate_workload
+from repro.distsys import Cluster, LatencyModel
+from repro.graph import make_sharding, snb_like
+from repro.serve import (
+    AdaptiveController,
+    ControllerConfig,
+    gnn_drift,
+    simulate,
+    snb_drift,
+)
+from repro.workload import (
+    gnn_workload_materialized,
+    multi_tenant_workload,
+    snb_workload_materialized,
+)
+
+N_SERVERS = 6
+T_SNB = 1                      # the holding tenant's budget
+GNN_SWEEP = (3, 2, 1, 0)       # the tightening tenant's budgets
+QUERIES_PER_PHASE = 400
+BATCH_QUERIES = 100
+DRIFT_RATE_QPS = 20_000.0
+
+
+def _parity(result: dict) -> None:
+    """Scalar t and SLOSpec.uniform(t) must produce identical masks."""
+    _, ps, shard = build_snb_setup(sharding="hash")
+    rows = []
+    for t in (0, 1, 2):
+        a, _ = replicate_workload(ps, shard, N_SERVERS, t)
+        b, _ = replicate_workload(
+            ps, shard, N_SERVERS, SLOSpec.uniform(t, ps.n_queries)
+        )
+        same = bool(np.array_equal(a.mask, b.mask))
+        rows.append({"t": t, "masks_identical": same})
+        emit("tenant_frontier", "scalar_vector_parity", same, t=t)
+        assert same, f"scalar t={t} and SLOSpec.uniform({t}) masks diverge"
+    result["parity"] = rows
+
+
+def _frontier(result: dict) -> None:
+    """Cost frontier as the GNN tenant's t_Q tightens while SNB holds."""
+    snb = snb_like(1, seed=0)
+    g = snb.graph
+    f = g.object_sizes().astype(np.float32)
+    shard = make_sharding("hash", g, N_SERVERS, seed=0)
+    rng = np.random.default_rng(0)
+    sps = snb_workload_materialized(snb, n_queries=500, seed=0)
+    gps = gnn_workload_materialized(
+        g, rng.integers(0, g.n_nodes, 250), (6, 4), seed=0
+    )
+    rows = []
+    prev = -1.0
+    for t_gnn in GNN_SWEEP:
+        ps, slo = multi_tenant_workload(
+            [("snb", sps), ("gnn", gps)],
+            budgets={"snb": T_SNB, "gnn": t_gnn},
+        )
+        scheme, stats = replicate_workload(ps, shard, N_SERVERS, slo, f=f)
+        overhead = scheme.replication_overhead(f)
+        rows.append(
+            {
+                "t_snb": T_SNB,
+                "t_gnn": t_gnn,
+                "overhead": round(overhead, 4),
+                "replicas": stats.replicas,
+                "failed_paths": stats.failed_paths,
+            }
+        )
+        emit("tenant_frontier", "overhead", round(overhead, 4),
+             t_gnn=t_gnn, t_snb=T_SNB)
+        assert overhead >= prev - 1e-9, (
+            "replication cost must not drop as one tenant's t_Q tightens"
+        )
+        prev = overhead
+    result["frontier"] = rows
+    result["frontier_monotone"] = True
+
+
+def _drift(result: dict) -> None:
+    """Per-tenant p99 on the drifted phase: static vs controller-on."""
+    snb = snb_like(1, seed=0)
+    g = snb.graph
+    f = g.object_sizes().astype(np.float32)
+    shard = make_sharding("hash", g, N_SERVERS, seed=0)
+    model = LatencyModel()
+
+    s_phases = snb_drift(
+        snb, n_phases=3, queries_per_phase=QUERIES_PER_PHASE, seed=0
+    )
+    g_phases = gnn_drift(
+        g, n_phases=3, queries_per_phase=QUERIES_PER_PHASE // 2,
+        fanouts=(6, 4), seed=0,
+    )
+    # gnn serves at budget 1 here: its 2-hop sampling paths are trivially
+    # within the family default t=2, which would leave the drifted phase
+    # with nothing to repair (and nothing to measure)
+    phases = [
+        multi_tenant_workload(
+            [("snb", sp.pathset), ("gnn", gp.pathset)],
+            budgets={"snb": T_SNB, "gnn": 1},
+        )
+        for sp, gp in zip(s_phases, g_phases)
+    ]
+
+    ps0, slo0 = phases[0]
+    static_scheme, _ = replicate_workload(ps0, shard, N_SERVERS, slo0, f=f)
+    static_cluster = Cluster(static_scheme, f=f)
+
+    ctl_scheme = static_scheme.copy()
+    ctl_cluster = Cluster(ctl_scheme, f=f)
+    # finite capacity headroom => simultaneous tenant repairs arbitrate
+    cap = float(static_scheme.storage_per_server(f).max() * 2.5)
+    controller = AdaptiveController(
+        ctl_cluster,
+        ControllerConfig(
+            window=4 * BATCH_QUERIES,
+            min_queries=BATCH_QUERIES // 2,
+            capacity=cap,
+            demote_after=3,
+            tenants=tuple(slo0.tenants),
+        ),
+        f=f,
+    )
+    deferrals = 0
+    adaptations = 0
+    for (ps, slo), sp, gp in zip(phases, s_phases, g_phases):
+        # interleave the tenants within each served batch (they share the
+        # cluster in production): one snb slice + one gnn slice per round,
+        # so both windows fill together and their repairs can actually
+        # contend for the capacity headroom
+        n_s = sp.pathset.n_queries
+        n_g = gp.pathset.n_queries
+        rounds = max(1, -(-n_s // BATCH_QUERIES))
+        bs_g = max(1, -(-n_g // rounds))
+        for r in range(rounds):
+            s_lo, s_hi = r * BATCH_QUERIES, min((r + 1) * BATCH_QUERIES, n_s)
+            g_lo = n_s + r * bs_g
+            g_hi = n_s + min((r + 1) * bs_g, n_g)
+            sections = [
+                (ps.select_queries(s_lo, s_hi), slo.select_queries(s_lo, s_hi)),
+                (ps.select_queries(g_lo, g_hi), slo.select_queries(g_lo, g_hi)),
+            ]
+            batch = PathSet.concatenate([p for p, _ in sections])
+            # align each section's spec to its pathset before concat:
+            # PathSet.concatenate offsets by the pathset's query count,
+            # which undercounts a slice whose trailing queries are pathless
+            batch_slo = SLOSpec.concat(
+                [s.align_to(p) for p, s in sections]
+            )
+            assert batch_slo.n_queries == batch.n_queries
+            if batch.n_paths == 0:
+                continue
+            rep = simulate(
+                ctl_cluster, batch, rate_qps=DRIFT_RATE_QPS, model=model,
+                seed=r, slo=batch_slo,
+            )
+            act = controller.observe(
+                batch, latency_us=rep.latency_us, slo=batch_slo,
+            )
+            if act is not None:
+                adaptations += 1
+                deferrals += len(act.deferred)
+
+    drifted_ps, drifted_slo = phases[-1]
+    per_tenant = []
+    for name, cluster in (("static", static_cluster),
+                          ("controller", ctl_cluster)):
+        rep = simulate(
+            cluster, drifted_ps, rate_qps=DRIFT_RATE_QPS, model=model,
+            seed=7, slo=drifted_slo,
+        )
+        row = {"scheme": name, **rep.summary()["per_tenant"]}
+        per_tenant.append(row)
+        for tenant, ss in rep.summary()["per_tenant"].items():
+            emit("tenant_frontier", "p99_us", round(ss["p99_us"], 1),
+                 scheme=name, tenant=tenant)
+    result["drift"] = {
+        "adaptations": adaptations,
+        "arbitration_deferrals": deferrals,
+        "per_tenant_p99": per_tenant,
+    }
+    static_row, ctl_row = per_tenant
+    improved = {
+        t: ctl_row[t]["p99_us"] < static_row[t]["p99_us"]
+        for t in ("snb", "gnn")
+    }
+    result["drift"]["controller_beats_static"] = improved
+    assert all(improved.values()), (
+        f"controller must lower every tenant's drifted-phase p99: {improved}"
+    )
+
+
+def run(out_path: str = "BENCH_tenants.json") -> dict:
+    result: dict = {
+        "n_servers": N_SERVERS,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+    }
+    _parity(result)
+    _frontier(result)
+    _drift(result)
+    with open(out_path, "w") as fh:
+        json.dump(result, fh, indent=2)
+    print(f"# wrote {out_path}")
+    return result
+
+
+if __name__ == "__main__":
+    run(sys.argv[1] if len(sys.argv) > 1 else "BENCH_tenants.json")

@@ -3,7 +3,12 @@
 Public API:
   PathSet                     — causal access paths (padded batches)
   ReplicationScheme           — replication scheme r with storage accounting
-  path_latencies / query_latencies / is_latency_feasible — Eqns 1-3,
+  SLOSpec / TenantSpec        — per-query / per-tenant latency constraints
+        t_Q (Def 4.4's vector form; scalar broadcast is the degenerate
+        case) — accepted by the greedy drivers, the engine's feasibility
+        path, and the serve-layer controller
+  path_latencies / query_latencies / query_slacks / is_latency_feasible
+        — Eqns 1-3,
         thin wrappers over the unified ``repro.engine.LatencyEngine``
         (backend-dispatched: reference | jnp | pallas; device-resident
         packed bitmask)
@@ -23,8 +28,10 @@ from repro.core.replication import (
     path_latencies,
     path_latency_reference,
     query_latencies,
+    query_slacks,
     subpath_structure,
 )
+from repro.core.slo import SLOSpec, TenantSpec
 from repro.core.greedy import GreedyStats, replicate_delta, replicate_workload
 from repro.core.reference import (
     path_latencies_reference,
@@ -57,10 +64,13 @@ __all__ = [
     "PathSet",
     "paths_from_tree",
     "ReplicationScheme",
+    "SLOSpec",
+    "TenantSpec",
     "is_latency_feasible",
     "path_latencies",
     "path_latency_reference",
     "query_latencies",
+    "query_slacks",
     "subpath_structure",
     "GreedyStats",
     "replicate_delta",

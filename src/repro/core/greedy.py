@@ -23,6 +23,14 @@ and apply the argmin candidate's additions.
 
 Paths whose subpath count exceeds the enumeration budget fall back to the
 exact sequential implementation (``repro.core.reference``).
+
+Latency constraints are **vector-valued** (paper Def 4.4 is per query):
+``t`` may be an int, a per-query vector, or an
+:class:`~repro.core.slo.SLOSpec`.  Paths are bucketed by distinct budget
+(tightest first) — each budget class gets its own C(h, t) candidate
+tables and vectorized/sequential split, and the batch kernel gates
+additions on each path's own ``t_q`` — with the scalar case degenerating
+to one class, bit-identical to the historical scalar driver.
 """
 from __future__ import annotations
 
@@ -57,7 +65,7 @@ def _update_batch(
     f: jnp.ndarray,          # float32 [n]
     tables: jnp.ndarray,     # bool [H+1, C, H+1]
     counts: jnp.ndarray,     # int32 [H+1]
-    t: jnp.ndarray,          # int32 scalar latency bound
+    t: jnp.ndarray,          # int32 [B] per-path latency budgets t_q
     load: jnp.ndarray,       # float32 [S] current storage per server
     capacity: jnp.ndarray,   # float32 [S] (ignored unless check_capacity)
     epsilon: jnp.ndarray,    # float32 scalar
@@ -108,7 +116,11 @@ def _update_batch(
     # interval mask: additions (x -> subpath k) iff j(seg_x) <= k < seg_x
     k_r = jnp.arange(Hp1)[None, None, None, :]
     window = (k_r >= j_of_x[..., None]) & (k_r < seg_e[..., None])  # [B,C,L,Hp1]
-    window = window & valid[:, None, :, None] & (h[:, None, None, None] > t)
+    window = (
+        window
+        & valid[:, None, :, None]
+        & (h > t)[:, None, None, None]  # each path vs its OWN budget t_q
+    )
 
     # needed(x, k): no copy of objects[x] at srv[k] yet — a bit-test against
     # the engine's device-resident packed snapshot (snapshot semantics)
@@ -195,7 +207,7 @@ def _run_update_batches(
     f_j,
     tables,
     counts,
-    t_j,
+    t_vec: np.ndarray,
     load,
     cap_j,
     eps_j,
@@ -208,6 +220,10 @@ def _run_update_batches(
     """The batched UPDATE loop over vectorizable paths (shared by the
     from-scratch driver and the incremental delta driver).
 
+    ``t_vec`` is the int32 per-path budget vector (one entry per row of
+    ``vec_objects``); the candidate ``tables`` must have been enumerated
+    for these budgets (one budget class per call — see the drivers).
+
     Mutates ``packed`` (donated words) and ``stats``; returns the final
     device load and, when ``collect_additions``, the applied (object,
     server) pairs as two int64 arrays.
@@ -218,10 +234,12 @@ def _run_update_batches(
     for i in range(0, nb, batch_size):
         o = vec_objects[i : i + batch_size]
         l = vec_lengths[i : i + batch_size]
+        tq = t_vec[i : i + batch_size]
         if o.shape[0] < batch_size:  # pad batch to a fixed shape
             padn = batch_size - o.shape[0]
             o = np.concatenate([o, np.full((padn, o.shape[1]), -1, np.int32)])
             l = np.concatenate([l, np.zeros((padn,), np.int32)])
+            tq = np.concatenate([tq, np.zeros((padn,), np.int32)])
         packed.words, costs, failed, chosen, first_obj, srv, load = _update_batch(
             packed.words,
             to_device(o),
@@ -230,7 +248,7 @@ def _run_update_batches(
             f_j,
             tables,
             counts,
-            t_j,
+            to_device(tq),
             load,
             cap_j,
             eps_j,
@@ -270,11 +288,56 @@ def _run_update_batches(
     return load, additions
 
 
+def _budget_class_plan(
+    ps: PathSet, t_path: np.ndarray, shard_j, max_candidates: int
+):
+    """Bucket paths by distinct latency budget (ascending, tightest first).
+
+    The candidate enumeration tables C(h, t) and the vectorizable/sequential
+    split both depend on t, so each distinct budget gets its own tables and
+    its own H_vec.  Yields ``(budget, class_pathset, vec_idx, seq_idx,
+    tables, counts)`` per class; with a uniform budget vector this is one
+    class covering every path in workload order — bit-identical to the old
+    scalar driver.  Processing tightest budgets first lets looser paths
+    reuse the replicas the tight ones forced (sound by Thm 5.3: existing
+    replicas only lower candidate costs).
+    """
+    plan = []
+    for b in np.unique(t_path):
+        b = int(b)
+        idx = np.nonzero(t_path == b)[0]
+        cls = ps.select(idx)
+        _, _, h_all = subpath_structure(
+            jnp.asarray(cls.objects), jnp.asarray(cls.lengths), shard_j
+        )
+        h_all = np.asarray(h_all)
+        H_needed = int(h_all.max()) if cls.n_paths else 0
+        H_vec = combi.max_h_within_budget(b, max_candidates, H_needed)
+        vec_idx = np.nonzero(h_all <= H_vec)[0]
+        seq_idx = np.nonzero(h_all > H_vec)[0]
+        tables_np, counts_np = combi.stacked_tables(max(H_vec, b, 1), b)
+        plan.append(
+            (b, cls, vec_idx, seq_idx, to_device(tables_np), to_device(counts_np))
+        )
+    return plan
+
+
+def _capacity_arrays(n_servers: int, capacity, epsilon):
+    check = capacity is not None or epsilon is not None
+    cap_arr = np.full((n_servers,), np.inf, np.float32)
+    if capacity is not None:
+        cap_arr = np.broadcast_to(
+            np.asarray(capacity, np.float32), (n_servers,)
+        ).copy()
+    eps = np.float32(epsilon if epsilon is not None else np.inf)
+    return check, jnp.asarray(cap_arr), jnp.asarray(eps)
+
+
 def replicate_workload(
     pathset: PathSet,
     shard: np.ndarray,
     n_servers: int,
-    t: int,
+    t,
     f: np.ndarray | None = None,
     capacity: np.ndarray | float | None = None,
     epsilon: float | None = None,
@@ -286,22 +349,42 @@ def replicate_workload(
 ):
     """Alg 1 over a workload with the vectorized batched UPDATE.
 
-    Args mirror Def 4.4: ``t`` is the latency bound (distributed traversals),
-    ``f`` the storage cost function, ``capacity`` M_s, ``epsilon`` the load
-    imbalance bound.  ``track_rm`` additionally accumulates the §5.4
-    resharding map entries (u, v, s).
+    Args mirror Def 4.4: ``t`` is the latency constraint — an int (every
+    query shares one bound), a per-query int vector, or an
+    :class:`~repro.core.slo.SLOSpec` (per-tenant budgets); ``f`` the
+    storage cost function, ``capacity`` M_s, ``epsilon`` the load imbalance
+    bound.  ``track_rm`` additionally accumulates the §5.4 resharding map
+    entries (u, v, s).
+
+    Vector budgets bucket paths into budget classes (tightest first); each
+    class runs the same batched UPDATE with its own candidate tables, so
+    ``replicate_workload(ps, ..., t=k)`` and
+    ``replicate_workload(ps, ..., t=SLOSpec.uniform(k, nq))`` produce
+    bit-identical schemes.
 
     The evolving scheme lives on device as the engine's packed uint32
     bitmask; every batch bit-tests candidates against that snapshot and
     applies the chosen additions with one on-device scatter-OR — the
-    unpacked bool mask is read back exactly once at the end.  With
-    ``return_engine=True`` the returned tuple gains a ``LatencyEngine``
-    that still holds the final scheme device-resident, so follow-up
-    feasibility sweeps skip the re-upload entirely.
+    unpacked bool mask is read back once per budget class that needs the
+    exact fallback, plus once at the end.  With ``return_engine=True`` the
+    returned tuple gains a ``LatencyEngine`` that still holds the final
+    scheme device-resident, so follow-up feasibility sweeps skip the
+    re-upload entirely.
     """
+    from repro.core.slo import normalize_path_budgets  # local: no cycle at import
+
     t0 = time.perf_counter()
     n = shard.shape[0]
-    ps = pathset.prune_redundant(shard) if prune else pathset
+    t_path = normalize_path_budgets(t, pathset)
+    if prune:
+        # the budget joins the §5.3 dedup key: a tight-budget path must not
+        # be merged into a loose-budget duplicate (constraint would vanish)
+        ps, keep = pathset.prune_redundant(
+            shard, extra_key=t_path, return_index=True
+        )
+        t_path = t_path[keep]
+    else:
+        ps = pathset
     scheme = ReplicationScheme.from_sharding(shard, n_servers)
     stats = GreedyStats(rm=[] if track_rm else None)
     stats.paths_processed = ps.n_paths
@@ -316,83 +399,75 @@ def replicate_workload(
     shard_j = packed.shard
     f_j = to_device(f_arr)
 
-    # Split vectorizable paths from enumeration-budget-exceeding ones.
-    _, _, h_all = subpath_structure(
-        jnp.asarray(ps.objects), jnp.asarray(ps.lengths), shard_j
-    )
-    h_all = np.asarray(h_all)
-    H_needed = int(h_all.max()) if ps.n_paths else 0
-    H_vec = combi.max_h_within_budget(t, max_candidates, H_needed)
-    vec_idx = np.nonzero(h_all <= H_vec)[0]
-    seq_idx = np.nonzero(h_all > H_vec)[0]
-
-    tables_np, counts_np = combi.stacked_tables(max(H_vec, t, 1), t)
-    tables = to_device(tables_np)
-    counts = to_device(counts_np)
-
-    check_capacity = capacity is not None or epsilon is not None
-    cap_arr = np.full((n_servers,), np.inf, np.float32)
-    if capacity is not None:
-        cap_arr = np.broadcast_to(
-            np.asarray(capacity, np.float32), (n_servers,)
-        ).copy()
-    eps = np.float32(epsilon if epsilon is not None else np.inf)
-
+    check_capacity, cap_j, eps_j = _capacity_arrays(n_servers, capacity, epsilon)
     load = jnp.asarray(scheme.storage_per_server(f_arr).astype(np.float32))
-    t_j = jnp.int32(t)
-    cap_j = jnp.asarray(cap_arr)
-    eps_j = jnp.asarray(eps)
 
-    _run_update_batches(
-        packed,
-        ps.objects[vec_idx],
-        ps.lengths[vec_idx],
-        shard_j,
-        f_arr,
-        f_j,
-        tables,
-        counts,
-        t_j,
-        load,
-        cap_j,
-        eps_j,
-        check_capacity,
-        batch_size,
-        stats,
-        track_rm,
-    )
-
-    # single host readback of the packed words (vs. per-batch bool mask)
-    scheme.mask = packed.unpack()
-
-    # Exact fallback for enumeration-heavy paths (processed last; order of
-    # paths is immaterial to correctness by Thm 5.3).
-    fallback_added = False
-    for i in seq_idx:
-        res = update_exact(
-            scheme, ps.path(int(i)), t, f_arr, capacity, epsilon
+    for b, cls, vec_idx, seq_idx, tables, counts in _budget_class_plan(
+        ps, t_path, shard_j, max_candidates
+    ):
+        load, _ = _run_update_batches(
+            packed,
+            cls.objects[vec_idx],
+            cls.lengths[vec_idx],
+            shard_j,
+            f_arr,
+            f_j,
+            tables,
+            counts,
+            np.full(len(vec_idx), b, np.int32),
+            load,
+            cap_j,
+            eps_j,
+            check_capacity,
+            batch_size,
+            stats,
+            track_rm,
         )
-        stats.fallback_paths += 1
-        if res.feasible:
-            stats.total_cost += res.cost
-            fallback_added = fallback_added or bool(res.additions)
-            if track_rm:
-                stats.rm.extend(res.rm_entries)
-        else:
-            stats.failed_paths += 1
+
+        # Exact fallback for enumeration-heavy paths (processed after the
+        # class's vectorized paths; order is immaterial to correctness by
+        # Thm 5.3).  Additions run against a freshly synced host mask and
+        # are replayed into the packed words so later classes see them.
+        if len(seq_idx):
+            scheme.mask = packed.unpack()
+            fb_obj: list[int] = []
+            fb_srv: list[int] = []
+            for i in seq_idx:
+                res = update_exact(
+                    scheme, cls.path(int(i)), b, f_arr, capacity, epsilon
+                )
+                stats.fallback_paths += 1
+                if res.feasible:
+                    stats.total_cost += res.cost
+                    fb_obj.extend(v for v, _ in res.additions)
+                    fb_srv.extend(s for _, s in res.additions)
+                    if track_rm:
+                        stats.rm.extend(res.rm_entries)
+                else:
+                    stats.failed_paths += 1
+            if fb_obj:
+                packed.add(np.asarray(fb_obj), np.asarray(fb_srv))
+                if check_capacity:
+                    load = jnp.asarray(
+                        packed.storage_per_server(f_arr).astype(np.float32)
+                    )
+
+    # single host readback of the packed words (vs. per-batch bool mask);
+    # fallback additions were replayed into the words, so the packed state
+    # stays the source of truth and return_engine never loses residency.
+    scheme.mask = packed.unpack()
 
     stats.replicas = scheme.replica_count()
     stats.runtime_s = time.perf_counter() - t0
     if return_engine:
-        engine = LatencyEngine(scheme, packed=None if fallback_added else packed)
-        return scheme, stats, engine
+        return scheme, stats, LatencyEngine(scheme, packed=packed)
     return scheme, stats
 
 
 def replicate_delta(
     pathset: PathSet,
     engine: LatencyEngine,
-    t: int,
+    t,
     f: np.ndarray | None = None,
     capacity: np.ndarray | float | None = None,
     epsilon: float | None = None,
@@ -410,6 +485,11 @@ def replicate_delta(
     mirrored into the engine's host scheme (when it has one), so a live
     ``Cluster`` sharing that scheme object sees the delta immediately.
 
+    ``t`` is an int, a per-query vector, or an
+    :class:`~repro.core.slo.SLOSpec` aligned with ``pathset`` — vector
+    budgets run one UPDATE pass per budget class (tightest first), exactly
+    like the from-scratch driver.
+
     By Thm 5.3 (latency-robustness) the existing replicas can only lower
     candidate costs, never invalidate previously established bounds, so
     warm-starting over a path delta is exactly as sound as processing those
@@ -420,6 +500,8 @@ def replicate_delta(
     delta and the applied replica additions as two int64 arrays (the
     scheme delta a controller ships to the cluster / replays on restart).
     """
+    from repro.core.slo import normalize_path_budgets  # local: no cycle at import
+
     t0 = time.perf_counter()
     if engine.packed is None:
         engine.packed = PackedScheme.from_mask(
@@ -429,7 +511,14 @@ def replicate_delta(
     shard = engine.host_shard()
     n = packed.n_objects
     n_servers = packed.n_servers
-    ps = pathset.prune_redundant(shard) if prune else pathset
+    t_path = normalize_path_budgets(t, pathset)
+    if prune:
+        ps, keep = pathset.prune_redundant(
+            shard, extra_key=t_path, return_index=True
+        )
+        t_path = t_path[keep]
+    else:
+        ps = pathset
     stats = GreedyStats(rm=[] if track_rm else None)
     stats.paths_processed = ps.n_paths
     empty = (np.zeros(0, np.int64), np.zeros(0, np.int64))
@@ -441,82 +530,76 @@ def replicate_delta(
     f_j = to_device(f_arr)
     shard_j = packed.shard
 
-    _, _, h_all = subpath_structure(
-        jnp.asarray(ps.objects), jnp.asarray(ps.lengths), shard_j
-    )
-    h_all = np.asarray(h_all)
-    H_needed = int(h_all.max()) if ps.n_paths else 0
-    H_vec = combi.max_h_within_budget(t, max_candidates, H_needed)
-    vec_idx = np.nonzero(h_all <= H_vec)[0]
-    seq_idx = np.nonzero(h_all > H_vec)[0]
-
-    tables_np, counts_np = combi.stacked_tables(max(H_vec, t, 1), t)
-    tables = to_device(tables_np)
-    counts = to_device(counts_np)
-
-    check_capacity = capacity is not None or epsilon is not None
-    cap_arr = np.full((n_servers,), np.inf, np.float32)
-    if capacity is not None:
-        cap_arr = np.broadcast_to(
-            np.asarray(capacity, np.float32), (n_servers,)
-        ).copy()
-    eps = np.float32(epsilon if epsilon is not None else np.inf)
+    check_capacity, cap_j, eps_j = _capacity_arrays(n_servers, capacity, epsilon)
     load = jnp.asarray(packed.storage_per_server(f_arr).astype(np.float32))
 
-    _, additions = _run_update_batches(
-        packed,
-        ps.objects[vec_idx],
-        ps.lengths[vec_idx],
-        shard_j,
-        f_arr,
-        f_j,
-        tables,
-        counts,
-        jnp.int32(t),
-        load,
-        jnp.asarray(cap_arr),
-        jnp.asarray(eps),
-        check_capacity,
-        batch_size,
-        stats,
-        track_rm,
-        collect_additions=True,
-    )
-    add_obj, add_srv = additions
-
-    # Mirror the vectorized additions into the host scheme FIRST: the
-    # exact fallback below prices candidates against the host mask, which
-    # must reflect what this call already scatter-ORed into the words.
-    if engine.scheme is not None and len(add_obj):
-        engine.scheme.mask[add_obj, add_srv] = True
-
-    # Exact fallback for enumeration-heavy delta paths: run against a host
-    # scheme and replay the additions into the device-resident words.
-    if len(seq_idx):
-        host = (
-            engine.scheme
-            if engine.scheme is not None
-            else engine.to_scheme()
+    add_obj = np.zeros(0, np.int64)
+    add_srv = np.zeros(0, np.int64)
+    for b, cls, vec_idx, seq_idx, tables, counts in _budget_class_plan(
+        ps, t_path, shard_j, max_candidates
+    ):
+        load, additions = _run_update_batches(
+            packed,
+            cls.objects[vec_idx],
+            cls.lengths[vec_idx],
+            shard_j,
+            f_arr,
+            f_j,
+            tables,
+            counts,
+            np.full(len(vec_idx), b, np.int32),
+            load,
+            cap_j,
+            eps_j,
+            check_capacity,
+            batch_size,
+            stats,
+            track_rm,
+            collect_additions=True,
         )
-        fb_obj: list[int] = []
-        fb_srv: list[int] = []
-        for i in seq_idx:
-            res = update_exact(
-                host, ps.path(int(i)), t, f_arr, capacity, epsilon
+        cls_obj, cls_srv = additions
+
+        # Mirror the vectorized additions into the host scheme FIRST: the
+        # exact fallback below prices candidates against the host mask,
+        # which must reflect what this class already scatter-ORed into the
+        # words (and later classes' fallbacks price against this class).
+        if engine.scheme is not None and len(cls_obj):
+            engine.scheme.mask[cls_obj, cls_srv] = True
+        add_obj = np.concatenate([add_obj, cls_obj])
+        add_srv = np.concatenate([add_srv, cls_srv])
+
+        # Exact fallback for enumeration-heavy delta paths: run against a
+        # host scheme and replay the additions into the device-resident
+        # words.
+        if len(seq_idx):
+            host = (
+                engine.scheme
+                if engine.scheme is not None
+                else engine.to_scheme()
             )
-            stats.fallback_paths += 1
-            if res.feasible:
-                stats.total_cost += res.cost
-                fb_obj.extend(v for v, _ in res.additions)
-                fb_srv.extend(s for _, s in res.additions)
-                if track_rm:
-                    stats.rm.extend(res.rm_entries)
-            else:
-                stats.failed_paths += 1
-        if fb_obj:
-            packed.add(np.asarray(fb_obj), np.asarray(fb_srv))
-            add_obj = np.concatenate([add_obj, np.asarray(fb_obj, np.int64)])
-            add_srv = np.concatenate([add_srv, np.asarray(fb_srv, np.int64)])
+            fb_obj: list[int] = []
+            fb_srv: list[int] = []
+            for i in seq_idx:
+                res = update_exact(
+                    host, cls.path(int(i)), b, f_arr, capacity, epsilon
+                )
+                stats.fallback_paths += 1
+                if res.feasible:
+                    stats.total_cost += res.cost
+                    fb_obj.extend(v for v, _ in res.additions)
+                    fb_srv.extend(s for _, s in res.additions)
+                    if track_rm:
+                        stats.rm.extend(res.rm_entries)
+                else:
+                    stats.failed_paths += 1
+            if fb_obj:
+                packed.add(np.asarray(fb_obj), np.asarray(fb_srv))
+                add_obj = np.concatenate([add_obj, np.asarray(fb_obj, np.int64)])
+                add_srv = np.concatenate([add_srv, np.asarray(fb_srv, np.int64)])
+                if check_capacity:
+                    load = jnp.asarray(
+                        packed.storage_per_server(f_arr).astype(np.float32)
+                    )
 
     # Dedupe (a batch can choose the same (v, s) for several paths; the
     # scatter-OR is idempotent, but the returned delta is the exact set of

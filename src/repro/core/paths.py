@@ -120,25 +120,41 @@ class PathSet:
     # server and are identical except from their root, then any replication
     # scheme that is feasible for one path is feasible also for the other".
     # ------------------------------------------------------------------
-    def prune_redundant(self, shard: np.ndarray) -> "PathSet":
+    def prune_redundant(
+        self,
+        shard: np.ndarray,
+        extra_key: np.ndarray | None = None,
+        return_index: bool = False,
+    ):
         """Drop paths equivalent under the paper's §5.3 pruning rule.
 
         ``shard`` is the sharding function d as an int array [n_objects].
         Two paths are redundant iff the server of the root matches and the
         tails (``objects[1:]``) are identical.  NOTE: pruning is sound for
         *feasibility*; we keep query_ids of survivors for latency reporting.
+
+        ``extra_key`` (int [n_paths]) joins the dedup key: paths that only
+        differ in it are NOT merged.  The vector-t greedy passes each
+        path's latency budget here — merging a tight-budget path into a
+        loose-budget duplicate would silently drop the tighter constraint.
+        A constant ``extra_key`` (the scalar-t case) prunes identically to
+        no key at all.  ``return_index=True`` additionally returns the
+        surviving row indices (for slicing per-path side arrays).
         """
         if self.n_paths == 0:
-            return self
+            idx0 = np.zeros(0, np.int64)
+            return (self, idx0) if return_index else self
         root_srv = shard[np.maximum(self.objects[:, 0], 0)].astype(np.int64)
         # Build a dedup key: root server + tail bytes.
         tails = self.objects[:, 1:].copy()
-        key = np.concatenate(
-            [root_srv[:, None], self.lengths[:, None].astype(np.int64), tails], axis=1
-        )
+        cols = [root_srv[:, None], self.lengths[:, None].astype(np.int64), tails]
+        if extra_key is not None:
+            cols.append(np.asarray(extra_key, np.int64)[:, None])
+        key = np.concatenate(cols, axis=1)
         _, first_idx = np.unique(key, axis=0, return_index=True)
         first_idx = np.sort(first_idx)
-        return self.select(first_idx)
+        pruned = self.select(first_idx)
+        return (pruned, first_idx) if return_index else pruned
 
     def pad_to(self, n_paths: int | None = None, max_len: int | None = None) -> "PathSet":
         """Pad path count / length (padding paths have length 0)."""

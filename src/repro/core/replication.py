@@ -187,16 +187,37 @@ def path_latency_reference(path: list[int], mask: np.ndarray, shard: np.ndarray)
     return cost
 
 
+def query_slacks(
+    pathset: PathSet,
+    scheme: ReplicationScheme,
+    t,
+    path_lats: np.ndarray | None = None,
+) -> np.ndarray:
+    """Per-query slack t_Q - l_Q (negative = violating its constraint).
+
+    ``t`` is an int (broadcast), a per-query budget vector, or an
+    :class:`~repro.core.slo.SLOSpec`.  Convenience wrapper; stateful
+    consumers use ``LatencyEngine.query_slack`` to stay device-resident.
+    """
+    lq = query_latencies(pathset, scheme, path_lats=path_lats)
+    t_q = getattr(t, "t_q", t)
+    return (
+        np.broadcast_to(np.asarray(t_q, np.int64), lq.shape) - lq
+    ).astype(np.int64)
+
+
 def is_latency_feasible(
     pathset: PathSet,
     scheme: ReplicationScheme,
-    t: int | np.ndarray,
+    t,
     path_lats: np.ndarray | None = None,
 ) -> bool:
     """All queries within their latency constraint t_Q (Def 4.4 constraint 1).
 
+    ``t``: int | per-query vector | :class:`~repro.core.slo.SLOSpec`.
     Pass ``path_lats`` (per-path traversal counts) when already computed —
     the check then skips the full Eqn 1-2 re-scan entirely.
     """
-    lq = query_latencies(pathset, scheme, path_lats=path_lats)
-    return bool(np.all(lq <= np.asarray(t)))
+    return bool(
+        np.all(query_slacks(pathset, scheme, t, path_lats=path_lats) >= 0)
+    )

@@ -118,13 +118,40 @@ class Router:
         return self._lb_pick(roots, alive, seed, load, backup=True)
 
     def route_hop(
-        self, obj: int, current: int, alive: np.ndarray | None = None
+        self,
+        obj: int,
+        current: int,
+        alive: np.ndarray | None = None,
+        load: np.ndarray | None = None,
     ) -> tuple[int, bool]:
-        """(server, is_remote) for one access from ``current`` (Eqn 1)."""
+        """(server, is_remote) for one access from ``current`` (Eqn 1).
+
+        Without ``load`` a remote hop goes to the object's home server
+        (Eqn 1's second case), falling back to the lowest-id alive copy
+        holder when the home is dead.  With ``load`` (live per-server
+        queue depths, ``Cluster.queue_depths()``) the remote-hop replica
+        tie-break is *queue-aware*: among alive copy holders the
+        least-loaded one serves the hop, the home server winning ties —
+        so a hot replica with a deep queue gets skipped even though Eqn 1
+        would nominally route there.  Locality is unchanged either way: a
+        copy at ``current`` always short-circuits the hop.
+        """
         alive_ok = True if alive is None else alive[current]
         if alive_ok and self.scheme.mask[obj, current]:
             return current, False
         home = int(self.scheme.shard[obj])
+        if load is not None:
+            holders = self.scheme.mask[obj].copy()
+            if alive is not None:
+                holders &= alive
+            cands = np.nonzero(holders)[0]
+            if len(cands) == 0:
+                return -1, True
+            lv = np.asarray(load)[cands]
+            # least-loaded holder; ties prefer the home server, then the
+            # lowest id (deterministic)
+            order = np.lexsort((cands, cands != home, lv))
+            return int(cands[order[0]]), True
         if alive is None or alive[home]:
             return home, True
         copies = np.nonzero(

@@ -6,12 +6,16 @@ replication scheme (Eqns 1-3) — shared by the greedy UPDATE driver, the
 exact reference, the baselines, the distsys executor, the workload
 analyzer, and every benchmark.
 
-  LatencyEngine  — path_latencies / query_latencies / is_feasible /
-                   margin_costs behind "reference" | "jnp" | "pallas"
+  LatencyEngine  — path_latencies / query_latencies / query_slack /
+                   is_feasible / margin_costs behind
+                   "reference" | "jnp" | "pallas"; latency constraints are
+                   vector-valued (per-query t_Q, scalar broadcast as the
+                   degenerate case)
+  RawScheme      — minimal mask+shard scheme carrier (from_arrays input)
   PackedScheme   — the device-resident packed uint32 bitmask state
   TRANSFER       — host<->device transfer accounting (perf benchmarks)
 """
-from repro.engine.engine import DevicePaths, LatencyEngine
+from repro.engine.engine import DevicePaths, LatencyEngine, RawScheme
 from repro.engine.packed import PackedScheme, pack_bool_mask, unpack_words
 from repro.engine.streaming import TRANSFER, to_device
 from repro.engine.backends import BACKENDS
@@ -19,6 +23,7 @@ from repro.engine.backends import BACKENDS
 __all__ = [
     "LatencyEngine",
     "DevicePaths",
+    "RawScheme",
     "PackedScheme",
     "pack_bool_mask",
     "unpack_words",

@@ -180,6 +180,24 @@ def access_trace(objects, lengths, words, home, start=None):
 
 
 @jax.jit
+def query_slack(path_lats, query_ids, t_q):
+    """Per-query slack t_Q - l_Q against a device-resident budget vector.
+
+    ``path_lats`` int32 [P] (h per path), ``query_ids`` int32 [P],
+    ``t_q`` int32 [nq].  l_Q is the max over the query's paths (Def 4.3);
+    queries with no paths in the batch have l_Q = 0 (slack = budget).
+    Negative slack marks a violating query (Def 4.4 constraint 1).
+    """
+    nq = t_q.shape[0]
+    lq = (
+        jnp.zeros((nq,), jnp.int32)
+        .at[query_ids]
+        .max(path_lats.astype(jnp.int32))
+    )
+    return t_q - lq
+
+
+@jax.jit
 def margin_cost(words, f, objects, servers):
     """Marginal storage cost of candidate (object, server) additions.
 

@@ -23,6 +23,8 @@ perf benchmarks and regression comparisons.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from repro.engine import backends
@@ -30,6 +32,40 @@ from repro.engine.packed import PackedScheme, pack_bool_mask
 from repro.engine.streaming import stream_chunks, to_device
 
 DEFAULT_CHUNK = 8192
+
+
+@dataclasses.dataclass
+class RawScheme:
+    """Lightweight mask + shard scheme (the engine's minimal input contract).
+
+    Anything with ``.mask`` (bool [n, S]) and ``.shard`` (int32 [n]) can
+    back a :class:`LatencyEngine`; this is the canonical minimal carrier —
+    used by :meth:`LatencyEngine.from_arrays` and anywhere a full
+    ``repro.core.ReplicationScheme`` (with its storage accounting) would be
+    overkill.  Mutable on purpose: ``add_replicas`` flips its mask bits in
+    place like any other scheme.
+    """
+
+    mask: np.ndarray
+    shard: np.ndarray
+
+    def __post_init__(self):
+        self.mask = np.asarray(self.mask, bool)
+        self.shard = np.asarray(self.shard, np.int32)
+        assert self.mask.ndim == 2
+        assert self.shard.shape == (self.mask.shape[0],)
+
+
+def _budget_vector(t, n_queries: int) -> np.ndarray:
+    """int | per-query array | SLOSpec (duck-typed ``.t_q``) -> int32 [nq].
+
+    Duck typing keeps ``repro.engine`` free of ``repro.core`` imports
+    (core sits above the engine in the layering).
+    """
+    t = getattr(t, "t_q", t)
+    return np.broadcast_to(
+        np.asarray(t, np.int32), (n_queries,)
+    )
 
 
 class DevicePaths:
@@ -84,13 +120,7 @@ class LatencyEngine:
     # -- classmethods -----------------------------------------------------
     @classmethod
     def from_arrays(cls, mask: np.ndarray, shard: np.ndarray, **kw) -> "LatencyEngine":
-        class _Raw:  # minimal scheme duck type
-            pass
-
-        raw = _Raw()
-        raw.mask = np.asarray(mask, bool)
-        raw.shard = np.asarray(shard, np.int32)
-        return cls(raw, **kw)
+        return cls(RawScheme(mask, shard), **kw)
 
     # -- state ------------------------------------------------------------
     @property
@@ -224,12 +254,39 @@ class LatencyEngine:
         np.maximum.at(out, np.asarray(pathset.query_ids), path_lats)
         return out
 
+    def query_slack(
+        self, pathset, t, path_lats: np.ndarray | None = None
+    ) -> np.ndarray:
+        """t_Q - l_Q per query, computed on device (int32 [n_queries]).
+
+        ``t`` is an int (scalar broadcast), a per-query budget vector, or
+        an ``SLOSpec``.  The per-query max and the subtraction run on
+        device against the budget vector (``backends.query_slack``); only
+        the slack vector crosses back.  Negative entries mark violating
+        queries — the serve layer's per-tenant triggers consume this.
+        """
+        if path_lats is None:
+            path_lats = self.path_latencies(pathset)
+        nq = pathset.n_queries
+        t_q = _budget_vector(t, nq)
+        if nq == 0:
+            return np.zeros((0,), np.int32)
+        out = backends.query_slack(
+            to_device(np.asarray(path_lats, np.int32)),
+            to_device(np.asarray(pathset.query_ids, np.int32)),
+            to_device(t_q),
+        )
+        return np.asarray(out)
+
     def is_feasible(
         self, pathset, t, path_lats: np.ndarray | None = None
     ) -> bool:
-        """All queries within t_Q (Def 4.4); reuses precomputed latencies."""
-        lq = self.query_latencies(pathset, path_lats)
-        return bool(np.all(lq <= np.asarray(t)))
+        """All queries within their own t_Q (Def 4.4).
+
+        ``t``: int | per-query vector | ``SLOSpec``.  Reuses precomputed
+        ``path_lats`` when given.
+        """
+        return bool(np.all(self.query_slack(pathset, t, path_lats) >= 0))
 
     def margin_costs(
         self, objects, servers, f: np.ndarray | None = None

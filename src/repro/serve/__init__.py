@@ -9,10 +9,14 @@ traffic from millions of users").  Three pieces:
                 per-server utilization, throughput-vs-offered-load
   drift       — time-phased query mixes + rotating root hotspots over the
                 SNB/GNN/recsys workloads, emitting PathSet deltas
-  controller  — sliding-window monitor + incremental repair: warm-started
-                greedy (``replicate_delta``) against the resident
-                PackedScheme, scheme deltas applied to the live Cluster,
-                RM-aware cold-replica eviction
+  controller  — per-tenant sliding-window monitor + incremental repair:
+                each query judged against its own t_Q (``SLOSpec``),
+                warm-started vector-budget greedy (``replicate_delta``)
+                against the resident PackedScheme, capacity-headroom
+                arbitration between competing tenant repairs
+                (cheapest-marginal-byte-per-violation wins, loser
+                deferred), scheme deltas applied to the live Cluster,
+                RM-aware cold-replica eviction with demotion hysteresis
 """
 from repro.serve.simulator import SimReport, simulate
 from repro.serve.drift import (

@@ -3,28 +3,40 @@
 The paper's algorithm is offline — analyze the workload, replicate once,
 serve.  Under drift the hotspot moves and the scheme silently stops being
 feasible; rebuilding from scratch re-prices every path and re-ships the
-whole replica set.  This controller instead watches a **sliding window**
-of served queries and, on violation, repairs *incrementally*:
+whole replica set.  This controller instead watches **per-tenant sliding
+windows** of served queries and, on violation, repairs *incrementally*:
 
   1. **monitor** — every completed batch feeds per-query traversal counts
      (from the resident ``LatencyEngine``, one streamed evaluation) and,
-     when available, simulated wall-clock latencies into the window; the
-     trigger is either a feasibility violation (> ``violation_frac`` of
-     windowed queries exceed ``t`` traversals) or a wall-clock p99 SLO
-     breach;
-  2. **repair** — the *violating paths observed in the window* (a tiny
+     when available, simulated wall-clock latencies into each tenant's own
+     window; each query is judged against *its own* budget t_Q (an
+     ``SLOSpec``, scalar config broadcast as the degenerate case).  The
+     trigger is per tenant: a feasibility violation (> ``violation_frac``
+     of the tenant's windowed queries exceed their t_Q) or that tenant's
+     wall-clock p99 SLO breach;
+  2. **arbitrate** — when several tenants trigger in the same step *and*
+     capacity / load-balance headroom is finite, their repairs compete for
+     the same bytes: the tenant with the cheapest estimated
+     marginal-bytes-per-violation wins this round, the losers are
+     *deferred* (named in the report; their windows still violate, so they
+     re-trigger on a later step).  With unbounded headroom all triggered
+     tenants repair together in one vector-budget pass;
+  3. **repair** — the *violating paths observed in the windows* (a tiny
      delta, not the workload) go through
-     :func:`repro.core.greedy.replicate_delta`: the batched Alg 2 UPDATE
-     warm-started against the engine's device-resident ``PackedScheme``
-     (bit-tests + scatter-OR adds, no rebuild, sound by Thm 5.3);
-  3. **apply** — the returned (object, server) delta lands on the live
+     :func:`repro.core.greedy.replicate_delta` with their per-path budget
+     vector: the batched Alg 2 UPDATE warm-started against the engine's
+     device-resident ``PackedScheme`` (bit-tests + scatter-OR adds, no
+     rebuild, sound by Thm 5.3);
+  4. **apply** — the returned (object, server) delta lands on the live
      ``Cluster`` via ``apply_scheme_delta`` (monotone mask flips) and its
      resharding-map entries are recorded, so later reshards still work;
-  4. **evict** — when storage pressure exceeds capacity, replicas that are
-     cold (not touched by any windowed path) *and* unreferenced by the
-     §5.4 resharding map (RC == 0 — evicting them cannot strand a future
-     incremental reshard) are dropped, largest first, until the cluster
-     fits.  Eviction re-packs the engine (removals are not monotone).
+  5. **evict** — when storage pressure exceeds capacity, replicas that
+     have been cold (untouched by any windowed path) for
+     ``demote_after`` *consecutive eviction checks* — demotion
+     hysteresis, preventing add/evict thrash on an oscillating hotspot —
+     *and* are unreferenced by the §5.4 resharding map (RC == 0) are
+     dropped, largest first, until the cluster fits.  Eviction re-packs
+     the engine (removals are not monotone).
 
 The controller never blocks serving: observe() is one engine evaluation
 plus (rarely) one warm-started greedy pass over a few hundred paths.
@@ -40,19 +52,42 @@ import numpy as np
 from repro.core.greedy import replicate_delta
 from repro.core.paths import PathSet
 from repro.core.reshard import ReshardingMap
+from repro.core.slo import SLOSpec, TenantSpec
 from repro.distsys.cluster import Cluster
 from repro.engine import LatencyEngine
 
 
 @dataclasses.dataclass
 class ControllerConfig:
-    t: int                                  # latency bound (traversals)
-    window: int = 1024                      # queries kept in the window
+    t: int | None = None                    # scalar budget (single-tenant)
+    window: int = 1024                      # queries kept per tenant window
     violation_frac: float = 0.01            # windowed infeasible-query frac
-    p99_slo_us: float | None = None         # optional wall-clock p99 SLO
+    p99_slo_us: float | None = None         # wall-clock p99 SLO fallback
     capacity: np.ndarray | float | None = None
     epsilon: float | None = None
     min_queries: int = 64                   # don't trigger on tiny windows
+    demote_after: int = 1                   # consecutive cold checks before
+    #                                         a replica may be evicted
+    tenants: tuple[TenantSpec, ...] = ()    # known tenants (budgets + SLOs)
+
+    def __post_init__(self):
+        if self.t is None and not self.tenants:
+            raise ValueError("ControllerConfig needs a scalar t or tenants")
+
+    def default_slo(self, n_queries: int) -> SLOSpec:
+        """Spec for batches observed without an explicit SLOSpec."""
+        if self.t is not None:
+            return SLOSpec.uniform(
+                self.t, n_queries, tenant="default",
+                p99_slo_us=self.p99_slo_us,
+            )
+        if len(self.tenants) == 1:
+            return SLOSpec.from_tenants(
+                self.tenants, np.zeros(n_queries, np.int32)
+            )
+        raise ValueError(
+            "multi-tenant config: observe() needs the batch's SLOSpec"
+        )
 
 
 @dataclasses.dataclass
@@ -68,9 +103,43 @@ class AdaptationReport:
     bytes_evicted: float
     feasible_after: bool
     runtime_s: float
+    tenants: tuple[str, ...] = ("default",)   # whose violations were repaired
+    deferred: tuple[str, ...] = ()            # arbitration losers this round
     additions: tuple[np.ndarray, np.ndarray] = dataclasses.field(
         default=(np.zeros(0, np.int64), np.zeros(0, np.int64)), repr=False
     )
+
+
+@dataclasses.dataclass
+class _Entry:
+    """One observed batch, restricted to one tenant's paths/queries."""
+
+    pathset: PathSet          # tenant's paths (batch-local query ids)
+    path_lats: np.ndarray     # int32 per path
+    path_budgets: np.ndarray  # int32 per path (each path's own t_q)
+    n_queries: int            # tenant queries in the batch
+    n_bad: int                # tenant queries whose l_Q exceeded their t_Q
+    latency_us: np.ndarray | None  # tenant queries' wall-clock latencies
+
+
+@dataclasses.dataclass
+class _TenantWindow:
+    spec: TenantSpec
+    entries: deque = dataclasses.field(default_factory=deque)
+    n_queries: int = 0
+    last_seen_step: int = 0     # step of the newest observed entry
+    last_repair_step: int = -1  # step this tenant was last repaired at
+
+    def violation_frac(self) -> float:
+        if not self.n_queries:
+            return 0.0
+        return sum(e.n_bad for e in self.entries) / self.n_queries
+
+    def p99_us(self) -> float | None:
+        lats = [e.latency_us for e in self.entries if e.latency_us is not None]
+        if not lats:
+            return None
+        return float(np.percentile(np.concatenate(lats), 99.0))
 
 
 def evict_cold_replicas(
@@ -79,6 +148,8 @@ def evict_cold_replicas(
     active_objects: np.ndarray,
     f: np.ndarray | None = None,
     capacity: np.ndarray | float | None = None,
+    cold_streak: dict[tuple[int, int], int] | None = None,
+    min_streak: int = 1,
 ) -> tuple[int, float]:
     """Drop cold, RM-unreferenced replicas until every server fits.
 
@@ -87,6 +158,12 @@ def evict_cold_replicas(
     be re-transferred after an original-copy move — and originals and
     window-active objects are never touched.  Within a server, largest
     ``f(v)`` goes first (frees the most bytes per eviction).
+
+    ``cold_streak`` adds demotion hysteresis: a replica is only eligible
+    once it has been observed cold ``min_streak`` consecutive times (the
+    controller maintains the streak counters); evicted pairs are removed
+    from the dict.  Without it every cold replica is immediately eligible
+    (the pre-hysteresis behavior).
     """
     scheme = cluster.scheme
     if capacity is None:
@@ -113,6 +190,11 @@ def evict_cold_replicas(
         cands = [
             int(v) for v in cands if rmap.rc.get((int(v), int(s)), 0) == 0
         ]
+        if cold_streak is not None:
+            cands = [
+                v for v in cands
+                if cold_streak.get((v, int(s)), 0) >= min_streak
+            ]
         cands.sort(key=lambda v: -fv[v])
         for v in cands:
             if load[s] <= cap[s]:
@@ -121,17 +203,25 @@ def evict_cold_replicas(
             load[s] -= fv[v]
             n_evicted += 1
             bytes_evicted += float(fv[v])
+            if cold_streak is not None:
+                cold_streak.pop((v, int(s)), None)
     return n_evicted, bytes_evicted
 
 
 class AdaptiveController:
-    """Sliding-window monitor + incremental repair over a live cluster.
+    """Per-tenant sliding-window monitor + incremental repair over a live
+    cluster.
 
     The controller shares the cluster's ``ReplicationScheme`` object with
     its ``LatencyEngine``, so the engine's device-resident packed words,
     the host mask, and the cluster's routing state stay one source of
     truth: warm-start additions scatter-OR into the packed words and flip
     the same host mask the router reads.
+
+    Each observed batch may carry its own :class:`SLOSpec` (per-query
+    budgets + query->tenant map); without one the config's scalar ``t``
+    broadcasts to a single "default" tenant — the degenerate case that
+    reproduces the original scalar controller exactly.
     """
 
     def __init__(
@@ -150,110 +240,275 @@ class AdaptiveController:
             "controller engine must wrap the cluster's live scheme"
         )
         self.rmap = rmap or ReshardingMap({}, {})
-        # window: deque of (pathset, path_lats, n_queries, latency_us|None,
-        # n_queries_over_t) — the violation count is cached per entry so the
-        # per-batch monitoring path stays O(batch), not O(window)
-        self._window: deque = deque()
-        self._window_queries = 0
+        self._tenants: dict[str, _TenantWindow] = {}
+        # demotion hysteresis: (object, server) -> consecutive cold checks
+        self._cold_streak: dict[tuple[int, int], int] = {}
+        # arbitration aging: tenant -> step it was first deferred at; a
+        # deferred tenant wins the next contended round outright (oldest
+        # first), so a persistently-cheap tenant can't starve the rest
+        self._deferred_since: dict[str, int] = {}
         self.step = 0
         self.reports: list[AdaptationReport] = []
 
     # -- monitoring --------------------------------------------------------
-    def _count_bad(self, ps: PathSet, pl: np.ndarray, nq: int) -> int:
-        """Queries of one batch whose slowest path exceeds t."""
-        ql = np.zeros(nq, np.int32)
-        np.maximum.at(ql, np.asarray(ps.query_ids), pl)
-        return int((ql > self.config.t).sum())
-
-    def _window_stats(self, want_p99: bool = True) -> tuple[float, float | None]:
-        bad = 0
-        total = 0
-        lats: list[np.ndarray] = []
-        for _, _, nq, lat_us, n_bad in self._window:
-            bad += n_bad
-            total += nq
-            if want_p99 and lat_us is not None:
-                lats.append(lat_us)
-        frac = bad / total if total else 0.0
-        p99 = (
-            float(np.percentile(np.concatenate(lats), 99.0)) if lats else None
-        )
-        return frac, p99
-
     def window_feasible_frac(self) -> float:
-        """1 - fraction of windowed queries exceeding t (diagnostics)."""
-        frac, _ = self._window_stats()
-        return 1.0 - frac
+        """1 - fraction of windowed queries exceeding their t_Q (all
+        tenants pooled; diagnostics)."""
+        total = sum(w.n_queries for w in self._tenants.values())
+        if not total:
+            return 1.0
+        bad = sum(
+            e.n_bad for w in self._tenants.values() for e in w.entries
+        )
+        return 1.0 - bad / total
+
+    def tenant_stats(self) -> dict[str, dict]:
+        """Per-tenant window diagnostics (violation frac, p99, size)."""
+        return {
+            name: {
+                "violation_frac": w.violation_frac(),
+                "p99_us": w.p99_us(),
+                "window_queries": w.n_queries,
+                "t_q": w.spec.t_q,
+            }
+            for name, w in self._tenants.items()
+        }
+
+    def _window_of(self, spec: TenantSpec) -> _TenantWindow:
+        w = self._tenants.get(spec.name)
+        if w is None:
+            w = _TenantWindow(spec=spec)
+            self._tenants[spec.name] = w
+        else:
+            w.spec = spec  # newest spec wins (budgets may be re-tuned live)
+        return w
 
     def observe(
         self,
         pathset: PathSet,
         latency_us: np.ndarray | None = None,
+        slo: SLOSpec | None = None,
     ) -> AdaptationReport | None:
         """Feed one served batch; repair and return a report on violation.
 
         ``pathset`` is the batch's observed access paths (what the serving
         layer routed); ``latency_us`` the simulator's per-query sojourn
-        times for the optional wall-clock SLO trigger.
+        times for the optional wall-clock SLO trigger; ``slo`` the batch's
+        per-query budgets + tenant map (defaults to the config's scalar
+        ``t`` under a single "default" tenant).
         """
         self.step += 1
+        slo = slo if slo is not None else self.config.default_slo(
+            pathset.n_queries
+        )
+        assert slo.n_queries == pathset.n_queries
         pl = self.engine.path_latencies(pathset)
-        nq = pathset.n_queries
-        self._window.append(
-            (pathset, pl, nq, latency_us, self._count_bad(pathset, pl, nq))
-        )
-        self._window_queries += nq
-        while (
-            self._window_queries > self.config.window
-            and len(self._window) > 1
-        ):
-            self._window_queries -= self._window.popleft()[2]
+        qids = np.asarray(pathset.query_ids)
+        ql = self.engine.query_latencies(pathset, pl)
+        bad_q = ql > slo.t_q  # each query vs its OWN budget
+        t_path = slo.t_q[qids] if len(qids) else np.zeros(0, np.int32)
 
-        if self._window_queries < self.config.min_queries:
+        for tid, ts in enumerate(slo.tenants):
+            q_sel = slo.tenant_of == tid
+            if not q_sel.any():
+                continue
+            p_sel = q_sel[qids] if len(qids) else np.zeros(0, bool)
+            p_idx = np.nonzero(p_sel)[0]
+            w = self._window_of(ts)
+            w.entries.append(
+                _Entry(
+                    # single-tenant batches (the degenerate case) are kept
+                    # by reference, not copied
+                    pathset=(
+                        pathset if p_sel.all() else pathset.select(p_idx)
+                    ),
+                    path_lats=pl if p_sel.all() else pl[p_idx],
+                    path_budgets=(
+                        t_path if p_sel.all() else t_path[p_idx]
+                    ),
+                    n_queries=int(q_sel.sum()),
+                    n_bad=int(bad_q[q_sel].sum()),
+                    latency_us=(
+                        np.asarray(latency_us)[q_sel]
+                        if latency_us is not None
+                        else None
+                    ),
+                )
+            )
+            w.n_queries += int(q_sel.sum())
+            w.last_seen_step = self.step
+            while w.n_queries > self.config.window and len(w.entries) > 1:
+                w.n_queries -= w.entries.popleft().n_queries
+
+        triggered = self._triggered_tenants()
+        # a deferral only keeps its aging claim while the tenant's
+        # violation persists — if it cleared on its own (e.g. another
+        # tenant's repair covered the shared paths), the stale entry must
+        # not grant arbitration priority on some much later round
+        names = {name for name, _ in triggered}
+        self._deferred_since = {
+            k: v for k, v in self._deferred_since.items() if k in names
+        }
+        if not triggered:
             return None
-        # the percentile over the windowed latencies is the only O(window)
-        # part of monitoring — skip it unless a wall-clock SLO is configured
-        frac, p99 = self._window_stats(
-            want_p99=self.config.p99_slo_us is not None
-        )
-        trigger = None
-        if frac > self.config.violation_frac:
-            trigger = "feasibility"
-        elif (
-            self.config.p99_slo_us is not None
-            and p99 is not None
-            and p99 > self.config.p99_slo_us
-        ):
-            trigger = "p99_slo"
-        if trigger is None:
-            return None
-        return self._adapt(trigger)
+
+        contended = (
+            self.config.capacity is not None
+            or self.config.epsilon is not None
+        ) and len(triggered) > 1
+        if contended:
+            # arbitration: repairs compete for the same capacity/epsilon
+            # headroom — cheapest estimated marginal-byte-per-violation
+            # wins this round, everyone else is deferred (their windows
+            # still violate, so they re-trigger on a later observe()).
+            # Aging breaks starvation: a tenant deferred on an earlier
+            # round outranks any score on the next contended round.
+            scored = sorted(
+                (
+                    self._deferred_since.get(name, self.step),
+                    self._repair_score(name),
+                    name,
+                    trig,
+                )
+                for name, trig in triggered
+            )
+            repair = [(scored[0][2], scored[0][3])]
+            deferred = tuple(name for _, _, name, _ in scored[1:])
+            for name in deferred:
+                self._deferred_since.setdefault(name, self.step)
+        else:
+            repair = triggered
+            deferred = ()
+        for name, _ in repair:
+            self._deferred_since.pop(name, None)
+        return self._adapt(repair, deferred)
+
+    def _triggered_tenants(self) -> list[tuple[str, str]]:
+        out = []
+        for name, w in self._tenants.items():
+            if w.n_queries < self.config.min_queries:
+                continue
+            # a repair attempt (even one that couldn't fix anything, e.g.
+            # fully capacity-blocked) re-arms only on NEW evidence for this
+            # tenant — otherwise an unrepairable window would re-fire a
+            # full no-op repair on every later observe() of anyone's
+            # traffic (the old global window aged such entries out)
+            if w.last_seen_step <= w.last_repair_step:
+                continue
+            if w.violation_frac() > self.config.violation_frac:
+                out.append((name, "feasibility"))
+                continue
+            p99_slo = (
+                w.spec.p99_slo_us
+                if w.spec.p99_slo_us is not None
+                else self.config.p99_slo_us
+            )
+            if p99_slo is not None:
+                p99 = w.p99_us()
+                if p99 is not None and p99 > p99_slo:
+                    out.append((name, "p99_slo"))
+        return out
 
     # -- repair ------------------------------------------------------------
-    def _violating_paths(self) -> PathSet:
-        parts = []
-        for ps, pl, _, _, _ in self._window:
-            idx = np.nonzero(pl > self.config.t)[0]
+    def _violating(self, name: str):
+        """(violating-path PathSets, per-part per-path budgets) of a tenant."""
+        parts, budgets = [], []
+        for e in self._tenants[name].entries:
+            idx = np.nonzero(e.path_lats > e.path_budgets)[0]
             if len(idx):
-                parts.append(ps.select(idx))
+                parts.append(e.pathset.select(idx))
+                budgets.append(e.path_budgets[idx])
+        return parts, budgets
+
+    def _repair_score(self, name: str) -> float:
+        """Estimated marginal bytes per violating query (arbitration key).
+
+        Upper-bound estimate, priced against the engine's device-resident
+        snapshot: replicate every non-root object of each violating path
+        to the path's coordinator (the root's home server) — the t=0-style
+        candidate that dominates all of Alg 2's cheaper merges.
+        """
+        parts, _ = self._violating(name)
         if not parts:
-            return PathSet.from_lists([])
-        return PathSet.concatenate(parts)
+            return float("inf")
+        shard = self.engine.host_shard()
+        est = 0.0
+        n_viol = 0
+        for part in parts:
+            tails = np.asarray(part.objects[:, 1:], np.int32)
+            if tails.size == 0:
+                continue
+            root_home = shard[np.maximum(part.objects[:, 0], 0)]
+            srv = np.broadcast_to(root_home[:, None], tails.shape)
+            est += float(
+                np.sum(self.engine.margin_costs(tails, srv, self.f))
+            )
+            n_viol += int(np.unique(np.asarray(part.query_ids)).size)
+        return est / max(n_viol, 1)
 
     def _active_objects(self) -> np.ndarray:
         objs = [
-            np.asarray(ps.objects).ravel() for ps, _, _, _, _ in self._window
+            np.asarray(e.pathset.objects).ravel()
+            for w in self._tenants.values()
+            for e in w.entries
         ]
         cat = np.concatenate(objs) if objs else np.zeros(0, np.int64)
         return np.unique(cat[cat >= 0])
 
-    def _adapt(self, trigger: str) -> AdaptationReport:
+    def _update_cold_streaks(self, active_objects: np.ndarray) -> None:
+        """Advance the per-replica cold streak counters (hysteresis).
+
+        A replica is "cold" when no windowed path touched its object.  A
+        streak survives only while the pair stays cold on *consecutive*
+        checks; touching the object (or losing the replica) resets it.
+        """
+        scheme = self.cluster.scheme
+        repl = scheme.mask.copy()
+        repl[np.arange(scheme.n_objects), scheme.shard] = False
+        act = np.zeros(scheme.n_objects, bool)
+        act[active_objects] = True
+        vs, ss = np.nonzero(repl & ~act[:, None])
+        fresh: dict[tuple[int, int], int] = {}
+        for v, s in zip(vs.tolist(), ss.tolist()):
+            fresh[(v, s)] = self._cold_streak.get((v, s), 0) + 1
+        self._cold_streak = fresh
+
+    def _adapt(
+        self, repair: list[tuple[str, str]], deferred: tuple[str, ...]
+    ) -> AdaptationReport:
         t0 = time.perf_counter()
-        bad = self._violating_paths()
+        # one vector-budget delta pass over every repaired tenant's
+        # violating paths: each path keeps its own t_q
+        parts: list[PathSet] = []
+        part_tq: list[np.ndarray] = []
+        part_tenant: list[np.ndarray] = []
+        table: list[TenantSpec] = []
+        for name, _ in repair:
+            tid = len(table)
+            table.append(self._tenants[name].spec)
+            t_parts, t_budgets = self._violating(name)
+            for part, pb in zip(t_parts, t_budgets):
+                nq_p = part.n_queries
+                tq_q = np.full(nq_p, table[tid].t_q, np.int32)
+                tq_q[np.asarray(part.query_ids)] = pb
+                parts.append(part)
+                part_tq.append(tq_q)
+                part_tenant.append(np.full(nq_p, tid, np.int32))
+        if parts:
+            bad = PathSet.concatenate(parts)
+            bad_slo = SLOSpec(
+                np.concatenate(part_tq),
+                np.concatenate(part_tenant),
+                tuple(table) or (TenantSpec("default", 0),),
+            )
+        else:
+            bad = PathSet.from_lists([])
+            bad_slo = SLOSpec.uniform(0, 0)
+
         stats, (add_obj, add_srv) = replicate_delta(
             bad,
             self.engine,
-            self.config.t,
+            bad_slo,
             f=self.f,
             capacity=self.config.capacity,
             epsilon=self.config.epsilon,
@@ -268,36 +523,59 @@ class AdaptiveController:
                 self.rmap.rc.get((int(v), int(s)), 0) + 1
             )
 
-        n_ev, bytes_ev = evict_cold_replicas(
-            self.cluster, self.rmap, self._active_objects(), self.f,
-            self.config.capacity,
-        )
-        if n_ev:
-            self.engine.refresh()  # removals are not monotone: re-pack
+        n_ev = 0
+        bytes_ev = 0.0
+        if self.config.capacity is not None:
+            active = self._active_objects()
+            self._update_cold_streaks(active)
+            n_ev, bytes_ev = evict_cold_replicas(
+                self.cluster, self.rmap, active, self.f,
+                self.config.capacity,
+                cold_streak=self._cold_streak,
+                min_streak=self.config.demote_after,
+            )
+            if n_ev:
+                self.engine.refresh()  # removals are not monotone: re-pack
 
         fv = (
             np.ones(len(add_obj))
             if self.f is None
             else self.f[add_obj]
         )
-        # re-evaluate the window against the repaired scheme: the stored
-        # per-path latencies are stale and would re-trigger forever, and the
-        # wall-clock latencies were measured against the pre-repair scheme —
-        # keeping them would make a queueing-only p99 breach re-fire no-op
-        # repairs until the batch ages out, so they are dropped too (the
-        # p99 trigger re-arms on fresh measurements).
+        # re-evaluate every window against the repaired scheme: the stored
+        # per-path latencies are stale and would re-trigger forever.  The
+        # wall-clock latencies are dropped only for the REPAIRED tenants —
+        # theirs were measured against the pre-repair scheme, and keeping
+        # them would make a queueing-only p99 breach re-fire no-op repairs
+        # until the batch ages out (the p99 trigger re-arms on fresh
+        # measurements).  A deferred tenant keeps its p99 evidence: nothing
+        # was repaired for it, and wiping it would erase the very violation
+        # that must win the next arbitration round.
+        repaired_names = {name for name, _ in repair}
         feasible = True
-        fresh: deque = deque()
-        for ps, _, nq, _, _ in self._window:
-            pl = self.engine.path_latencies(ps)
-            n_bad = self._count_bad(ps, pl, nq)
-            fresh.append((ps, pl, nq, None, n_bad))
-            if n_bad:
-                feasible = False
-        self._window = fresh
+        for name, w in self._tenants.items():
+            for e in w.entries:
+                e.path_lats = self.engine.path_latencies(e.pathset)
+                qids = np.asarray(e.pathset.query_ids)
+                if len(qids):
+                    ql = self.engine.query_latencies(e.pathset, e.path_lats)
+                    slack_bad = ql[qids] > e.path_budgets
+                    e.n_bad = int(np.unique(qids[slack_bad]).size)
+                else:
+                    e.n_bad = 0
+                if name in repaired_names:
+                    e.latency_us = None
+                    if e.n_bad:
+                        feasible = False
+            if name in repaired_names:
+                w.last_repair_step = self.step
+
+        triggers = [trig for _, trig in repair]
         report = AdaptationReport(
             step=self.step,
-            trigger=trigger,
+            trigger=(
+                "feasibility" if "feasibility" in triggers else triggers[0]
+            ),
             paths_repaired=bad.n_paths,
             replicas_added=int(len(add_obj)),
             bytes_added=float(np.sum(fv)) if len(add_obj) else 0.0,
@@ -305,6 +583,8 @@ class AdaptiveController:
             bytes_evicted=bytes_ev,
             feasible_after=feasible,
             runtime_s=time.perf_counter() - t0,
+            tenants=tuple(name for name, _ in repair),
+            deferred=deferred,
             additions=(add_obj, add_srv),
         )
         self.reports.append(report)

@@ -60,9 +60,20 @@ class SimReport:
     duration_us: float            # makespan (last completion)
     offered_qps: float
     concurrency: int
+    # tenant tags: every job of query q carried tenant_of[q] through the
+    # event loop, so latencies histogram per tenant (multi-tenant SLOs)
+    tenant_of: np.ndarray | None = None      # [n_queries] tenant id
+    tenant_names: tuple[str, ...] = ()
 
     def percentile(self, q: float) -> float:
         return float(np.percentile(self.latency_us, q))
+
+    def tenant_latencies(self, name: str) -> np.ndarray:
+        """Sojourn latencies of one tenant's queries."""
+        if self.tenant_of is None:
+            raise ValueError("run was not tenant-tagged (pass slo=)")
+        tid = self.tenant_names.index(name)
+        return self.latency_us[self.tenant_of == tid]
 
     @property
     def mean_us(self) -> float:
@@ -94,7 +105,7 @@ class SimReport:
 
     def summary(self) -> dict:
         util = self.utilization()
-        return {
+        out = {
             "mean_us": self.mean_us,
             "p50_us": self.p50_us,
             "p99_us": self.p99_us,
@@ -105,6 +116,20 @@ class SimReport:
             "mean_queue_wait_us": self.queue_wait_us,
             "failed_queries": int(self.query_failed.sum()),
         }
+        if self.tenant_of is not None:
+            per = {}
+            for tid, name in enumerate(self.tenant_names):
+                lat = self.latency_us[self.tenant_of == tid]
+                if not lat.size:
+                    continue
+                per[name] = {
+                    "n_queries": int(lat.size),
+                    "mean_us": float(lat.mean()),
+                    "p50_us": float(np.percentile(lat, 50.0)),
+                    "p99_us": float(np.percentile(lat, 99.0)),
+                }
+            out["per_tenant"] = per
+        return out
 
 
 def _build_variant(
@@ -170,6 +195,7 @@ def simulate(
     concurrency: int = 32,
     router: Router | None = None,
     seed: int = 0,
+    slo=None,
 ) -> SimReport:
     """Serve ``pathset``'s queries through per-server FIFO queues.
 
@@ -178,18 +204,30 @@ def simulate(
     sequence against the live cluster state.  Returns per-query sojourn
     latencies and per-server occupancy — the quantities the controller's
     sliding window and the tail benchmarks consume.
+
+    ``slo`` (an :class:`repro.core.slo.SLOSpec` aligned with the pathset's
+    queries) tags every job with its query's tenant, so the report carries
+    per-tenant latency histograms (``summary()["per_tenant"]``) — the
+    per-tenant p99s the multi-tenant controller monitors.
     """
     model = model or LatencyModel()
     rng = np.random.default_rng(seed)
     alive = np.asarray([s.alive for s in cluster.servers], bool)
     S = cluster.n_servers
     nq = pathset.n_queries
+    tenant_of = None
+    tenant_names: tuple[str, ...] = ()
+    if slo is not None:
+        assert slo.n_queries == nq
+        tenant_of = np.asarray(slo.tenant_of, np.int32)
+        tenant_names = tuple(ts.name for ts in slo.tenants)
     if nq == 0:
         return SimReport(
             latency_us=np.zeros(0), arrival_us=np.zeros(0),
             query_failed=np.zeros(0, bool), busy_us=np.zeros(S),
             queue_wait_us=0.0, duration_us=0.0, offered_qps=rate_qps,
             concurrency=concurrency,
+            tenant_of=tenant_of, tenant_names=tenant_names,
         )
 
     # --- routing variants -------------------------------------------------
@@ -357,4 +395,6 @@ def simulate(
         duration_us=duration,
         offered_qps=rate_qps,
         concurrency=concurrency,
+        tenant_of=tenant_of,
+        tenant_names=tenant_names,
     )

@@ -10,8 +10,16 @@ from repro.workload.snb import snb_workload, snb_workload_materialized, snb_quer
 from repro.workload.gnn import gnn_workload, gnn_workload_materialized, gnn_query_paths
 from repro.workload.recsys import recsys_workload, recsys_workload_materialized
 from repro.workload.moe import expert_shard, moe_workload, moe_workload_materialized
+from repro.workload.tenants import (
+    FAMILY_TENANTS,
+    multi_tenant_workload,
+    tenant_spec,
+)
 
 __all__ = [
+    "FAMILY_TENANTS",
+    "multi_tenant_workload",
+    "tenant_spec",
     "batched",
     "materialize",
     "stream_latencies",

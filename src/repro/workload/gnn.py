@@ -18,8 +18,13 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.paths import PathSet
+from repro.core.slo import TenantSpec
 from repro.graph.csr import CSRGraph
 from repro.workload.analyzer import batched, materialize
+
+# serving tenant: sampling feeds training throughput, not an interactive
+# user — loosest default budget of the three families
+TENANT = TenantSpec("gnn", t_q=2)
 
 
 def gnn_query_paths(

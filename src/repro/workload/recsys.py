@@ -19,7 +19,13 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.paths import PathSet
+from repro.core.slo import TenantSpec
 from repro.workload.analyzer import batched, materialize
+
+# serving tenant: embedding fetch sits inside a strict end-to-end ranking
+# budget — tightest default (all rows co-located with the request's
+# coordinator, the paper's t=0 single-site regime)
+TENANT = TenantSpec("recsys", t_q=0)
 
 
 def recsys_request_paths(

@@ -36,11 +36,16 @@ from repro.graph.generators import (
     REPLY_OF,
     SNBLikeGraph,
 )
+from repro.core.slo import TenantSpec
 from repro.workload.analyzer import batched, materialize
 
 # default query-type mix (interactive short reads are uniformly mixed in
 # the official driver; traversing templates dominate path production)
 DEFAULT_MIX = {"IS2": 0.25, "IS3": 0.25, "IS5": 0.1, "IS6": 0.2, "IS7": 0.2}
+
+# serving tenant: interactive short reads are the paper's latency-critical
+# workload — tight default budget (at most one distributed traversal)
+TENANT = TenantSpec("snb", t_q=1)
 
 
 def _is2_paths(g: CSRGraph, person: int, k_messages: int, rng) -> list[list[int]]:

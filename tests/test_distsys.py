@@ -107,6 +107,32 @@ def test_router_hedged_primary_backup_distinct():
     assert backup[1] == -1       # nothing to hedge against
 
 
+def test_route_hop_queue_aware_skips_hot_replica():
+    """Eqn 1 remote-hop tie-break: live queue depth picks the replica."""
+    shard = np.asarray([0], np.int32)
+    scheme = ReplicationScheme.from_sharding(shard, 3)
+    scheme.mask[0, 2] = True  # copies at {0 (home), 2}
+    r = Router(scheme)
+    # remote hop from server 1 (no local copy): Eqn 1 default goes home
+    assert r.route_hop(0, 1) == (0, True)
+    # the home server is hot (deep queue) -> the idle replica serves it
+    hot_home = np.asarray([10, 0, 0])
+    assert r.route_hop(0, 1, load=hot_home) == (2, True)
+    # the replica is the hot one -> stay with the home server
+    hot_replica = np.asarray([0, 0, 10])
+    assert r.route_hop(0, 1, load=hot_replica) == (0, True)
+    # tie -> home wins (deterministic, matches the unloaded Eqn 1 pick)
+    assert r.route_hop(0, 1, load=np.zeros(3)) == (0, True)
+    # a local copy always short-circuits, load or not
+    assert r.route_hop(0, 2, load=hot_replica) == (2, False)
+    # liveness still filters: dead replica can't serve the hop
+    alive = np.asarray([True, True, False])
+    assert r.route_hop(0, 1, alive=alive, load=hot_home) == (0, True)
+    # nobody alive holds a copy -> -1 sentinel
+    assert r.route_hop(0, 1, alive=np.asarray([False, True, False]),
+                       load=hot_home) == (-1, True)
+
+
 def test_executor_surfaces_failed_queries():
     """Object with no alive copy: failed query reported, run completes."""
     from repro.core.paths import PathSet

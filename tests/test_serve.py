@@ -221,3 +221,116 @@ def test_controller_eviction_respects_capacity():
     assert scheme.mask[0, 1]  # RM-referenced replica survived
     assert scheme.mask[1, 1]  # window-active replica survived
     assert scheme.mask[:, 0].all()  # originals untouched
+
+
+def _square_wave_evictions(min_streak: int, flips: int = 6) -> int:
+    """Harness: two replica groups whose hotness alternates per window.
+
+    Mirrors the controller's eviction loop (streak update -> evict ->
+    re-add what the returning hot phase would force back), counting
+    evictions across ``flips`` windows of a square-wave hotspot.
+    """
+    from repro.core import ReshardingMap, ReplicationScheme
+    from repro.serve import evict_cold_replicas
+    from repro.serve.controller import AdaptiveController, ControllerConfig
+
+    shard = np.zeros(4, np.int32)
+    scheme = ReplicationScheme.from_sharding(shard, 2)
+    scheme.mask[:, 1] = True  # group A = {0, 1}, group B = {2, 3} at s1
+    cluster = Cluster(scheme)
+    ctl = AdaptiveController(
+        cluster, ControllerConfig(t=0, demote_after=min_streak)
+    )
+    rmap = ReshardingMap({}, {})
+    groups = (np.asarray([0, 1]), np.asarray([2, 3]))
+    total = 0
+    for k in range(flips):
+        active = groups[k % 2]
+        scheme.mask[active, 1] = True  # the hot phase re-adds its replicas
+        ctl._update_cold_streaks(active)
+        n, _ = evict_cold_replicas(
+            cluster, rmap, active, capacity=3.0,
+            cold_streak=ctl._cold_streak, min_streak=min_streak,
+        )
+        total += n
+    return total
+
+
+def test_eviction_hysteresis_square_wave():
+    """K consecutive cold windows gate demotion: an oscillating hotspot
+    must not add/evict-thrash the off-phase replicas."""
+    # K=1 (no hysteresis): every flip evicts the off-phase group, which the
+    # returning phase immediately re-adds — sustained thrash
+    assert _square_wave_evictions(min_streak=1) >= 5
+    # K=2: a group is cold for only one window before its phase returns
+    # and resets the streak -> zero evictions across the whole wave
+    assert _square_wave_evictions(min_streak=2) == 0
+
+
+def test_eviction_hysteresis_fires_on_sustained_cold():
+    """Hysteresis delays demotion; it must not block it: a replica cold
+    for K consecutive windows is evicted."""
+    from repro.core import ReshardingMap, ReplicationScheme
+    from repro.serve import evict_cold_replicas
+    from repro.serve.controller import AdaptiveController, ControllerConfig
+
+    shard = np.zeros(3, np.int32)
+    scheme = ReplicationScheme.from_sharding(shard, 2)
+    scheme.mask[:, 1] = True
+    cluster = Cluster(scheme)
+    ctl = AdaptiveController(
+        cluster, ControllerConfig(t=0, demote_after=2)
+    )
+    rmap = ReshardingMap({}, {})
+    active = np.asarray([0])  # objects 1, 2 stay cold throughout
+    counts = []
+    for _ in range(3):
+        ctl._update_cold_streaks(active)
+        n, _ = evict_cold_replicas(
+            cluster, rmap, active, capacity=1.0,
+            cold_streak=ctl._cold_streak, min_streak=2,
+        )
+        counts.append(n)
+    assert counts[0] == 0        # first cold window: streak 1 < 2
+    assert counts[1] > 0         # second consecutive: demotion fires
+    assert scheme.storage_per_server()[1] <= 1.0
+
+
+def test_controller_demote_after_wiring():
+    """ControllerConfig.demote_after gates the adapt-path eviction.
+
+    Server 1 starts over its capacity, so every repair candidate is
+    capacity-blocked until the eviction pass frees cold replicas — the
+    repair-fails -> demote -> retry-succeeds loop.  ``demote_after``
+    decides on which observation the demotion (and hence the successful
+    repair) happens.
+    """
+    from repro.core import ReplicationScheme
+
+    def run(demote_after):
+        shard = np.asarray([0, 0, 0, 0, 0, 1], np.int32)
+        scheme = ReplicationScheme.from_sharding(shard, 2)
+        scheme.mask[:, 1] = True  # pre-existing (non-RM) replicas at s1
+        ctl = AdaptiveController(
+            Cluster(scheme),
+            ControllerConfig(
+                # s0 has room for the repair; s1 starts over capacity
+                t=0, min_queries=1, capacity=np.asarray([6.0, 4.0]),
+                demote_after=demote_after,
+            ),
+        )
+        # [0, 5] crosses s0 -> s1: violates t=0; the repair (replicate 5
+        # to s0) stays blocked while s1 is over capacity; cold replicas
+        # {1, 2, 3, 4} at s1 are the demotion candidates
+        reports = [
+            ctl.observe(PathSet.from_lists([[0, 5]])) for _ in range(3)
+        ]
+        return reports
+
+    r = run(1)  # immediate demotion (pre-hysteresis behavior)
+    assert r[0].replicas_evicted > 0
+    assert r[1].feasible_after and r[1].replicas_added > 0
+    r = run(2)  # demotion waits for the second consecutive cold check
+    assert r[0].replicas_evicted == 0 and not r[0].feasible_after
+    assert r[1].replicas_evicted > 0
+    assert r[2].feasible_after and r[2].replicas_added > 0

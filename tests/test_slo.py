@@ -1,0 +1,350 @@
+"""Per-tenant SLOs: SLOSpec plumbing, vector-t greedy/engine, arbitration."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    PathSet,
+    SLOSpec,
+    TenantSpec,
+    is_latency_feasible,
+    query_slacks,
+    replicate_workload,
+)
+from repro.distsys import Cluster
+from repro.engine import LatencyEngine
+from repro.serve import AdaptiveController, ControllerConfig
+from tests.conftest import random_workload
+
+
+# ---------------------------------------------------------------------------
+# SLOSpec plumbing
+# ---------------------------------------------------------------------------
+def test_slospec_uniform_and_scalar():
+    slo = SLOSpec.uniform(2, 5)
+    assert slo.is_uniform and slo.scalar() == 2
+    assert slo.t_q.tolist() == [2] * 5
+    assert slo.tenants[0].name == "default"
+
+
+def test_slospec_from_tenants_and_queries():
+    tenants = (TenantSpec("a", 1), TenantSpec("b", 3))
+    slo = SLOSpec.from_tenants(tenants, np.asarray([0, 1, 1, 0]))
+    assert slo.t_q.tolist() == [1, 3, 3, 1]
+    assert not slo.is_uniform
+    assert slo.tenant_queries("b").tolist() == [1, 2]
+    with pytest.raises(ValueError):
+        slo.scalar()
+
+
+def test_slospec_concat_merges_tenants_by_name():
+    a = SLOSpec.uniform(1, 2, tenant="x")
+    b = SLOSpec.uniform(2, 3, tenant="y")
+    c = SLOSpec.uniform(1, 1, tenant="x")
+    cat = SLOSpec.concat([a, b, c])
+    assert cat.n_queries == 6
+    assert [t.name for t in cat.tenants] == ["x", "y"]
+    assert cat.tenant_of.tolist() == [0, 0, 1, 1, 1, 0]
+    sliced = cat.select_queries(2, 5)
+    assert sliced.t_q.tolist() == [2, 2, 2]
+
+
+def test_slospec_align_to_pathless_tail():
+    """A slice whose trailing queries have no paths must re-align before
+    pairing with PathSet.concatenate (its offsets use the pathset count)."""
+    # queries 0,1 have paths; query 2 produced none
+    ps = PathSet.from_lists([[0, 1], [2, 3]], query_ids=[0, 1])
+    slo = SLOSpec.uniform(1, 3, tenant="x")
+    assert slo.align_to(ps).n_queries == ps.n_queries == 2
+    other = PathSet.from_lists([[4]], query_ids=[0])
+    cat_ps = PathSet.concatenate([ps, other])
+    cat_slo = SLOSpec.concat(
+        [slo.align_to(ps), SLOSpec.uniform(2, 1, tenant="y")]
+    )
+    assert cat_slo.n_queries == cat_ps.n_queries
+    assert cat_slo.t_q.tolist() == [1, 1, 2]
+    with pytest.raises(ValueError):
+        SLOSpec.uniform(1, 1).align_to(ps)  # spec shorter than pathset
+
+
+def test_path_budgets_follow_query_ids():
+    ps = PathSet.from_lists([[0], [1], [2]], query_ids=[0, 0, 1])
+    slo = SLOSpec(
+        np.asarray([1, 4]), np.asarray([0, 0]), (TenantSpec("d", 1),)
+    )
+    assert slo.path_budgets(ps).tolist() == [1, 1, 4]
+
+
+# ---------------------------------------------------------------------------
+# greedy: scalar-vs-vector parity + genuine vector behavior
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("t", [0, 1, 2])
+def test_greedy_scalar_vector_mask_equality(rng, t):
+    ps, shard = random_workload(rng, n_paths=150, n_queries=90)
+    a, sa = replicate_workload(ps, shard, 5, t)
+    b, sb = replicate_workload(ps, shard, 5, SLOSpec.uniform(t, ps.n_queries))
+    assert np.array_equal(a.mask, b.mask)
+    assert sa.replicas == sb.replicas
+    assert sa.total_cost == sb.total_cost
+
+
+def test_greedy_vector_budgets_feasible_per_query(rng):
+    ps, shard = random_workload(rng, n_paths=200, n_queries=120)
+    t_q = rng.integers(0, 4, ps.n_queries).astype(np.int32)
+    scheme, stats = replicate_workload(ps, shard, 5, t_q)
+    assert stats.failed_paths == 0
+    assert is_latency_feasible(ps, scheme, t_q)
+    # slack is per query against each query's own budget
+    slack = query_slacks(ps, scheme, t_q)
+    assert (slack >= 0).all()
+
+
+def test_greedy_vector_cheaper_than_uniform_tightest(rng):
+    """Mixed budgets must not cost more than clamping everyone to the
+    tightest one (the scalar workaround SLOSpec replaces)."""
+    ps, shard = random_workload(rng, n_paths=200, n_queries=120)
+    t_q = np.where(np.arange(ps.n_queries) % 2 == 0, 1, 3).astype(np.int32)
+    mixed, _ = replicate_workload(ps, shard, 5, t_q)
+    tight, _ = replicate_workload(ps, shard, 5, 1)
+    assert mixed.replica_count() <= tight.replica_count()
+
+
+def test_budget_aware_pruning_keeps_tight_duplicate():
+    """Two identical paths with different budgets must BOTH bind: pruning
+    must not merge the tight-budget path into the loose-budget one."""
+    shard = np.asarray([0, 1, 2, 3], np.int32)
+    paths = [[0, 1, 2, 3], [0, 1, 2, 3]]
+    ps = PathSet.from_lists(paths, query_ids=[0, 1])
+    t_q = np.asarray([3, 1], np.int32)  # loose first: tight one is the dup
+    scheme, stats = replicate_workload(ps, shard, 4, t_q, prune=True)
+    assert stats.failed_paths == 0
+    assert is_latency_feasible(ps, scheme, t_q)
+
+
+# ---------------------------------------------------------------------------
+# engine: three-way backend parity for vector-t feasibility / slack
+# ---------------------------------------------------------------------------
+def test_engine_vector_slack_three_way_parity(rng):
+    ps, shard = random_workload(rng, n_paths=180, n_queries=100)
+    scheme, _ = replicate_workload(ps, shard, 5, 2)
+    t_q = rng.integers(0, 4, ps.n_queries).astype(np.int32)
+    slos = [
+        t_q,
+        SLOSpec(t_q, np.zeros(ps.n_queries, np.int32), (TenantSpec("d", 0),)),
+    ]
+    ref = None
+    for backend in ("reference", "jnp", "pallas"):
+        eng = LatencyEngine(scheme, backend=backend)
+        for t in slos:
+            slack = eng.query_slack(ps, t)
+            feas = eng.is_feasible(ps, t)
+            if ref is None:
+                ref = slack
+                # oracle: numpy per-query max vs budget
+                want = query_slacks(ps, scheme, t_q)
+                assert np.array_equal(slack, want)
+            assert np.array_equal(slack, ref), backend
+            assert feas == bool((ref >= 0).all()), backend
+    # scalar broadcast degenerates to the old behavior
+    eng = LatencyEngine(scheme)
+    assert eng.is_feasible(ps, 2)
+    assert np.array_equal(
+        eng.query_slack(ps, 2), query_slacks(ps, scheme, 2)
+    )
+
+
+def test_engine_from_arrays_raw_scheme(rng):
+    from repro.engine import RawScheme
+
+    ps, shard = random_workload(rng, n_paths=60)
+    scheme, _ = replicate_workload(ps, shard, 5, 1)
+    eng = LatencyEngine.from_arrays(scheme.mask, shard)
+    assert isinstance(eng.scheme, RawScheme)
+    assert np.array_equal(
+        eng.path_latencies(ps), LatencyEngine(scheme).path_latencies(ps)
+    )
+    # RawScheme is a real mutable scheme: add_replicas flips its mask too
+    eng.add_replicas(np.asarray([0]), np.asarray([1]))
+    assert eng.scheme.mask[0, 1]
+
+
+# ---------------------------------------------------------------------------
+# controller: per-tenant triggers + deterministic arbitration
+# ---------------------------------------------------------------------------
+def _two_tenant_batch(n_srv=4):
+    """Tenant "cheap" violates with short paths, "costly" with long ones.
+
+    Objects are laid out so every path alternates servers (home = id % S),
+    making each query of both tenants violate t=0/1 budgets.
+    """
+    n_obj = 40
+    shard = (np.arange(n_obj) % n_srv).astype(np.int32)
+    cheap = [[i, i + 1] for i in range(0, 8, 2)]            # 1 hop each
+    costly = [[i, i + 1, i + 2, i + 3] for i in range(8, 32, 4)]  # 3 hops
+    paths = cheap + costly
+    qids = list(range(len(paths)))
+    ps = PathSet.from_lists(paths, query_ids=qids)
+    tenants = (TenantSpec("cheap", 0), TenantSpec("costly", 1))
+    tenant_of = np.asarray(
+        [0] * len(cheap) + [1] * len(costly), np.int32
+    )
+    slo = SLOSpec.from_tenants(tenants, tenant_of)
+    return ps, shard, slo, n_obj, n_srv
+
+
+def test_controller_arbitration_deterministic_winner():
+    from repro.core import ReplicationScheme
+
+    ps, shard, slo, n_obj, n_srv = _two_tenant_batch()
+    scheme = ReplicationScheme.from_sharding(shard, n_srv)
+    cluster = Cluster(scheme)
+    ctl = AdaptiveController(
+        cluster,
+        ControllerConfig(
+            tenants=slo.tenants, window=64, min_queries=1,
+            capacity=float(n_obj),  # finite headroom => contention
+        ),
+    )
+    report = ctl.observe(ps, slo=slo)
+    assert report is not None
+    # both tenants violate simultaneously; "cheap" needs fewer marginal
+    # bytes per violation, so it deterministically wins the round
+    assert report.tenants == ("cheap",)
+    assert report.deferred == ("costly",)
+    assert report.replicas_added > 0
+    assert is_latency_feasible(
+        ps, scheme, np.where(np.asarray(slo.tenant_of) == 0, 0, 99)
+    )
+    # the deferred tenant still violates -> it wins the next round (aging)
+    report2 = ctl.observe(ps, slo=slo)
+    assert report2 is not None
+    assert report2.tenants == ("costly",)
+    assert report2.feasible_after
+    assert is_latency_feasible(ps, scheme, slo)
+    # repeatable: same inputs, same winners
+    ps2, shard2, slo2, _, _ = _two_tenant_batch()
+    scheme2 = ReplicationScheme.from_sharding(shard2, n_srv)
+    ctl2 = AdaptiveController(
+        Cluster(scheme2),
+        ControllerConfig(
+            tenants=slo2.tenants, window=64, min_queries=1,
+            capacity=float(n_obj),
+        ),
+    )
+    r1 = ctl2.observe(ps2, slo=slo2)
+    assert (r1.tenants, r1.deferred) == (("cheap",), ("costly",))
+
+
+def test_controller_uncontended_repairs_all_triggered_tenants():
+    from repro.core import ReplicationScheme
+
+    ps, shard, slo, _, n_srv = _two_tenant_batch()
+    scheme = ReplicationScheme.from_sharding(shard, n_srv)
+    ctl = AdaptiveController(
+        Cluster(scheme),
+        ControllerConfig(tenants=slo.tenants, window=64, min_queries=1),
+    )
+    report = ctl.observe(ps, slo=slo)
+    assert report is not None
+    # no capacity/epsilon bound -> nothing to arbitrate: one vector-budget
+    # pass repairs both tenants together
+    assert set(report.tenants) == {"cheap", "costly"}
+    assert report.deferred == ()
+    assert report.feasible_after
+    assert is_latency_feasible(ps, scheme, slo)
+
+
+def test_controller_p99_tenant_not_starved_in_arbitration():
+    """A tenant that only breaches its wall-clock SLO (no infeasible
+    paths, so its repair-cost estimate is inf) must still win a contended
+    round via aging; its p99 evidence must survive other tenants' repairs."""
+    from repro.core import ReplicationScheme
+
+    n_srv = 4
+    n_obj = 40
+    shard = (np.arange(n_obj) % n_srv).astype(np.int32)
+    tenants = (TenantSpec("a", 0), TenantSpec("p", 5, p99_slo_us=100.0))
+
+    def batch(offset):
+        # tenant a: fresh server-crossing pairs each round (violate t=0);
+        # tenant p: single-object reads (feasible) but wall-clock slow
+        a_paths = [[offset + i, offset + i + 1] for i in range(0, 6, 2)]
+        p_paths = [[30 + i] for i in range(4)]
+        ps = PathSet.from_lists(
+            a_paths + p_paths, query_ids=list(range(len(a_paths) + 4))
+        )
+        slo = SLOSpec.from_tenants(
+            tenants, np.asarray([0] * len(a_paths) + [1] * 4, np.int32)
+        )
+        lat = np.asarray([10.0] * len(a_paths) + [500.0] * 4)
+        return ps, slo, lat
+
+    scheme = ReplicationScheme.from_sharding(shard, n_srv)
+    ctl = AdaptiveController(
+        Cluster(scheme),
+        ControllerConfig(
+            tenants=tenants, min_queries=1, capacity=float(n_obj),
+        ),
+    )
+    ps1, slo1, lat1 = batch(0)
+    r1 = ctl.observe(ps1, latency_us=lat1, slo=slo1)
+    # contended: "a" has a finite marginal-byte score, "p" is inf -> a wins
+    assert r1.tenants == ("a",) and r1.deferred == ("p",)
+    # "p"'s p99 evidence survived a's repair and its deferral aged: it
+    # wins the next contended round outright despite the inf score
+    ps2, slo2, lat2 = batch(8)
+    r2 = ctl.observe(ps2, latency_us=lat2, slo=slo2)
+    assert r2.tenants == ("p",)
+    assert "a" in r2.deferred
+    assert r2.trigger in ("p99_slo", "feasibility")
+
+
+def test_controller_unrepairable_window_rearms_on_new_evidence_only():
+    """A capacity-blocked (unrepairable) tenant violation must not re-fire
+    a no-op repair on every later observe() of other tenants' traffic."""
+    from repro.core import ReplicationScheme
+
+    shard = np.asarray([0, 1, 0, 0], np.int32)
+    tenants = (TenantSpec("a", 5), TenantSpec("b", 0))
+    scheme = ReplicationScheme.from_sharding(shard, 2)
+    cluster = Cluster(scheme)
+    ctl = AdaptiveController(
+        cluster,
+        ControllerConfig(
+            tenants=tenants, min_queries=1,
+            # capacity == current load: every repair candidate is blocked
+            # and there are no replicas to evict
+            capacity=np.asarray([3.0, 1.0]),
+        ),
+    )
+    bad = PathSet.from_lists([[0, 1]])  # s0 -> s1: violates b's t=0
+    slo_b = SLOSpec.from_tenants(tenants, np.asarray([1], np.int32))
+    r1 = ctl.observe(bad, slo=slo_b)
+    assert r1 is not None and not r1.feasible_after
+    assert r1.replicas_added == 0  # capacity-blocked: nothing applied
+    # tenant a's traffic keeps flowing; b's stale unrepairable window must
+    # not re-trigger a full repair pass on every batch
+    ok = PathSet.from_lists([[2], [3]])
+    slo_a = SLOSpec.from_tenants(tenants, np.asarray([0, 0], np.int32))
+    for _ in range(3):
+        assert ctl.observe(ok, slo=slo_a) is None
+    # fresh evidence for b re-arms the trigger
+    r2 = ctl.observe(bad, slo=slo_b)
+    assert r2 is not None and "b" in r2.tenants
+
+
+def test_controller_per_tenant_windows_and_stats():
+    from repro.core import ReplicationScheme
+
+    ps, shard, slo, _, n_srv = _two_tenant_batch()
+    scheme = ReplicationScheme.from_sharding(shard, n_srv)
+    ctl = AdaptiveController(
+        Cluster(scheme),
+        # min_queries above either tenant's count: monitor only, no repair
+        ControllerConfig(tenants=slo.tenants, window=64, min_queries=1000),
+    )
+    assert ctl.observe(ps, slo=slo) is None
+    stats = ctl.tenant_stats()
+    assert set(stats) == {"cheap", "costly"}
+    assert stats["cheap"]["violation_frac"] == 1.0
+    assert stats["costly"]["violation_frac"] == 1.0
+    assert stats["cheap"]["t_q"] == 0 and stats["costly"]["t_q"] == 1
