@@ -1,0 +1,157 @@
+"""Routing-policy benchmark: p99 vs load x policy + nearest-copy pruning.
+
+Two measurements, written to ``BENCH_routing.json`` (and emitted as CSV
+rows via ``benchmarks.common``):
+
+  1. **p99 vs offered load x {home_first, nearest_copy, queue_aware}** —
+     the drifted hotspot phase of an SNB drift sequence served through the
+     discrete-event simulator against ONE fixed replication scheme (greedy
+     on the union workload, so the drifted phase's objects actually have
+     replicas to route between).  ``queue_aware`` re-picks hop targets
+     every ``REROUTE_EVERY`` arrivals against the simulator's live queue
+     depths.  Acceptance gate: at the saturated end of the sweep,
+     ``queue_aware`` p99 <= ``home_first`` p99 with replication held
+     fixed — replica-aware hop routing converts existing replication
+     bytes into tail latency, shipping nothing.
+
+  2. **nearest-copy pruning** — the greedy scheme provisions against the
+     home-first walk; scored under ``nearest_copy`` (the paper-faithful
+     "any co-located replica counts" reading of Eqn 1) many of those
+     bytes are redundant.  ``prune_scheme_replicas`` greedily drops
+     replicas while the workload stays nearest-copy feasible; the report
+     carries the bytes saved and the fraction of the replica set dropped.
+
+Usage: PYTHONPATH=src python -m benchmarks.routing_policies [--smoke] [out.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import replicate_workload
+from repro.core.paths import PathSet
+from repro.core.replication import prune_scheme_replicas
+from repro.distsys import Cluster, LatencyModel
+from repro.engine import LatencyEngine
+from repro.graph import make_sharding, snb_like
+from repro.serve import snb_drift
+
+T = 2
+N_SERVERS = 6
+REROUTE_EVERY = 25
+POLICIES = ("home_first", "nearest_copy", "queue_aware")
+
+
+def run(out_path: str = "BENCH_routing.json", smoke: bool = False) -> dict:
+    queries_per_phase = 200 if smoke else 500
+    load_sweep = (100_000, 700_000) if smoke else (100_000, 400_000, 700_000)
+
+    snb = snb_like(1, seed=0)
+    f = snb.graph.object_sizes().astype(np.float32)
+    shard = make_sharding("hash", snb.graph, N_SERVERS, seed=0)
+    model = LatencyModel()
+
+    phases = snb_drift(
+        snb, n_phases=3, queries_per_phase=queries_per_phase, hot_prob=0.9,
+        seed=0,
+    )
+    union = PathSet.concatenate([p.pathset for p in phases])
+    drifted = phases[-1].pathset
+
+    # replication held fixed across the whole sweep: one greedy scheme on
+    # the union workload (so drifted-phase objects have replicas at all)
+    scheme, _ = replicate_workload(union, shard, N_SERVERS, t=T, f=f)
+
+    result: dict = {
+        "t": T,
+        "workload": {
+            "n_servers": N_SERVERS,
+            "queries_per_phase": queries_per_phase,
+            "union_paths": union.n_paths,
+            "replicas": scheme.replica_count(),
+        },
+        "smoke": smoke,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+    }
+
+    # ------------------------------------------------------------------ 1.
+    sweep = []
+    for qps in load_sweep:
+        row: dict = {"offered_qps": qps}
+        for pol in POLICIES:
+            kw = (
+                {"reroute_every": REROUTE_EVERY}
+                if pol == "queue_aware"
+                else {}
+            )
+            from repro.serve import simulate
+
+            rep = simulate(
+                Cluster(scheme.copy(), f=f), drifted, rate_qps=qps,
+                model=model, seed=7, policy=pol, **kw,
+            )
+            row[pol] = {
+                "p50_us": round(rep.p50_us, 1),
+                "p99_us": round(rep.p99_us, 1),
+                "p999_us": round(rep.p999_us, 1),
+                "max_utilization": round(float(rep.utilization().max()), 4),
+                "reroutes": rep.reroutes,
+            }
+            emit("routing", "p99_us", round(rep.p99_us, 1),
+                 qps=qps, policy=pol)
+        sweep.append(row)
+    result["load_sweep"] = sweep
+
+    saturated = sweep[-1]
+    result["queue_aware_le_home_first"] = bool(
+        saturated["queue_aware"]["p99_us"]
+        <= saturated["home_first"]["p99_us"]
+    )
+    assert result["queue_aware_le_home_first"], (
+        "queue_aware must not lose to home_first at saturation "
+        f"({saturated['queue_aware']['p99_us']} vs "
+        f"{saturated['home_first']['p99_us']})"
+    )
+
+    # ------------------------------------------------------------------ 2.
+    # nearest-copy pruning on a phase-0 greedy scheme (t=1: plenty of
+    # replicas, all provisioned against home-first hops)
+    ps0 = phases[0].pathset
+    p_scheme, _ = replicate_workload(ps0, shard, N_SERVERS, t=1, f=f)
+    replicas_before = p_scheme.replica_count()
+    bytes_before = float(p_scheme.storage_per_server(f).sum())
+    n_dropped, bytes_saved = prune_scheme_replicas(
+        p_scheme, ps0, 1, policy="nearest_copy", f=f
+    )
+    eng = LatencyEngine(p_scheme)
+    result["nearest_copy_prune"] = {
+        "replicas_before": replicas_before,
+        "replicas_dropped": n_dropped,
+        "drop_frac": round(n_dropped / max(replicas_before, 1), 4),
+        "bytes_saved": round(bytes_saved, 1),
+        "bytes_saved_frac_of_storage": round(
+            bytes_saved / bytes_before, 4
+        ),
+        "still_feasible_nearest_copy": bool(
+            eng.is_feasible(ps0, 1, policy="nearest_copy")
+        ),
+    }
+    assert result["nearest_copy_prune"]["still_feasible_nearest_copy"]
+    emit("routing", "prune_replicas_dropped", n_dropped)
+    emit("routing", "prune_bytes_saved", round(bytes_saved, 1))
+
+    with open(out_path, "w") as fh:
+        json.dump(result, fh, indent=2)
+    print(f"# wrote {out_path}")
+    return result
+
+
+if __name__ == "__main__":
+    args = [a for a in sys.argv[1:]]
+    smoke = "--smoke" in args
+    args = [a for a in args if a != "--smoke"]
+    run(args[0] if args else "BENCH_routing.json", smoke=smoke)

@@ -11,6 +11,9 @@
   serve_tail            — serving simulator p99 vs load + controller value
   tenant_frontier       — multi-tenant SLOs: vector-t frontier, per-tenant
                           p99 static vs arbitrating controller
+  routing_policies      — hop-routing policies: p99 vs load x
+                          {home_first, nearest_copy, queue_aware} +
+                          nearest-copy replica pruning
 
 Usage: PYTHONPATH=src python -m benchmarks.run [module ...]
 Prints ``bench,metric,tags,value`` CSV.
@@ -22,7 +25,7 @@ import time
 MODULES = ["fig2_traversals", "fig6_latency_tradeoff", "fig7_sharding",
            "table4_runtime", "reshard_cost", "beyond_paper",
            "engine_backends", "perf_iterate", "serve_tail",
-           "tenant_frontier"]
+           "tenant_frontier", "routing_policies"]
 
 # zero-arg entry point per module when it isn't ``run`` (perf_iterate's
 # ``run`` is the arch-cell driver; its benchmark entry is ``run_engine``)

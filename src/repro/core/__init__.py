@@ -27,6 +27,7 @@ from repro.core.replication import (
     is_latency_feasible,
     path_latencies,
     path_latency_reference,
+    prune_scheme_replicas,
     query_latencies,
     query_slacks,
     subpath_structure,
@@ -71,6 +72,7 @@ __all__ = [
     "path_latency_reference",
     "query_latencies",
     "query_slacks",
+    "prune_scheme_replicas",
     "subpath_structure",
     "GreedyStats",
     "replicate_delta",

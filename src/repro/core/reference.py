@@ -48,6 +48,69 @@ def path_latencies_reference(
     return out
 
 
+def routed_trace_reference(
+    objects: np.ndarray,
+    lengths: np.ndarray,
+    mask: np.ndarray,
+    home: np.ndarray,
+    start: np.ndarray | None = None,
+    policy="home_first",
+    load: np.ndarray | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Policy-routed access-walk oracle (``repro.engine.routing``).
+
+    One path at a time, one access at a time: a hop is local when the
+    current server holds a copy (Eqn 1); a remote hop's target comes from
+    the policy — ``home[obj]`` under ``home_first``, the
+    :func:`~repro.engine.routing.pick_holder_host` holder pick under
+    ``nearest_copy``/``queue_aware`` (``load`` ranks holders for the
+    latter).  Returns (servers int32 [P, L], local bool [P, L]) with
+    position 0 local when the path is non-empty — exactly the contract of
+    ``repro.engine.backends.access_trace``, which is parity-tested
+    against this function.
+    """
+    from repro.engine.routing import pick_holder_host, resolve_policy
+
+    pol = resolve_policy(policy)
+    lv = load if pol.uses_load else None
+    P, L = objects.shape
+    servers = np.zeros((P, L), np.int32)
+    local = np.zeros((P, L), bool)
+    home = np.asarray(home, np.int64)
+    for i in range(P):
+        n = int(lengths[i])
+        if n == 0:
+            continue
+        cur = int(start[i]) if start is not None else int(home[objects[i, 0]])
+        servers[i, 0] = cur
+        local[i, 0] = True
+        for x in range(1, n):
+            v = int(objects[i, x])
+            if cur >= 0 and mask[v, cur]:
+                local[i, x] = True
+            elif pol.name == "home_first":
+                cur = int(home[v])
+            else:
+                la = None
+                if pol.lookahead and x + 1 < n:
+                    la = mask[int(objects[i, x + 1])]
+                cur = pick_holder_host(mask[v], int(home[v]), lv, la)
+            servers[i, x] = cur
+        servers[i, n:] = cur
+    return servers, local
+
+
+def routed_path_latencies_reference(
+    objects, lengths, mask, home, policy="nearest_copy", load=None
+) -> np.ndarray:
+    """Distributed-traversal counts under a routing policy (oracle)."""
+    _, local = routed_trace_reference(
+        objects, lengths, mask, home, policy=policy, load=load
+    )
+    valid = np.arange(objects.shape[1])[None, :] < np.asarray(lengths)[:, None]
+    return (valid & ~local).sum(axis=1).astype(np.int32)
+
+
 def server_local_subpaths(path: list[int], shard: np.ndarray) -> list[list[int]]:
     """G_{p,d}: maximal runs of the path local to one server under d."""
     if not path:

@@ -221,3 +221,52 @@ def is_latency_feasible(
     return bool(
         np.all(query_slacks(pathset, scheme, t, path_lats=path_lats) >= 0)
     )
+
+
+def prune_scheme_replicas(
+    scheme: ReplicationScheme,
+    pathset: PathSet,
+    t,
+    policy="nearest_copy",
+    f: np.ndarray | None = None,
+    backend: str = "jnp",
+) -> tuple[int, float]:
+    """Drop replicas a policy-routed walk doesn't need for feasibility.
+
+    The greedy driver provisions against the ``home_first`` walk (every
+    remote hop pays the trip to the object's home); when the serving path
+    routes hops replica-aware (``nearest_copy`` — the paper-faithful
+    "any co-located copy counts" reading of Eqn 1), some of those bytes
+    are redundant.  This post-pass visits the scheme's replicas
+    (non-originals) largest-``f`` first, tentatively removes each, and
+    keeps the removal when the workload stays feasible under ``policy``
+    scoring.  Mutates ``scheme`` in place; returns
+    ``(n_dropped, bytes_saved)``.
+
+    One greedy sweep, not an optimal set cover — the measured bytes are
+    a lower bound on the over-provisioning.
+    """
+    engine = LatencyEngine(scheme, backend=backend)
+    if not engine.is_feasible(pathset, t, policy=policy):
+        return 0, 0.0
+    fv = (
+        np.ones(scheme.n_objects, np.float64)
+        if f is None
+        else np.asarray(f, np.float64)
+    )
+    repl = scheme.mask.copy()
+    repl[np.arange(scheme.n_objects), scheme.shard] = False
+    vs, ss = np.nonzero(repl)
+    order = np.argsort(-fv[vs], kind="stable")
+    n_dropped = 0
+    bytes_saved = 0.0
+    for i in order:
+        v, s = int(vs[i]), int(ss[i])
+        scheme.mask[v, s] = False
+        engine.refresh()
+        if engine.is_feasible(pathset, t, policy=policy):
+            n_dropped += 1
+            bytes_saved += float(fv[v])
+        else:
+            scheme.mask[v, s] = True
+    return n_dropped, bytes_saved

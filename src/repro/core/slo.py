@@ -31,11 +31,23 @@ class TenantSpec:
       name: stable tenant identifier (query family / customer).
       t_q: default latency budget in distributed traversals (Def 4.4).
       p99_slo_us: optional wall-clock p99 SLO for the serve-layer monitor.
+      weight: priority weight for the controller's capacity arbitration —
+        a triggered tenant's repair is ranked by *weighted*
+        bytes-per-violation (estimated bytes / weight), so a weight-10
+        tenant wins a contended round against an equal-cost weight-1
+        tenant.  Arbitration aging still outranks any weight (a deferred
+        tenant wins the next contended round), so low-weight tenants
+        cannot starve.  Must be > 0.
     """
 
     name: str
     t_q: int
     p99_slo_us: float | None = None
+    weight: float = 1.0
+
+    def __post_init__(self):
+        if not self.weight > 0:
+            raise ValueError("tenant weight must be > 0")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -126,12 +126,21 @@ def trace_paths(
     scheme: ReplicationScheme,
     alive: np.ndarray,
     start: np.ndarray | None = None,
+    policy=None,
+    load: np.ndarray | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Engine-backed access walk (Eqn 1) under liveness.
 
     Returns (servers int32 [P, L], local bool [P, L]); ``start`` optionally
     sets the per-path start server (a router's coordinator picks).  Visited
     server -1 means the access had no alive copy to go to.
+
+    ``policy`` (str | ``repro.engine.routing.RoutingPolicy``) selects the
+    remote-hop target rule — the fail-over home under ``home_first``, a
+    holder pick from the alive-masked replica words under
+    ``nearest_copy``/``queue_aware`` (``load`` = live queue depths).  The
+    holder words are liveness-filtered, so the policy walk subsumes both
+    the fail-over map and the scalar ``Router.route_hop``.
     """
     mask = scheme.mask & alive[None, :]
     home = failover_home(scheme, alive)
@@ -143,6 +152,8 @@ def trace_paths(
         to_device(np.asarray(pathset.lengths, np.int32)),
         to_device(pack_bool_mask(mask)),
         to_device(home),
+        policy=policy,
+        load=load,
         **kw,
     )
     return np.asarray(servers), np.asarray(local)
@@ -153,6 +164,8 @@ def _path_costs(
     scheme: ReplicationScheme,
     alive: np.ndarray,
     start: np.ndarray | None = None,
+    policy=None,
+    load: np.ndarray | None = None,
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Access walk + counters.
 
@@ -163,7 +176,7 @@ def _path_costs(
     alive copy at all (visited server -1).
     """
     S = scheme.n_servers
-    servers, local = trace_paths(pathset, scheme, alive, start)
+    servers, local = trace_paths(pathset, scheme, alive, start, policy, load)
 
     valid = pathset.objects >= 0
     remote = valid & ~local  # only positions >= 1 can be remote
@@ -193,6 +206,7 @@ def execute_workload(
     seed: int = 0,
     hedge_replicas: bool = False,
     router: Router | None = None,
+    policy=None,
 ) -> ExecutionReport:
     """Execute a workload; per-query latency = slowest path + coordination.
 
@@ -204,6 +218,12 @@ def execute_workload(
     of hedging and is reflected in its latency draw, not double-counted
     into throughput).
 
+    ``policy``: per-hop routing policy (``repro.engine.routing``) for the
+    batched walk itself — ``home_first`` (default, Eqn 1 verbatim),
+    ``nearest_copy``, or ``queue_aware`` (holders ranked by the cluster's
+    live queue depths).  Orthogonal to ``router``, which only picks each
+    query's *coordinator*.
+
     ``hedge_replicas``: per-hop straggler mitigation — when a remote hop
     has >1 alive copy, the executor issues hedged requests and takes the
     faster jitter draw (min of two lognormals), a direct secondary benefit
@@ -212,6 +232,7 @@ def execute_workload(
     model = model or LatencyModel()
     rng = np.random.default_rng(seed)
     alive = np.asarray([s.alive for s in cluster.servers], bool)
+    load = cluster.queue_depths()
     nq = pathset.n_queries
     qids = np.asarray(pathset.query_ids)
 
@@ -234,7 +255,7 @@ def execute_workload(
         start = coord[qids]
 
     n_local, n_remote, local_srv, rpc_srv, dead = _path_costs(
-        pathset, cluster.scheme, alive, start
+        pathset, cluster.scheme, alive, start, policy, load
     )
 
     lat = model.sample(n_local.astype(np.float64), n_remote.astype(np.float64), rng)
@@ -259,7 +280,7 @@ def execute_workload(
         # race the backup coordinator pick: independent walk + jitter draw,
         # keep the faster completion per query (min of two path-maxima).
         b_local, b_remote, _, _, b_dead = _path_costs(
-            pathset, cluster.scheme, alive, backup_start
+            pathset, cluster.scheme, alive, backup_start, policy, load
         )
         b_lat = model.sample(
             b_local.astype(np.float64), b_remote.astype(np.float64), rng

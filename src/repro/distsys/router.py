@@ -135,26 +135,24 @@ class Router:
         so a hot replica with a deep queue gets skipped even though Eqn 1
         would nominally route there.  Locality is unchanged either way: a
         copy at ``current`` always short-circuits the hop.
+
+        This is the scalar twin of the batched ``queue_aware`` policy
+        walk (``repro.engine.routing``): the loaded pick delegates to the
+        same :func:`~repro.engine.routing.pick_holder_host` oracle the
+        engine backends are parity-tested against.
         """
+        from repro.engine.routing import pick_holder_host
+
         alive_ok = True if alive is None else alive[current]
         if alive_ok and self.scheme.mask[obj, current]:
             return current, False
         home = int(self.scheme.shard[obj])
+        holders = self.scheme.mask[obj].copy()
+        if alive is not None:
+            holders &= alive
         if load is not None:
-            holders = self.scheme.mask[obj].copy()
-            if alive is not None:
-                holders &= alive
-            cands = np.nonzero(holders)[0]
-            if len(cands) == 0:
-                return -1, True
-            lv = np.asarray(load)[cands]
-            # least-loaded holder; ties prefer the home server, then the
-            # lowest id (deterministic)
-            order = np.lexsort((cands, cands != home, lv))
-            return int(cands[order[0]]), True
+            return pick_holder_host(holders, home, load), True
         if alive is None or alive[home]:
             return home, True
-        copies = np.nonzero(
-            self.scheme.mask[obj] & (alive if alive is not None else True)
-        )[0]
+        copies = np.nonzero(holders)[0]
         return (int(copies[0]) if len(copies) else -1), True

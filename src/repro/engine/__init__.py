@@ -13,10 +13,21 @@ analyzer, and every benchmark.
                    degenerate case)
   RawScheme      — minimal mask+shard scheme carrier (from_arrays input)
   PackedScheme   — the device-resident packed uint32 bitmask state
+  RoutingPolicy  — pluggable remote-hop target selection for the batched
+                   access walk (home_first | nearest_copy | queue_aware);
+                   consumed by access_trace / path_latencies(policy=)
   TRANSFER       — host<->device transfer accounting (perf benchmarks)
 """
 from repro.engine.engine import DevicePaths, LatencyEngine, RawScheme
 from repro.engine.packed import PackedScheme, pack_bool_mask, unpack_words
+from repro.engine.routing import (
+    POLICIES,
+    HomeFirst,
+    NearestCopy,
+    QueueAware,
+    RoutingPolicy,
+    resolve_policy,
+)
 from repro.engine.streaming import TRANSFER, to_device
 from repro.engine.backends import BACKENDS
 
@@ -30,4 +41,10 @@ __all__ = [
     "TRANSFER",
     "to_device",
     "BACKENDS",
+    "POLICIES",
+    "RoutingPolicy",
+    "HomeFirst",
+    "NearestCopy",
+    "QueueAware",
+    "resolve_policy",
 ]

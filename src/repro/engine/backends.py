@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.engine.packed import test_bits
+from repro.engine.routing import resolve_policy
 from repro.kernels.path_latency import path_latency_pallas
 
 BACKENDS = ("reference", "jnp", "pallas")
@@ -161,7 +162,123 @@ def _root_home(objects, home):
     return home[jnp.maximum(objects[:, 0], 0)].astype(jnp.int32)
 
 
-def access_trace(objects, lengths, words, home, start=None):
+# ---------------------------------------------------------------------------
+# Policy-parameterized walk: the per-hop target is a vectorized function of
+# (current server, object words, home, load) instead of the constant
+# ``home[obj]``.  See ``repro.engine.routing`` for the policy semantics.
+# ---------------------------------------------------------------------------
+def _unpack_rows(w):
+    """[P, W] uint32 -> [P, W*32] bool holder bits (little-endian words)."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (w[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    return bits.reshape(w.shape[0], -1).astype(jnp.bool_)
+
+
+def _pick_targets(cand, home, load):
+    """Least-loaded holder per lane; home wins ties, then lowest id.
+
+    ``cand`` bool [P, Sp] candidate holders, ``home`` int32 [P] (may be
+    -1), ``load`` float32 [Sp].  Returns int32 [P]; -1 when a lane has no
+    candidate.  The scalar twin is ``routing.pick_holder_host``.
+    """
+    any_c = cand.any(axis=1)
+    lv = jnp.where(cand, load[None, :], jnp.inf)
+    m = jnp.min(lv, axis=1)
+    best = cand & (lv <= m[:, None])
+    hc = jnp.maximum(home, 0)
+    home_ok = (home >= 0) & jnp.take_along_axis(best, hc[:, None], axis=1)[:, 0]
+    first = jnp.argmax(best, axis=1).astype(jnp.int32)
+    tgt = jnp.where(home_ok, home.astype(jnp.int32), first)
+    return jnp.where(any_c, tgt, jnp.int32(-1))
+
+
+@functools.partial(jax.jit, static_argnames=("home_first", "lookahead"))
+def _routed_trace_impl(
+    objects, lengths, words, home, start, load, home_first, lookahead
+):
+    """Generalized access walk: hop targets picked by a routing policy.
+
+    With ``home_first=True`` the hop target is ``home[obj]`` — the same
+    ops as ``_access_trace_impl`` (bit-identical, asserted in tests).
+    Otherwise the target is the holder pick of ``_pick_targets`` over the
+    object's packed words (``load`` = zeros gives ``nearest_copy``, live
+    queue depths give ``queue_aware``), optionally preferring holders of
+    the path's *next* object (``lookahead``).
+    """
+    P, L = objects.shape
+    valid = jnp.arange(L)[None, :] < lengths[:, None]
+    safe = jnp.maximum(objects, 0)
+    hrows = home[safe]  # [P, L]
+    wrows = words[safe]  # [P, L, W]
+    # holder words of the NEXT object per step (zeros when x+1 is padding);
+    # [P, L-1, W] to match the scan inputs — for L == 1 the scan runs zero
+    # steps and the lookahead rows are empty too
+    if L > 1:
+        wnext = jnp.concatenate(
+            [wrows[:, 2:], jnp.zeros_like(wrows[:, :1])], axis=1
+        )
+        vnext = jnp.concatenate(
+            [valid[:, 2:], jnp.zeros_like(valid[:, :1])], axis=1
+        )
+        wnext = jnp.where(vnext[:, :, None], wnext, jnp.uint32(0))
+    else:
+        wnext = wrows[:, 1:]
+
+    server0 = jnp.where(valid[:, 0], start, 0).astype(jnp.int32)
+
+    def step(server, xs):
+        h_t, w_t, wn_t, v_t = xs
+        srv_c = jnp.maximum(server, 0)
+        word = jnp.take_along_axis(w_t, (srv_c // 32)[:, None], axis=1)[:, 0]
+        bit = (srv_c % 32).astype(jnp.uint32)
+        has_local = ((word >> bit) & jnp.uint32(1)).astype(jnp.bool_)
+        has_local = has_local & (server >= 0)
+        if home_first:
+            tgt = h_t
+        else:
+            cand = _unpack_rows(w_t)
+            tgt = _pick_targets(cand, h_t, load)
+            if lookahead:
+                la = cand & _unpack_rows(wn_t)
+                pref = _pick_targets(la, h_t, load)
+                tgt = jnp.where(la.any(axis=1), pref, tgt)
+        nxt = jnp.where(has_local, server, tgt).astype(jnp.int32)
+        nxt = jnp.where(v_t, nxt, server)
+        return nxt, (nxt, has_local & v_t)
+
+    xs = (
+        jnp.moveaxis(hrows[:, 1:], 1, 0),
+        jnp.moveaxis(wrows[:, 1:], 1, 0),
+        jnp.moveaxis(wnext, 1, 0),
+        jnp.moveaxis(valid[:, 1:], 1, 0),
+    )
+    _, (srv_rest, loc_rest) = jax.lax.scan(step, server0, xs)
+    servers = jnp.concatenate(
+        [server0[:, None], jnp.moveaxis(srv_rest, 0, 1)], axis=1
+    )
+    local = jnp.concatenate(
+        [valid[:, :1], jnp.moveaxis(loc_rest, 0, 1)], axis=1
+    )
+    return servers, local
+
+
+def _load_vector(load, words) -> jnp.ndarray:
+    """Pad a per-server load vector to the words' W*32 bit width.
+
+    Bits past ``n_servers`` are never set in the packed words, so the pad
+    value is irrelevant for correctness (padded servers are never
+    candidates); zeros keep the array cheap.
+    """
+    width = words.shape[1] * 32
+    out = np.zeros(width, np.float32)
+    if load is not None:
+        lv = np.asarray(load, np.float32)
+        out[: lv.shape[0]] = lv
+    return jnp.asarray(out)
+
+
+def access_trace(objects, lengths, words, home, start=None, policy=None,
+                 load=None):
     """Walk Eqn 1 recording the visited server and locality per position.
 
     ``home`` is a per-object routing target (the sharding function, or the
@@ -170,13 +287,77 @@ def access_trace(objects, lengths, words, home, start=None):
     the router's coordinator pick when it differs from ``home[root]``
     (replica_lb / hedged routing); default is ``home[root]``.
 
+    ``policy`` (str | ``repro.engine.routing.RoutingPolicy``; default
+    ``home_first``) selects the remote-hop target rule; ``load`` is the
+    per-server queue-depth vector a ``queue_aware`` policy ranks holders
+    by (ignored otherwise).
+
     Returns (servers int32 [P, L], local bool [P, L]); position 0 counts as
     local when the path is non-empty, matching the executor's accounting.
     The distributed-traversal count is ``(valid[:, 1:] & ~local[:, 1:]).sum``.
     """
+    pol = resolve_policy(policy)
     if start is None:
         start = _root_home(objects, home)
-    return _access_trace_impl(objects, lengths, words, home, start)
+    if pol.name == "home_first":
+        return _access_trace_impl(objects, lengths, words, home, start)
+    return _routed_trace_impl(
+        objects, lengths, words, home, start,
+        _load_vector(load if pol.uses_load else None, words),
+        home_first=False, lookahead=pol.lookahead,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("lookahead",))
+def _routed_counts_impl(objects, lengths, words, home, start, load, lookahead):
+    _, local = _routed_trace_impl(
+        objects, lengths, words, home, start, load,
+        home_first=False, lookahead=lookahead,
+    )
+    L = objects.shape[1]
+    valid = jnp.arange(L)[None, :] < lengths[:, None]
+    return jnp.sum((valid & ~local).astype(jnp.int32), axis=1)
+
+
+def routed_counts(objects, lengths, words, shard, policy, load=None):
+    """h(p, r, rho) per path under a non-home-first routing policy."""
+    pol = resolve_policy(policy)
+    return _routed_counts_impl(
+        objects, lengths, words, shard, _root_home(objects, shard),
+        _load_vector(load if pol.uses_load else None, words),
+        lookahead=pol.lookahead,
+    )
+
+
+def pallas_routed_trace(
+    objects, lengths, words, shard, policy, load=None, block: int = 128,
+    start=None,
+):
+    """Policy-routed walk via the Pallas kernel; (servers, local) arrays."""
+    from repro.kernels.routed_walk import routed_walk_pallas  # lazy import
+
+    pol = resolve_policy(policy)
+    home, masks = pallas_prep(objects, lengths, words, shard)
+    if start is None:
+        start = _root_home(objects, shard)
+    return routed_walk_pallas(
+        home, masks, lengths, start,
+        _load_vector(load if pol.uses_load else None, words),
+        block=block, interpret=not _on_tpu(),
+        lookahead=pol.lookahead, home_first=pol.name == "home_first",
+    )
+
+
+def pallas_routed_eval(
+    objects, lengths, words, shard, policy, load=None, block: int = 128
+):
+    """Distributed-traversal counts from the Pallas policy-routed walk."""
+    _, local = pallas_routed_trace(
+        objects, lengths, words, shard, policy, load, block=block
+    )
+    L = objects.shape[1]
+    valid = jnp.arange(L)[None, :] < lengths[:, None]
+    return jnp.sum((valid & ~local).astype(jnp.int32), axis=1)
 
 
 @jax.jit

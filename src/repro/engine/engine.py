@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.engine import backends
 from repro.engine.packed import PackedScheme, pack_bool_mask
+from repro.engine.routing import resolve_policy
 from repro.engine.streaming import stream_chunks, to_device
 
 DEFAULT_CHUNK = 8192
@@ -172,33 +173,58 @@ class LatencyEngine:
         return ReplicationScheme(self.host_mask(), self.host_shard())
 
     # -- evaluation -------------------------------------------------------
-    def path_latencies(self, pathset, chunk: int | None = None) -> np.ndarray:
-        """h(p, r, rho) per path: #distributed traversals (Def 4.2)."""
+    def path_latencies(
+        self,
+        pathset,
+        chunk: int | None = None,
+        policy=None,
+        load: np.ndarray | None = None,
+    ) -> np.ndarray:
+        """h(p, r, rho) per path: #distributed traversals (Def 4.2).
+
+        ``policy`` (str | ``RoutingPolicy``; default ``home_first``)
+        scores the walk under a hop-routing policy: ``home_first`` is the
+        historical Eqn 1 walk (bit-identical to calling without a
+        policy); ``nearest_copy``/``queue_aware`` pick remote-hop targets
+        from the replica holders (``load`` ranks holders for the
+        latter).  All three backends implement every policy.
+        """
+        pol = resolve_policy(policy)
         if pathset.n_paths == 0:
             return np.zeros((0,), dtype=np.int32)
         if self.backend == "reference":
-            return backends.reference_eval(
+            if pol.name == "home_first":
+                return backends.reference_eval(
+                    np.asarray(pathset.objects),
+                    np.asarray(pathset.lengths),
+                    self.host_mask(),
+                    self.host_shard(),
+                )
+            from repro.core.reference import (  # lazy: no cycle
+                routed_path_latencies_reference,
+            )
+
+            return routed_path_latencies_reference(
                 np.asarray(pathset.objects),
                 np.asarray(pathset.lengths),
                 self.host_mask(),
                 self.host_shard(),
+                policy=pol,
+                load=load,
             )
         chunk = int(chunk or self.chunk)
-        if isinstance(pathset, DevicePaths):
+        if pol.name == "home_first":
             compute = (
                 self._eval_chunk_resident
                 if self.resident
                 else self._make_nonresident_compute()
             )
+        else:
+            compute = self._make_policy_compute(pol, load)
+        if isinstance(pathset, DevicePaths):
             out = compute(pathset.objects, pathset.lengths)
             return np.asarray(out)[: pathset.n_paths].astype(np.int32)
         n = pathset.n_paths
-        if self.resident:
-            compute = self._eval_chunk_resident
-        else:
-            # legacy transfer profile: the unpacked bool mask rides along
-            # with EVERY chunk of every call.
-            compute = self._make_nonresident_compute()
         outs = stream_chunks(
             [np.asarray(pathset.objects, np.int32), np.asarray(pathset.lengths, np.int32)],
             n,
@@ -245,6 +271,87 @@ class LatencyEngine:
 
         return compute
 
+    def _device_words(self):
+        """(words, shard) on device — packed view of the current scheme.
+
+        Resident engines reuse the live ``PackedScheme``; non-resident
+        ones pack the host mask per call (the legacy transfer profile).
+        """
+        if self.packed is not None:
+            return self.packed.words, self.packed.shard
+        mask_host = np.asarray(self.scheme.mask, bool)
+        words_host = np.concatenate(
+            [pack_bool_mask(mask_host),
+             np.zeros((1, (mask_host.shape[1] + 31) // 32), np.uint32)],
+            axis=0,
+        )
+        return to_device(words_host), to_device(
+            np.asarray(self.scheme.shard, np.int32)
+        )
+
+    def _make_policy_compute(self, pol, load):
+        """Chunk-compute closure for a non-home-first routing policy."""
+        words, shard = self._device_words()
+        if self.backend == "pallas":
+
+            def compute(objects, lengths):
+                return backends.pallas_routed_eval(
+                    objects, lengths, words, shard, pol, load,
+                    block=self.block,
+                )
+
+            return compute
+
+        def compute(objects, lengths):
+            return backends.routed_counts(
+                objects, lengths, words, shard, pol, load
+            )
+
+        return compute
+
+    def access_trace(
+        self,
+        pathset,
+        start: np.ndarray | None = None,
+        policy=None,
+        load: np.ndarray | None = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Policy-routed access walk against the engine's scheme.
+
+        Remote hops target the object's home under ``home_first`` (the
+        historical walk, bit-identical), or the policy's holder pick
+        (``nearest_copy``/``queue_aware``; ``load`` = per-server queue
+        depths).  ``start`` optionally overrides the per-path start
+        server.  Returns host arrays (servers int32 [P, L], local bool
+        [P, L]) — the trace the distsys executor and the serving
+        simulator decorate with their latency models.
+        """
+        pol = resolve_policy(policy)
+        objects = np.asarray(pathset.objects, np.int32)
+        lengths = np.asarray(pathset.lengths, np.int32)
+        if self.backend == "reference":
+            from repro.core.reference import routed_trace_reference  # lazy
+
+            return routed_trace_reference(
+                objects, lengths, self.host_mask(), self.host_shard(),
+                start=start, policy=pol, load=load,
+            )
+        words, shard = self._device_words()
+        kw = {}
+        if start is not None:
+            kw["start"] = to_device(np.asarray(start, np.int32))
+        if self.backend == "pallas" and pol.name != "home_first":
+            servers, local = backends.pallas_routed_trace(
+                to_device(objects), to_device(lengths), words, shard,
+                pol, load, block=self.block, **kw,
+            )
+        else:
+            servers, local = backends.access_trace(
+                to_device(objects), to_device(lengths), words, shard,
+                policy=pol, load=load, **kw,
+            )
+        return np.asarray(servers), np.asarray(local)
+
     def query_latencies(self, pathset, path_lats: np.ndarray | None = None) -> np.ndarray:
         """l_Q = max over the query's paths (Def 4.3)."""
         if path_lats is None:
@@ -255,7 +362,12 @@ class LatencyEngine:
         return out
 
     def query_slack(
-        self, pathset, t, path_lats: np.ndarray | None = None
+        self,
+        pathset,
+        t,
+        path_lats: np.ndarray | None = None,
+        policy=None,
+        load: np.ndarray | None = None,
     ) -> np.ndarray:
         """t_Q - l_Q per query, computed on device (int32 [n_queries]).
 
@@ -264,9 +376,12 @@ class LatencyEngine:
         device against the budget vector (``backends.query_slack``); only
         the slack vector crosses back.  Negative entries mark violating
         queries — the serve layer's per-tenant triggers consume this.
+        ``policy`` scores the walk under a hop-routing policy
+        (``nearest_copy`` is the paper-faithful Eqn 1 reading and yields
+        slack >= the ``home_first`` default wherever replicas help).
         """
         if path_lats is None:
-            path_lats = self.path_latencies(pathset)
+            path_lats = self.path_latencies(pathset, policy=policy, load=load)
         nq = pathset.n_queries
         t_q = _budget_vector(t, nq)
         if nq == 0:
@@ -279,14 +394,24 @@ class LatencyEngine:
         return np.asarray(out)
 
     def is_feasible(
-        self, pathset, t, path_lats: np.ndarray | None = None
+        self,
+        pathset,
+        t,
+        path_lats: np.ndarray | None = None,
+        policy=None,
+        load: np.ndarray | None = None,
     ) -> bool:
         """All queries within their own t_Q (Def 4.4).
 
         ``t``: int | per-query vector | ``SLOSpec``.  Reuses precomputed
-        ``path_lats`` when given.
+        ``path_lats`` when given.  ``policy="nearest_copy"`` checks
+        feasibility under the paper-faithful any-co-located-replica
+        routing, a weaker (tighter-scoring) condition than the
+        ``home_first`` default.
         """
-        return bool(np.all(self.query_slack(pathset, t, path_lats) >= 0))
+        return bool(
+            np.all(self.query_slack(pathset, t, path_lats, policy, load) >= 0)
+        )
 
     def margin_costs(
         self, objects, servers, f: np.ndarray | None = None

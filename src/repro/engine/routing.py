@@ -1,0 +1,141 @@
+"""Pluggable hop-target routing policies for the batched access walk.
+
+The paper's latency model (Eqn 1 / Def 4.3) counts an access as local
+whenever *any* replica of the next object is co-located with the current
+server; when it is not, the walk must pick a remote target.  Eqn 1's
+second case nominally sends the hop to the object's home server, but the
+model is indifferent to *which* copy holder serves a remote hop — and the
+choice matters twice over: the landing server decides whether *later*
+accesses of the path are local (a holder of the next object keeps the
+walk local one hop longer), and under traffic it decides which queue the
+RPC waits in.  This module makes that choice a first-class, swappable
+policy consumed by ``repro.engine.backends.access_trace`` and every layer
+above it (engine -> distsys executor -> serve simulator/controller):
+
+  ``home_first``    Eqn 1 verbatim: remote hops go to the object's home
+                    (or the caller's fail-over map).  Bit-identical to the
+                    historical hardcoded walk.
+  ``nearest_copy``  stay local when possible; a remote hop prefers an
+                    alive copy holder that *also* holds the path's next
+                    object (one-step locality lookahead), then the home
+                    server, then the lowest id.  The paper-faithful
+                    "any co-located replica counts" reading of Eqn 1 —
+                    h under ``nearest_copy`` is what ``is_feasible`` can
+                    optionally be scored against.
+  ``queue_aware``   ``nearest_copy``'s candidate preference, tie-broken by
+                    a per-server load vector (live queue depths): within
+                    the preferred candidate class the least-loaded holder
+                    serves the hop, the home server winning ties — the
+                    batched generalization of ``Router.route_hop``.
+
+Policies are frozen dataclasses (hashable, usable as jit static args);
+the device implementations live in ``repro.engine.backends`` and a Pallas
+kernel twin in ``repro.kernels.routed_walk``.  :func:`pick_holder_host`
+is the scalar numpy twin shared by ``Router.route_hop`` and the
+``reference`` backend oracle, so all three implementations pin one
+semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+POLICIES = ("home_first", "nearest_copy", "queue_aware")
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutingPolicy:
+    """Base marker: how the batched walk picks a remote hop's target."""
+
+    name = "home_first"
+    uses_load = False
+    lookahead = False
+
+
+@dataclasses.dataclass(frozen=True)
+class HomeFirst(RoutingPolicy):
+    """Eqn 1 second case verbatim: remote hops go to ``home[obj]``."""
+
+    name = "home_first"
+
+
+@dataclasses.dataclass(frozen=True)
+class NearestCopy(RoutingPolicy):
+    """Locality-greedy holder pick: lookahead class, then home, then id.
+
+    ``lookahead=False`` drops the one-step locality preference, reducing
+    the pick to "home if it holds a copy, else lowest-id holder".
+    """
+
+    name = "nearest_copy"
+    lookahead: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class QueueAware(NearestCopy):
+    """``nearest_copy`` tie-broken by a per-server load vector.
+
+    Within the preferred candidate class (lookahead holders when any,
+    else all holders) the least-loaded server wins; ties prefer the home
+    server, then the lowest id.  With no lookahead candidates this is
+    exactly ``Router.route_hop``'s queue-aware scalar pick, batched.
+    """
+
+    name = "queue_aware"
+    uses_load = True
+
+
+def resolve_policy(policy) -> RoutingPolicy:
+    """str | RoutingPolicy | None -> RoutingPolicy (None = home_first)."""
+    if policy is None:
+        return HomeFirst()
+    if isinstance(policy, RoutingPolicy):
+        return policy
+    if policy == "home_first":
+        return HomeFirst()
+    if policy == "nearest_copy":
+        return NearestCopy()
+    if policy == "queue_aware":
+        return QueueAware()
+    raise ValueError(f"unknown routing policy {policy!r}; use {POLICIES}")
+
+
+def pick_holder_host(
+    holders: np.ndarray,
+    home: int,
+    load: np.ndarray | None = None,
+    lookahead: np.ndarray | None = None,
+) -> int:
+    """Scalar oracle of the remote-hop holder pick (one access).
+
+    ``holders`` bool [S] — alive copy holders of the hopped-to object;
+    ``home`` the object's home server (may be -1 when no alive copy
+    exists — it then never wins a tie); ``load`` optional per-server
+    queue depths (None = unloaded, the ``nearest_copy`` case);
+    ``lookahead`` optional bool [S] — holders of the *next* object on the
+    path (the preferred candidate class when it intersects ``holders``).
+
+    Returns the picked server id, or -1 when ``holders`` is empty.  The
+    vectorized jnp walk and the Pallas kernel are parity-tested against
+    this function.
+    """
+    holders = np.asarray(holders, bool)
+    cand = holders
+    if lookahead is not None:
+        both = holders & np.asarray(lookahead, bool)
+        if both.any():
+            cand = both
+    ids = np.nonzero(cand)[0]
+    if len(ids) == 0:
+        return -1
+    lv = (
+        np.zeros(len(ids))
+        if load is None
+        else np.asarray(load, np.float64)[ids]
+    )
+    m = lv.min()
+    best = ids[lv <= m]
+    if home in best:
+        return int(home)
+    return int(best[0])

@@ -1,0 +1,165 @@
+"""Pallas TPU kernel: policy-routed access walk (Eqn 1 + RoutingPolicy).
+
+The twin of ``repro.kernels.path_latency`` for the policy-parameterized
+walk (``repro.engine.routing``): instead of hardcoding ``home[obj]`` as
+every remote hop's target, the kernel picks the target from the object's
+packed holder words — least-loaded alive copy holder within the preferred
+candidate class (holders of the *next* object first when ``lookahead``),
+home winning ties, then lowest id.  It also returns the full per-position
+trace (visited server + locality), which the serving layers decorate.
+
+Layout (TPU-native, as in ``path_latency``): the *path* dimension is the
+128-wide lane axis.
+
+  home  int32  [L, bP]     per-position routing target (-1 padded)
+  masks uint32 [L, W, bP]  packed replica-location words per position
+  lens  int32  [bP]        path lengths
+  start int32  [bP]        per-path start server
+  load  f32    [Sp]        per-server queue depths, Sp = W*32 (bits past
+                           n_servers are never set, so the pad is inert)
+  out   int32  [L, bP] x2  visited server / locality per position
+
+Per position the holder bits are unpacked to an [Sp, bP] plane and the
+candidate argmin reduces over the sublane axis — every op is a full-width
+vector op across the path lanes.  ``interpret=True`` on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK = 128
+
+
+def _unpack(words):
+    """[W, bP] uint32 -> [W*32, bP] bool holder bits."""
+    W, bP = words.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[:, None, :] >> shifts[None, :, None]) & jnp.uint32(1)
+    return bits.reshape(W * 32, bP).astype(jnp.bool_)
+
+
+def _pick(cand, home, load, iota_s):
+    """Least-loaded candidate per lane; home wins ties, then lowest id.
+
+    ``cand`` bool [Sp, bP], ``home`` int32 [bP], ``load`` f32 [Sp].
+    Returns (target int32 [bP] — garbage where no candidate —, any bool
+    [bP]); the scalar twin is ``repro.engine.routing.pick_holder_host``.
+    """
+    any_c = cand.any(axis=0)
+    lv = jnp.where(cand, load[:, None], jnp.inf)
+    m = jnp.min(lv, axis=0)
+    best = cand & (lv <= m[None, :])
+    home_oh = iota_s == jnp.maximum(home, 0)[None, :]
+    home_ok = (best & home_oh).any(axis=0) & (home >= 0)
+    first = jnp.argmax(best, axis=0).astype(jnp.int32)
+    return jnp.where(home_ok, home, first), any_c
+
+
+def _make_kernel(L: int, W: int, lookahead: bool, home_first: bool):
+    Sp = W * 32
+
+    def kernel(home_ref, mask_ref, len_ref, start_ref, load_ref,
+               srv_ref, loc_ref):
+        home = home_ref[...]      # [L, bP]
+        lens = len_ref[...]       # [bP]
+        start = start_ref[...]    # [bP]
+        load = load_ref[...]      # [Sp]
+        iota_s = jnp.arange(Sp, dtype=jnp.int32)[:, None]
+        iota_l = jnp.arange(L, dtype=jnp.int32)
+
+        valid0 = lens > 0
+        server0 = jnp.where(valid0, start, 0).astype(jnp.int32)
+        srv_acc = jnp.broadcast_to(server0[None, :], (L, start.shape[0]))
+        loc_acc = jnp.zeros((L, start.shape[0]), jnp.bool_)
+        loc_acc = jnp.where((iota_l == 0)[:, None], valid0[None, :], loc_acc)
+
+        def body(i, carry):
+            server, srv_acc, loc_acc = carry
+            valid = i < lens
+            bits = _unpack(mask_ref[i])           # [Sp, bP]
+            srv_oh = iota_s == jnp.maximum(server, 0)[None, :]
+            local = (bits & srv_oh).any(axis=0) & (server >= 0)
+            h_i = home[i]
+            if home_first:
+                tgt = h_i
+            else:
+                tgt, any_c = _pick(bits, h_i, load, iota_s)
+                tgt = jnp.where(any_c, tgt, -1)
+                if lookahead:
+                    nxt_ok = (i + 1) < lens
+                    nbits = _unpack(mask_ref[jnp.minimum(i + 1, L - 1)])
+                    la = bits & nbits & nxt_ok[None, :]
+                    la_tgt, la_any = _pick(la, h_i, load, iota_s)
+                    tgt = jnp.where(la_any, la_tgt, tgt)
+            nxt = jnp.where(local, server, tgt).astype(jnp.int32)
+            nxt = jnp.where(valid, nxt, server)
+            row = (iota_l == i)[:, None]
+            srv_acc = jnp.where(row, nxt[None, :], srv_acc)
+            loc_acc = jnp.where(row, (local & valid)[None, :], loc_acc)
+            return nxt, srv_acc, loc_acc
+
+        _, srv_acc, loc_acc = jax.lax.fori_loop(
+            1, L, body, (server0, srv_acc, loc_acc)
+        )
+        srv_ref[...] = srv_acc
+        loc_ref[...] = loc_acc.astype(jnp.int32)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block", "interpret", "lookahead", "home_first"),
+)
+def routed_walk_pallas(
+    home: jnp.ndarray,     # int32 [P, L]  per-position target (-1 pad)
+    masks: jnp.ndarray,    # uint32 [P, L, W]  packed replica words
+    lengths: jnp.ndarray,  # int32 [P]
+    start: jnp.ndarray,    # int32 [P]  start server per path
+    load: jnp.ndarray,     # float32 [W*32]  per-server queue depths
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+    lookahead: bool = True,
+    home_first: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(servers int32 [P, L], local bool [P, L]); see module docstring."""
+    P, L = home.shape
+    W = masks.shape[2]
+    pad = (-P) % block
+    if pad:
+        home = jnp.pad(home, ((0, pad), (0, 0)), constant_values=-1)
+        masks = jnp.pad(masks, ((0, pad), (0, 0), (0, 0)))
+        lengths = jnp.pad(lengths, (0, pad))
+        start = jnp.pad(start, (0, pad))
+    Pp = P + pad
+    home_t = home.T                            # [L, Pp]
+    masks_t = jnp.transpose(masks, (1, 2, 0))  # [L, W, Pp]
+    Sp = W * 32
+
+    grid = (Pp // block,)
+    srv, loc = pl.pallas_call(
+        _make_kernel(L, W, lookahead, home_first),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((L, block), lambda p: (0, p)),
+            pl.BlockSpec((L, W, block), lambda p: (0, 0, p)),
+            pl.BlockSpec((block,), lambda p: (p,)),
+            pl.BlockSpec((block,), lambda p: (p,)),
+            pl.BlockSpec((Sp,), lambda p: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((L, block), lambda p: (0, p)),
+            pl.BlockSpec((L, block), lambda p: (0, p)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L, Pp), jnp.int32),
+            jax.ShapeDtypeStruct((L, Pp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(home_t, masks_t, lengths, start, load)
+    return srv.T[:P], loc.T[:P].astype(bool)

@@ -16,10 +16,13 @@ windows** of served queries and, on violation, repairs *incrementally*:
      wall-clock p99 SLO breach;
   2. **arbitrate** — when several tenants trigger in the same step *and*
      capacity / load-balance headroom is finite, their repairs compete for
-     the same bytes: the tenant with the cheapest estimated
-     marginal-bytes-per-violation wins this round, the losers are
-     *deferred* (named in the report; their windows still violate, so they
-     re-trigger on a later step).  With unbounded headroom all triggered
+     the same bytes: the tenant with the cheapest estimated *weighted*
+     marginal-bytes-per-violation (estimated bytes divided by
+     ``TenantSpec.weight``, so paying tenants outrank) wins this round,
+     the losers are *deferred* (named in the report; their windows still
+     violate, so they re-trigger on a later step — and a deferred tenant
+     outranks any weight on the next contended round, so low-weight
+     tenants cannot starve).  With unbounded headroom all triggered
      tenants repair together in one vector-budget pass;
   3. **repair** — the *violating paths observed in the windows* (a tiny
      delta, not the workload) go through
@@ -69,6 +72,11 @@ class ControllerConfig:
     demote_after: int = 1                   # consecutive cold checks before
     #                                         a replica may be evicted
     tenants: tuple[TenantSpec, ...] = ()    # known tenants (budgets + SLOs)
+    # routing policy h is scored under for triggers / window re-checks:
+    # "home_first" (historical) or "nearest_copy" (the paper-faithful
+    # any-co-located-replica reading — tighter, so fewer false triggers
+    # when the serving path routes hops replica-aware)
+    score_policy: str = "home_first"
 
     def __post_init__(self):
         if self.t is None and not self.tenants:
@@ -302,7 +310,9 @@ class AdaptiveController:
             pathset.n_queries
         )
         assert slo.n_queries == pathset.n_queries
-        pl = self.engine.path_latencies(pathset)
+        pl = self.engine.path_latencies(
+            pathset, policy=self.config.score_policy
+        )
         qids = np.asarray(pathset.query_ids)
         ql = self.engine.query_latencies(pathset, pl)
         bad_q = ql > slo.t_q  # each query vs its OWN budget
@@ -358,15 +368,18 @@ class AdaptiveController:
         ) and len(triggered) > 1
         if contended:
             # arbitration: repairs compete for the same capacity/epsilon
-            # headroom — cheapest estimated marginal-byte-per-violation
-            # wins this round, everyone else is deferred (their windows
-            # still violate, so they re-trigger on a later observe()).
-            # Aging breaks starvation: a tenant deferred on an earlier
-            # round outranks any score on the next contended round.
+            # headroom — cheapest estimated *weighted* marginal-byte-per-
+            # violation wins this round (estimated bytes / tenant weight,
+            # so a paying tenant's violations buy proportionally more
+            # bytes), everyone else is deferred (their windows still
+            # violate, so they re-trigger on a later observe()).  Aging
+            # breaks starvation: a tenant deferred on an earlier round
+            # outranks any weight or score on the next contended round.
             scored = sorted(
                 (
                     self._deferred_since.get(name, self.step),
-                    self._repair_score(name),
+                    self._repair_score(name)
+                    / self._tenants[name].spec.weight,
                     name,
                     trig,
                 )
@@ -555,7 +568,9 @@ class AdaptiveController:
         feasible = True
         for name, w in self._tenants.items():
             for e in w.entries:
-                e.path_lats = self.engine.path_latencies(e.pathset)
+                e.path_lats = self.engine.path_latencies(
+                    e.pathset, policy=self.config.score_policy
+                )
                 qids = np.asarray(e.pathset.query_ids)
                 if len(qids):
                     ql = self.engine.query_latencies(e.pathset, e.path_lats)

@@ -9,6 +9,22 @@ server, not from the RPC constants.  This module adds the time dimension:
 
 * **open-loop arrivals** — Poisson at an offered ``rate_qps``, or an
   explicit per-query arrival-time trace (replay / drift phases);
+* **closed-loop client pool** — alternatively ``clients=N`` serves the
+  workload from N clients that each issue a query, wait for its
+  completion plus an exponential think time, then issue the next one.
+  Closed-loop runs measure *saturation throughput* (offered load adapts
+  to service capacity, so ``achieved_qps`` is the system's ceiling) and
+  make coordinated omission visible: a closed-loop client stops issuing
+  while the system is slow, so its latencies systematically understate
+  what an open-loop arrival process (which keeps its schedule) would
+  measure — compare the two modes at equal throughput to quantify it;
+* **per-hop routing policies** — ``policy`` routes every remote hop of
+  the access walk through a ``repro.engine.routing`` policy:
+  ``home_first`` (Eqn 1 verbatim), ``nearest_copy`` (holder that keeps
+  the walk local longest), or ``queue_aware`` (least-loaded holder,
+  seeded from the cluster's live queue depths and refreshed mid-run
+  every ``reroute_every`` arrivals so hop targets react to the queues
+  the traffic itself builds up);
 * **per-server FIFO queues** — each server serves at most ``concurrency``
   accesses at once (default 32, two hardware threads per vCPU on the
   paper's 16-vCPU r5d.4xlarge servers); excess accesses wait in FIFO
@@ -64,6 +80,12 @@ class SimReport:
     # event loop, so latencies histogram per tenant (multi-tenant SLOs)
     tenant_of: np.ndarray | None = None      # [n_queries] tenant id
     tenant_names: tuple[str, ...] = ()
+    # closed-loop mode: N clients with think time instead of an open-loop
+    # arrival process; achieved_qps is then the saturation throughput
+    closed_loop: bool = False
+    n_clients: int = 0
+    policy: str = "home_first"               # per-hop routing policy
+    reroutes: int = 0                        # mid-run hop-target refreshes
 
     def percentile(self, q: float) -> float:
         return float(np.percentile(self.latency_us, q))
@@ -115,7 +137,16 @@ class SimReport:
             "max_utilization": float(util.max()) if util.size else 0.0,
             "mean_queue_wait_us": self.queue_wait_us,
             "failed_queries": int(self.query_failed.sum()),
+            "mode": "closed_loop" if self.closed_loop else "open_loop",
+            "policy": self.policy,
         }
+        if self.closed_loop:
+            # in closed loop the offered rate is endogenous: achieved_qps
+            # IS the saturation throughput at this client count
+            out["n_clients"] = self.n_clients
+            out["saturation_qps"] = self.achieved_qps
+        if self.reroutes:
+            out["reroutes"] = self.reroutes
         if self.tenant_of is not None:
             per = {}
             for tid, name in enumerate(self.tenant_names):
@@ -138,6 +169,8 @@ def _build_variant(
     model: LatencyModel,
     alive: np.ndarray,
     start: np.ndarray | None,
+    policy=None,
+    load: np.ndarray | None = None,
 ):
     """Precompute one routing variant's per-query access trees.
 
@@ -147,8 +180,15 @@ def _build_variant(
     Returns (trees_per_query, dead_per_query) where a tree is
     ``(nodes, roots)``: ``nodes[i] = [server, base_service_us, children]``
     and ``roots`` the indices dispatched at arrival.
+
+    ``policy``/``load`` route every remote hop through a
+    ``repro.engine.routing`` policy against the given queue-depth
+    snapshot (``queue_aware``); the tree's node servers are the policy's
+    picks.
     """
-    servers, local = trace_paths(pathset, cluster.scheme, alive, start)
+    servers, local = trace_paths(
+        pathset, cluster.scheme, alive, start, policy, load
+    )
     nq = pathset.n_queries
     trees: list[tuple[list, list[int]]] = [([], []) for _ in range(nq)]
     tries: list[dict] = [dict() for _ in range(nq)]
@@ -196,6 +236,10 @@ def simulate(
     router: Router | None = None,
     seed: int = 0,
     slo=None,
+    policy=None,
+    reroute_every: int | None = None,
+    clients: int | None = None,
+    think_time_us: float = 0.0,
 ) -> SimReport:
     """Serve ``pathset``'s queries through per-server FIFO queues.
 
@@ -205,16 +249,37 @@ def simulate(
     latencies and per-server occupancy — the quantities the controller's
     sliding window and the tail benchmarks consume.
 
+    ``clients`` switches to a *closed-loop* client pool instead: N
+    clients each issue one query (in id order from a shared backlog),
+    wait for its completion plus an exponential think time of mean
+    ``think_time_us``, then issue the next — the mode that measures
+    saturation throughput and makes coordinated omission observable
+    (see module docstring).  ``rate_qps``/``arrivals_us`` are ignored.
+
+    ``policy`` routes every remote hop of the walk through a
+    ``repro.engine.routing`` policy (``home_first`` default;
+    ``queue_aware`` ranks holders by the cluster's live queue depths —
+    the state the previous batch left in ``Cluster.queue_depths()``).
+    With ``reroute_every=K`` (requires ``router=None``) the hop targets
+    are re-picked mid-run every K arrivals against the simulator's own
+    live queue state, so routing reacts to the congestion the batch
+    itself builds; in-flight queries finish on their old routes.
+
     ``slo`` (an :class:`repro.core.slo.SLOSpec` aligned with the pathset's
     queries) tags every job with its query's tenant, so the report carries
     per-tenant latency histograms (``summary()["per_tenant"]``) — the
     per-tenant p99s the multi-tenant controller monitors.
     """
+    from repro.engine.routing import resolve_policy
+
     model = model or LatencyModel()
     rng = np.random.default_rng(seed)
     alive = np.asarray([s.alive for s in cluster.servers], bool)
     S = cluster.n_servers
     nq = pathset.n_queries
+    hop_policy = resolve_policy(policy)
+    hop_load = cluster.queue_depths() if hop_policy.uses_load else None
+    closed = clients is not None and int(clients) > 0
     tenant_of = None
     tenant_names: tuple[str, ...] = ()
     if slo is not None:
@@ -228,34 +293,50 @@ def simulate(
             queue_wait_us=0.0, duration_us=0.0, offered_qps=rate_qps,
             concurrency=concurrency,
             tenant_of=tenant_of, tenant_names=tenant_names,
+            closed_loop=closed, n_clients=int(clients or 0),
+            policy=hop_policy.name,
         )
 
     # --- routing variants -------------------------------------------------
-    policy = router.policy if router is not None else "home"
-    if router is not None and policy in ("replica_lb", "hedged"):
+    coord_policy = router.policy if router is not None else "home"
+    if router is not None and coord_policy in ("replica_lb", "hedged"):
         roots = _query_roots(pathset)
         primary, backup = router.route_roots_hedged(roots, alive, seed=seed)
         qids = np.asarray(pathset.query_ids)
         v1, d1 = _build_variant(
-            pathset, cluster, model, alive, primary[qids]
+            pathset, cluster, model, alive, primary[qids],
+            hop_policy, hop_load,
         )
         has_b = backup >= 0
         v2, d2 = _build_variant(
             pathset, cluster, model, alive,
             np.where(has_b, backup, primary)[qids],
+            hop_policy, hop_load,
         )
         variants_trees = [v1, v2]
         variants_dead = [d1, d2]
         coords = [primary, np.where(has_b, backup, -1)]
     else:
-        policy = "home"
-        v0, d0 = _build_variant(pathset, cluster, model, alive, None)
+        coord_policy = "home"
+        v0, d0 = _build_variant(
+            pathset, cluster, model, alive, None, hop_policy, hop_load
+        )
         variants_trees = [v0]
         variants_dead = [d0]
         coords = [None]
+    if reroute_every is not None:
+        if coord_policy != "home":
+            raise ValueError("reroute_every requires router=None")
+        if not hop_policy.uses_load:
+            raise ValueError(
+                "reroute_every only makes sense for a load-aware policy "
+                "(queue_aware): load-blind policies re-pick identical routes"
+            )
 
     # --- event loop -------------------------------------------------------
-    if arrivals_us is None:
+    if closed:
+        arrivals_us = np.zeros(nq, np.float64)  # filled at issue time
+    elif arrivals_us is None:
         arrivals_us = np.cumsum(
             rng.exponential(1e6 / rate_qps, size=nq)
         )
@@ -309,34 +390,86 @@ def simulate(
         else:
             queues[s].append((t, job))
 
+    next_q = 0
+    cur_variant = 0
+    reroutes = 0
+    since_reroute = 0
+    think = float(think_time_us)
+
+    def complete(q, t):
+        nonlocal next_q
+        completion[q] = t + model.coordinator_us
+        if closed and next_q < nq:
+            # the freed client thinks, then issues the next query
+            delay = rng.exponential(think) if think > 0 else 0.0
+            push(completion[q] + delay, "arrive", next_q)
+            next_q += 1
+
     def advance(t, job):
         q, v, i = job
         for child in node_of(job)[2]:
             dispatch(t, (q, v, child))
         remaining[(q, v)] -= 1
         if remaining[(q, v)] == 0 and completion[q] < 0:
-            completion[q] = t + model.coordinator_us
+            complete(q, t)
 
     def launch(t, q, v):
         nodes, roots = variants_trees[v][q]
         remaining[(q, v)] = len(nodes)
         if not nodes:
-            completion[q] = t + model.coordinator_us
+            if completion[q] < 0:
+                complete(q, t)
             return
         for i in roots:
             dispatch(t, (q, v, i))
 
-    for q in range(nq):
-        push(float(arrivals_us[q]), "arrive", q)
+    if closed:
+        for _ in range(min(int(clients), nq)):
+            push(0.0, "arrive", next_q)
+            next_q += 1
+    else:
+        for q in range(nq):
+            push(float(arrivals_us[q]), "arrive", q)
 
     arrivals_left = nq
+    arrived_flag = np.zeros(nq, bool)
+    qids_all = np.asarray(pathset.query_ids)
     live_depth = np.zeros(S, np.int64)
     live_busy = np.zeros(S, np.int64)
+
+    def reroute_pending(live):
+        """Re-pick hop targets for the queries that have NOT arrived yet.
+
+        Already-arrived queries keep their old variant (in-flight work
+        never re-routes), so each rebuild traces only the shrinking
+        pending suffix instead of the whole pathset.
+        """
+        pending = np.nonzero(~arrived_flag)[0]
+        vt: list = [([], [])] * nq
+        vd = np.zeros(nq, bool)
+        if len(pending):
+            idx = np.nonzero(~arrived_flag[qids_all])[0]
+            sub = PathSet(
+                np.asarray(pathset.objects)[idx],
+                np.asarray(pathset.lengths)[idx],
+                np.searchsorted(pending, qids_all[idx]).astype(np.int32),
+            )
+            vt_sub, vd_sub = _build_variant(
+                sub, cluster, model, alive, None, hop_policy, live
+            )
+            for li, g in enumerate(pending[: len(vt_sub)]):
+                vt[int(g)] = vt_sub[li]
+                vd[int(g)] = bool(vd_sub[li])
+        variants_trees.append(vt)
+        variants_dead.append(vd)
+        return len(variants_trees) - 1
 
     while heap:
         t, _, kind, data = heapq.heappop(heap)
         if kind == "arrive":
             q = data
+            if closed:
+                arrivals_us[q] = t
             arrivals_left -= 1
             if arrivals_left == 0:
                 # snapshot queueing state while traffic is still in flight
@@ -344,14 +477,28 @@ def simulate(
                 # Cluster.queue_depths() hands the router between batches
                 live_depth = np.asarray([len(qu) for qu in queues], np.int64)
                 live_busy = busy.copy()
-            if policy == "hedged":
+            if reroute_every is not None:
+                since_reroute += 1
+                if since_reroute >= int(reroute_every):
+                    # re-pick hop targets against the simulator's own live
+                    # queue state; the arriving query is still pending, so
+                    # it launches on the fresh routes
+                    since_reroute = 0
+                    reroutes += 1
+                    live = np.asarray(
+                        [busy[s] + len(queues[s]) for s in range(S)],
+                        np.int64,
+                    )
+                    cur_variant = reroute_pending(live)
+            arrived_flag[q] = True
+            if coord_policy == "hedged":
                 # race both coordinator picks; first completion wins
                 launch(t, q, 0)
                 failed[q] = variants_dead[0][q]
                 if coords[1][q] >= 0:
                     launch(t, q, 1)
                     failed[q] = failed[q] and variants_dead[1][q]
-            elif policy == "replica_lb":
+            elif coord_policy == "replica_lb":
                 # queue-aware: per arrival, the less-loaded coordinator
                 c1, c2 = int(coords[0][q]), int(coords[1][q])
                 v = 0
@@ -362,8 +509,8 @@ def simulate(
                 launch(t, q, v)
                 failed[q] = variants_dead[v][q]
             else:
-                launch(t, q, 0)
-                failed[q] = variants_dead[0][q]
+                launch(t, q, cur_variant)
+                failed[q] = variants_dead[cur_variant][q]
         elif kind == "done":
             s, job = data
             busy[s] -= 1
@@ -393,8 +540,12 @@ def simulate(
         busy_us=busy_us,
         queue_wait_us=wait_us / n_waits if n_waits else 0.0,
         duration_us=duration,
-        offered_qps=rate_qps,
+        offered_qps=0.0 if closed else rate_qps,
         concurrency=concurrency,
         tenant_of=tenant_of,
         tenant_names=tenant_names,
+        closed_loop=closed,
+        n_clients=int(clients or 0),
+        policy=hop_policy.name,
+        reroutes=reroutes,
     )

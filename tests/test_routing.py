@@ -1,0 +1,296 @@
+"""RoutingPolicy: the policy-parameterized batched access walk.
+
+Covers the PR-4 contract: three-way backend parity (reference | jnp |
+pallas) for every policy, bit-identical ``home_first`` vs the
+pre-refactor hardcoded walk on seed workloads, the nearest-copy latency
+tightening, the queue-aware hot-replica skip under traffic, and the
+threading through executor, simulator and controller.
+"""
+import numpy as np
+import pytest
+
+from repro.core.paths import PathSet
+from repro.core.reference import (
+    routed_path_latencies_reference,
+    routed_trace_reference,
+)
+from repro.core.replication import ReplicationScheme, prune_scheme_replicas
+from repro.engine import (
+    BACKENDS,
+    HomeFirst,
+    LatencyEngine,
+    NearestCopy,
+    QueueAware,
+    pack_bool_mask,
+    resolve_policy,
+    to_device,
+)
+from repro.engine import backends
+from repro.engine.routing import pick_holder_host
+
+from conftest import random_workload
+
+
+def _scheme(rng, n_obj, n_srv, density=0.15):
+    shard = rng.integers(0, n_srv, n_obj).astype(np.int32)
+    mask = np.zeros((n_obj, n_srv), bool)
+    mask[np.arange(n_obj), shard] = True
+    mask |= rng.random((n_obj, n_srv)) < density
+    return mask, shard
+
+
+# ---------------------------------------------------------------------------
+# Policy resolution + the scalar pick oracle
+# ---------------------------------------------------------------------------
+def test_resolve_policy():
+    assert resolve_policy(None) == HomeFirst()
+    assert resolve_policy("nearest_copy") == NearestCopy()
+    assert resolve_policy("queue_aware").uses_load
+    assert resolve_policy(QueueAware()) == QueueAware()
+    with pytest.raises(ValueError):
+        resolve_policy("round_robin")
+
+
+def test_pick_holder_host_ordering():
+    holders = np.array([False, True, True, True, False])
+    # no load: home wins among holders
+    assert pick_holder_host(holders, home=2) == 2
+    # least-loaded holder wins; home breaks ties
+    assert pick_holder_host(holders, 2, load=[0, 9, 9, 1, 0]) == 3
+    assert pick_holder_host(holders, 2, load=[0, 5, 5, 5, 0]) == 2
+    # lookahead class is preferred even when more loaded
+    la = np.array([False, True, False, False, False])
+    assert pick_holder_host(holders, 2, load=[0, 9, 1, 1, 0], lookahead=la) == 1
+    # empty lookahead intersection falls back to all holders
+    la_none = np.array([True, False, False, False, False])
+    assert (
+        pick_holder_host(holders, 2, load=[0, 9, 1, 9, 0], lookahead=la_none)
+        == 2
+    )
+    assert pick_holder_host(np.zeros(5, bool), 2) == -1
+
+
+# ---------------------------------------------------------------------------
+# Three-way backend parity for the policy walk (counts AND full trace)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ["home_first", "nearest_copy", "queue_aware"])
+def test_three_way_policy_parity(rng, policy):
+    ps, shard = random_workload(rng, n_obj=80, n_srv=9, n_paths=70, max_len=6)
+    mask = np.zeros((80, 9), bool)
+    mask[np.arange(80), shard] = True
+    mask |= rng.random((80, 9)) < 0.2
+    load = rng.integers(0, 40, 9).astype(np.float64)
+    outs, traces = {}, {}
+    for b in BACKENDS:
+        eng = LatencyEngine.from_arrays(mask, shard, backend=b)
+        outs[b] = eng.path_latencies(ps, policy=policy, load=load)
+        traces[b] = eng.access_trace(ps, policy=policy, load=load)
+    for b in ("jnp", "pallas"):
+        np.testing.assert_array_equal(outs["reference"], outs[b])
+        np.testing.assert_array_equal(traces["reference"][0], traces[b][0])
+        np.testing.assert_array_equal(traces["reference"][1], traces[b][1])
+
+
+@pytest.mark.parametrize("policy", ["nearest_copy", "queue_aware"])
+def test_policy_walk_single_position_paths(rng, policy):
+    """max_len == 1 pathsets (zero scan steps) must not break the walk.
+
+    Regression: the lookahead rows were built one element too long for
+    L == 1, crashing the jnp scan with a leading-axis mismatch.
+    """
+    mask, shard = _scheme(rng, 20, 4)
+    ps = PathSet.from_lists([[0], [5], [7]])
+    load = np.arange(4, dtype=np.float64)
+    outs = {}
+    for b in BACKENDS:
+        eng = LatencyEngine.from_arrays(mask, shard, backend=b)
+        outs[b] = eng.path_latencies(ps, policy=policy, load=load)
+        srv, loc = eng.access_trace(ps, policy=policy, load=load)
+        assert loc.all()
+    for b in ("jnp", "pallas"):
+        np.testing.assert_array_equal(outs["reference"], outs[b])
+    assert outs["jnp"].tolist() == [0, 0, 0]
+
+
+def test_generic_walk_home_first_bit_identical(rng):
+    """The policy-parameterized impl reproduces the pre-refactor walk.
+
+    ``_routed_trace_impl(home_first=True)`` vs the legacy
+    ``_access_trace_impl`` (the exact pre-refactor scan), on a seed-style
+    workload — servers and local arrays must be bit-identical.
+    """
+    ps, shard = random_workload(rng, n_obj=100, n_srv=7, n_paths=120)
+    mask, shard = _scheme(rng, 100, 7)
+    words = np.concatenate(
+        [pack_bool_mask(mask), np.zeros((1, 1), np.uint32)], axis=0
+    )
+    objects = to_device(np.asarray(ps.objects, np.int32))
+    lengths = to_device(np.asarray(ps.lengths, np.int32))
+    w = to_device(words)
+    home = to_device(shard)
+    start = backends._root_home(objects, home)
+    legacy = backends._access_trace_impl(objects, lengths, w, home, start)
+    routed = backends._routed_trace_impl(
+        objects, lengths, w, home, start,
+        backends._load_vector(None, words), home_first=True, lookahead=False,
+    )
+    np.testing.assert_array_equal(np.asarray(legacy[0]), np.asarray(routed[0]))
+    np.testing.assert_array_equal(np.asarray(legacy[1]), np.asarray(routed[1]))
+
+
+def test_home_first_policy_matches_default_engine(rng):
+    """engine.path_latencies(policy='home_first') == the unpoliced call."""
+    ps, shard = random_workload(rng)
+    mask, shard = _scheme(rng, 120, 5)
+    for b in BACKENDS:
+        eng = LatencyEngine.from_arrays(mask, shard, backend=b)
+        np.testing.assert_array_equal(
+            eng.path_latencies(ps), eng.path_latencies(ps, policy="home_first")
+        )
+
+
+def test_nearest_copy_tightens_latency(rng):
+    """h under nearest_copy <= h under home_first wherever replicas help.
+
+    Constructed case: path [a, b, c]; server 2 holds copies of both b and
+    c; homes are 0, 1, 2 for a, b, c.  home_first hops to 1 then to 2
+    (h=2); nearest_copy's lookahead hops straight to 2 where c is local
+    (h=1).
+    """
+    shard = np.array([0, 1, 2], np.int32)
+    mask = np.zeros((3, 3), bool)
+    mask[np.arange(3), shard] = True
+    mask[1, 2] = True  # replica of b at server 2
+    ps = PathSet.from_lists([[0, 1, 2]])
+    for b in BACKENDS:
+        eng = LatencyEngine.from_arrays(mask, shard, backend=b)
+        assert eng.path_latencies(ps)[0] == 2
+        assert eng.path_latencies(ps, policy="nearest_copy")[0] == 1
+    # and the tightening is visible to is_feasible
+    eng = LatencyEngine.from_arrays(mask, shard)
+    assert not eng.is_feasible(ps, 1)
+    assert eng.is_feasible(ps, 1, policy="nearest_copy")
+
+
+def test_nearest_copy_statistically_tighter(rng):
+    """On random replicated schemes the nearest-copy total h is <= and
+    typically < the home-first total (it never needs to do worse than
+    following the home, which is always a holder)."""
+    ps, _ = random_workload(rng, n_obj=150, n_srv=8, n_paths=200)
+    mask, shard = _scheme(rng, 150, 8, density=0.25)
+    eng = LatencyEngine.from_arrays(mask, shard)
+    hf = eng.path_latencies(ps)
+    nc = eng.path_latencies(ps, policy="nearest_copy")
+    assert nc.sum() < hf.sum()
+
+
+def test_queue_aware_skips_hot_replica_in_walk():
+    """Under load the batched walk routes the hop around the hot holder.
+
+    Object 1 has copies at servers 1 and 2; its home (1) is hot.  The
+    walk starts at 0 (no local copy) and must hop: queue_aware picks 2,
+    home_first and an unloaded nearest_copy stick with 1.
+    """
+    shard = np.array([0, 1], np.int32)
+    mask = np.zeros((2, 3), bool)
+    mask[np.arange(2), shard] = True
+    mask[1, 2] = True
+    ps = PathSet.from_lists([[0, 1]])
+    load = np.array([0.0, 50.0, 1.0])
+    for b in BACKENDS:
+        eng = LatencyEngine.from_arrays(mask, shard, backend=b)
+        srv_hf, _ = eng.access_trace(ps)
+        srv_nc, _ = eng.access_trace(ps, policy="nearest_copy", load=load)
+        srv_qa, _ = eng.access_trace(ps, policy="queue_aware", load=load)
+        assert srv_hf[0, 1] == 1
+        assert srv_nc[0, 1] == 1  # nearest_copy ignores load: home wins
+        assert srv_qa[0, 1] == 2  # queue_aware skips the hot home
+
+
+def test_routed_walk_respects_liveness():
+    """Dead servers' copies are invisible; no alive copy -> server -1."""
+    from repro.distsys.executor import trace_paths
+
+    shard = np.array([0, 1], np.int32)
+    mask = np.zeros((2, 3), bool)
+    mask[np.arange(2), shard] = True
+    mask[1, 2] = True
+    scheme = ReplicationScheme(mask, shard)
+    ps = PathSet.from_lists([[0, 1]])
+    alive = np.array([True, False, True])
+    for pol in ("home_first", "nearest_copy", "queue_aware"):
+        servers, local = trace_paths(ps, scheme, alive, policy=pol)
+        assert servers[0, 1] == 2  # fail-over to the surviving copy
+    servers, _ = trace_paths(
+        ps, scheme, np.array([True, False, False]), policy="nearest_copy"
+    )
+    assert servers[0, 1] == -1
+
+
+# ---------------------------------------------------------------------------
+# Threading: executor, simulator, controller, prune
+# ---------------------------------------------------------------------------
+def test_executor_policy_param(rng):
+    from repro.distsys import Cluster, execute_workload
+
+    ps, shard = random_workload(rng, n_obj=100, n_srv=6, n_paths=100)
+    mask, shard = _scheme(rng, 100, 6, density=0.3)
+    scheme = ReplicationScheme(mask, shard)
+    rep_hf = execute_workload(Cluster(scheme), ps, seed=1)
+    rep_nc = execute_workload(Cluster(scheme), ps, seed=1, policy="nearest_copy")
+    assert rep_nc.query_traversals.sum() <= rep_hf.query_traversals.sum()
+
+
+def test_simulator_policy_and_reroute(rng):
+    from repro.distsys import Cluster
+    from repro.serve import simulate
+
+    ps, shard = random_workload(
+        rng, n_obj=100, n_srv=5, n_paths=150, n_queries=60
+    )
+    mask, shard = _scheme(rng, 100, 5, density=0.3)
+    cluster = Cluster(ReplicationScheme(mask, shard))
+    rep = simulate(
+        cluster, ps, rate_qps=3e4, seed=2, policy="queue_aware",
+        reroute_every=16,
+    )
+    assert rep.policy == "queue_aware"
+    assert rep.reroutes >= 1
+    assert (rep.latency_us > 0).all()
+    with pytest.raises(ValueError):
+        from repro.distsys.router import Router
+
+        simulate(
+            cluster, ps, router=Router(cluster.scheme, "replica_lb"),
+            policy="queue_aware", reroute_every=8,
+        )
+
+
+def test_prune_scheme_replicas_keeps_feasibility(rng):
+    ps, shard = random_workload(rng, n_obj=60, n_srv=5, n_paths=60)
+    mask, shard = _scheme(rng, 60, 5, density=0.4)
+    scheme = ReplicationScheme(mask.copy(), shard)
+    eng = LatencyEngine(scheme)
+    t = int(eng.path_latencies(ps, policy="nearest_copy").max())
+    before = scheme.replica_count()
+    n, saved = prune_scheme_replicas(scheme, ps, t, policy="nearest_copy")
+    assert n > 0 and saved > 0
+    assert scheme.replica_count() == before - n
+    assert LatencyEngine(scheme).is_feasible(ps, t, policy="nearest_copy")
+
+
+def test_reference_routed_trace_contract(rng):
+    """Oracle shape/locality contract (position 0 local, padding carries)."""
+    mask, shard = _scheme(rng, 30, 4)
+    ps = PathSet.from_lists([[0, 1, 2], [5]])
+    servers, local = routed_trace_reference(
+        np.asarray(ps.objects), np.asarray(ps.lengths), mask, shard,
+        policy="nearest_copy",
+    )
+    assert local[0, 0] and local[1, 0]
+    assert servers[1, 1] == servers[1, 0]  # padding carries the last server
+    h = routed_path_latencies_reference(
+        np.asarray(ps.objects), np.asarray(ps.lengths), mask, shard,
+        policy="nearest_copy",
+    )
+    assert h[1] == 0

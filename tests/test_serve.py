@@ -334,3 +334,56 @@ def test_controller_demote_after_wiring():
     assert r[0].replicas_evicted == 0 and not r[0].feasible_after
     assert r[1].replicas_evicted > 0
     assert r[2].feasible_after and r[2].replicas_added > 0
+
+
+# ---------------------------------------------------------------------------
+# closed-loop client pool (PR 4)
+# ---------------------------------------------------------------------------
+def _closed_loop_setup(rng):
+    from repro.core import ReplicationScheme
+
+    ps, shard = random_workload(
+        rng, n_obj=200, n_srv=4, n_paths=400, n_queries=200
+    )
+    return ps, ReplicationScheme.from_sharding(shard, 4)
+
+
+def test_closed_loop_serves_all_and_reports(rng):
+    ps, scheme = _closed_loop_setup(rng)
+    rep = simulate(Cluster(scheme), ps, clients=8, think_time_us=100.0,
+                   seed=1, concurrency=4)
+    assert rep.closed_loop and rep.n_clients == 8
+    assert len(rep.latency_us) == ps.n_queries
+    assert (rep.latency_us > 0).all()
+    s = rep.summary()
+    assert s["mode"] == "closed_loop"
+    assert s["n_clients"] == 8
+    assert s["saturation_qps"] == rep.achieved_qps > 0
+
+
+def test_closed_loop_throughput_saturates(rng):
+    """More clients raise throughput until service capacity saturates;
+    past the knee extra clients only deepen queues (ROADMAP open item)."""
+    ps, scheme = _closed_loop_setup(rng)
+
+    def qps(n):
+        return simulate(
+            Cluster(scheme), ps, clients=n, seed=1, concurrency=4
+        ).achieved_qps
+
+    q4, q16, q64, q128 = qps(4), qps(16), qps(64), qps(128)
+    assert q16 > 1.5 * q4          # below the knee: near-linear scaling
+    assert q128 < 1.15 * q64       # past the knee: saturation plateau
+    # at saturation the bottleneck server is essentially always busy
+    rep = simulate(Cluster(scheme), ps, clients=64, seed=1, concurrency=4)
+    assert float(rep.utilization().max()) > 0.9
+
+
+def test_closed_loop_think_time_throttles(rng):
+    ps, scheme = _closed_loop_setup(rng)
+    fast = simulate(Cluster(scheme), ps, clients=4, seed=1, concurrency=4)
+    slow = simulate(Cluster(scheme), ps, clients=4, think_time_us=500.0,
+                    seed=1, concurrency=4)
+    assert slow.achieved_qps < 0.5 * fast.achieved_qps
+    # thinking clients leave the queues emptier: lower tail
+    assert slow.p99_us <= fast.p99_us

@@ -348,3 +348,76 @@ def test_controller_per_tenant_windows_and_stats():
     assert stats["cheap"]["violation_frac"] == 1.0
     assert stats["costly"]["violation_frac"] == 1.0
     assert stats["cheap"]["t_q"] == 0 and stats["costly"]["t_q"] == 1
+
+
+# ---------------------------------------------------------------------------
+# priority weights: weighted bytes-per-violation arbitration (PR 4)
+# ---------------------------------------------------------------------------
+def test_controller_weighted_arbitration_flips_winner():
+    """A high enough TenantSpec.weight buys the expensive tenant the
+    contended round that cheapest-byte arbitration would give away."""
+    from repro.core import ReplicationScheme
+
+    ps, shard, slo, n_obj, n_srv = _two_tenant_batch()
+    # same workload, but "costly" now outranks via priority weight
+    tenants = (TenantSpec("cheap", 0), TenantSpec("costly", 1, weight=100.0))
+    slo = SLOSpec(slo.t_q, slo.tenant_of, tenants)
+    scheme = ReplicationScheme.from_sharding(shard, n_srv)
+    ctl = AdaptiveController(
+        Cluster(scheme),
+        ControllerConfig(
+            tenants=tenants, window=64, min_queries=1,
+            capacity=float(n_obj),
+        ),
+    )
+    report = ctl.observe(ps, slo=slo)
+    assert report is not None
+    assert report.tenants == ("costly",)
+    assert report.deferred == ("cheap",)
+
+
+def test_controller_low_weight_tenant_cannot_starve():
+    """Aging outranks weight: the weight-0.01 tenant deferred on round 1
+    wins round 2 outright even though the heavy tenant still violates."""
+    from repro.core import ReplicationScheme
+
+    n_srv = 4
+    n_obj = 48
+    shard = (np.arange(n_obj) % n_srv).astype(np.int32)
+    tenants = (TenantSpec("vip", 0, weight=100.0), TenantSpec("lo", 0, weight=0.01))
+
+    def batch(offset):
+        # fresh server-crossing pairs each round so BOTH tenants keep
+        # violating t=0 until their own repair lands
+        vip = [[offset + i, offset + i + 1] for i in range(0, 8, 2)]
+        lo = [[24 + offset + i, 24 + offset + i + 1] for i in range(0, 8, 2)]
+        ps = PathSet.from_lists(
+            vip + lo, query_ids=list(range(len(vip) + len(lo)))
+        )
+        slo = SLOSpec.from_tenants(
+            tenants, np.asarray([0] * len(vip) + [1] * len(lo), np.int32)
+        )
+        return ps, slo
+
+    scheme = ReplicationScheme.from_sharding(shard, n_srv)
+    ctl = AdaptiveController(
+        Cluster(scheme),
+        ControllerConfig(
+            tenants=tenants, window=256, min_queries=1,
+            capacity=float(n_obj),
+        ),
+    )
+    ps1, slo1 = batch(0)
+    r1 = ctl.observe(ps1, slo=slo1)
+    assert r1.tenants == ("vip",) and r1.deferred == ("lo",)
+    ps2, slo2 = batch(8)
+    r2 = ctl.observe(ps2, slo=slo2)
+    # aging: "lo" was deferred on an earlier round, so it wins this one
+    # regardless of the 10^4:1 weight ratio
+    assert r2.tenants == ("lo",)
+    assert "vip" in r2.deferred
+
+
+def test_tenant_weight_must_be_positive():
+    with pytest.raises(ValueError):
+        TenantSpec("bad", 1, weight=0.0)

@@ -109,3 +109,44 @@ def test_recsys_and_moe_workloads():
     mp = moe_workload_materialized(16, 32, 4, n_queries=50)
     assert mp.max_len == 2  # 1-hop dispatch paths
     assert mp.objects[:, 1].min() >= 16  # experts offset past groups
+
+
+def test_workload_latency_summary_slo_aware():
+    """Streaming per-tenant slack/violation report (SLOSpec-aware)."""
+    from repro.core import ReplicationScheme
+    from repro.core.paths import PathSet
+    from repro.core.slo import SLOSpec, TenantSpec
+    from repro.workload import workload_latency_summary
+
+    n_srv = 3
+    shard = (np.arange(12) % n_srv).astype(np.int32)
+    scheme = ReplicationScheme.from_sharding(shard, n_srv)
+    # queries 0-1 tenant "a" (t=0), queries 2-3 tenant "b" (t=2)
+    paths = [[0, 1], [3], [0, 1, 2], [6, 7, 8]]
+    full = PathSet.from_lists(paths, query_ids=[0, 1, 2, 3])
+    slo = SLOSpec.from_tenants(
+        (TenantSpec("a", 0), TenantSpec("b", 2)),
+        np.asarray([0, 0, 1, 1], np.int32),
+    )
+    # stream in two batches; the summary must consume budgets in order
+    batches = [full.select_queries(0, 2), full.select_queries(2, 4)]
+    out = workload_latency_summary(batches, scheme, slo=slo)
+    a, b = out["per_tenant"]["a"], out["per_tenant"]["b"]
+    # a: query 0 crosses one server boundary (h=1 > 0), query 1 is local
+    assert (a["queries"], a["violations"]) == (2, 1)
+    assert a["min_slack"] == -1
+    # b: h=2 for both queries, within t=2
+    assert (b["queries"], b["violations"]) == (2, 0)
+    assert b["min_slack"] == 0
+    assert out["feasible"] is False
+    assert a["violation_frac"] == 0.5
+
+    # scalar-t report unchanged by the refactor
+    legacy = workload_latency_summary([full], scheme, t=2)
+    assert legacy["feasible"] is True
+    assert legacy["n_paths"] == 4
+
+    # and the report can be scored under a routing policy
+    nc = workload_latency_summary(batches, scheme, slo=slo,
+                                  policy="nearest_copy")
+    assert nc["per_tenant"]["a"]["violations"] <= a["violations"]
