@@ -14,6 +14,9 @@
   routing_policies      — hop-routing policies: p99 vs load x
                           {home_first, nearest_copy, queue_aware} +
                           nearest-copy replica pruning
+  provisioning_policies — policy-aware greedy vs home-first(+prune):
+                          shipped/resident replication bytes at equal
+                          nearest_copy feasibility over drift sequences
 
 Usage: PYTHONPATH=src python -m benchmarks.run [module ...]
 Prints ``bench,metric,tags,value`` CSV.
@@ -25,7 +28,7 @@ import time
 MODULES = ["fig2_traversals", "fig6_latency_tradeoff", "fig7_sharding",
            "table4_runtime", "reshard_cost", "beyond_paper",
            "engine_backends", "perf_iterate", "serve_tail",
-           "tenant_frontier", "routing_policies"]
+           "tenant_frontier", "routing_policies", "provisioning_policies"]
 
 # zero-arg entry point per module when it isn't ``run`` (perf_iterate's
 # ``run`` is the arch-cell driver; its benchmark entry is ``run_engine``)

@@ -54,7 +54,7 @@ _INF = jnp.float32(1e30)
 
 @functools.partial(
     jax.jit,
-    static_argnames=("check_capacity",),
+    static_argnames=("check_capacity", "routed_gate"),
     donate_argnums=(0,),
 )
 def _update_batch(
@@ -66,10 +66,12 @@ def _update_batch(
     tables: jnp.ndarray,     # bool [H+1, C, H+1]
     counts: jnp.ndarray,     # int32 [H+1]
     t: jnp.ndarray,          # int32 [B] per-path latency budgets t_q
+    h_routed: jnp.ndarray,   # int32 [B] routed path latency vs the snapshot
     load: jnp.ndarray,       # float32 [S] current storage per server
     capacity: jnp.ndarray,   # float32 [S] (ignored unless check_capacity)
     epsilon: jnp.ndarray,    # float32 scalar
     check_capacity: bool,
+    routed_gate: bool,
 ):
     B, L = objects.shape
     Hp1 = tables.shape[2]
@@ -121,6 +123,14 @@ def _update_batch(
         & valid[:, None, :, None]
         & (h > t)[:, None, None, None]  # each path vs its OWN budget t_q
     )
+    if routed_gate:
+        # policy-aware pricing: a path the *routed* walk already serves
+        # within its budget (h(p, r, rho; policy) <= t_q against the same
+        # snapshot the candidates are costed on) buys no replicas at all
+        window = window & (h_routed > t)[:, None, None, None]
+        skipped = (h > t) & (h_routed <= t)
+    else:
+        skipped = jnp.zeros_like(t, dtype=jnp.bool_)
 
     # needed(x, k): no copy of objects[x] at srv[k] yet — a bit-test against
     # the engine's device-resident packed snapshot (snapshot semantics)
@@ -184,7 +194,7 @@ def _update_batch(
         jax.nn.one_hot(jnp.clip(safe_srv, 0, S - 1), S, dtype=jnp.float32)
         * (srv >= 0).astype(jnp.float32)[..., None],
     )
-    return words, applied_cost, no_solution, chosen, first_obj, srv, new_load
+    return words, applied_cost, no_solution, chosen, first_obj, srv, new_load, skipped
 
 
 @dataclasses.dataclass
@@ -196,6 +206,17 @@ class GreedyStats:
     replicas: int = 0
     runtime_s: float = 0.0
     rm: list | None = None
+    # paths the routed walk already served within budget (policy-aware
+    # greedy only): structurally infeasible under d, zero replicas bought
+    routed_skips: int = 0
+    # replicas dropped by the driver's final same-policy prune sweep
+    # (policy-aware from-scratch runs with policy_prune=True)
+    pruned_replicas: int = 0
+    # paths still over budget under the routed policy after the bounded
+    # revalidation rounds (receding-horizon pathology the rounds could
+    # not repair) — 0 means the returned scheme is routed-feasible for
+    # every path the driver processed
+    routed_violations: int = 0
 
 
 def _run_update_batches(
@@ -216,6 +237,7 @@ def _run_update_batches(
     stats: GreedyStats,
     track_rm: bool,
     collect_additions: bool = False,
+    routed_fn=None,
 ):
     """The batched UPDATE loop over vectorizable paths (shared by the
     from-scratch driver and the incremental delta driver).
@@ -223,6 +245,12 @@ def _run_update_batches(
     ``t_vec`` is the int32 per-path budget vector (one entry per row of
     ``vec_objects``); the candidate ``tables`` must have been enumerated
     for these budgets (one budget class per call — see the drivers).
+
+    ``routed_fn`` (policy-aware greedy) maps a host (objects, lengths)
+    batch to its routed path latencies against the *current* packed
+    snapshot; paths within budget under the routed walk are gated out of
+    the UPDATE (they buy nothing), re-checked per batch so mid-class
+    additions keep shrinking the bill.
 
     Mutates ``packed`` (donated words) and ``stats``; returns the final
     device load and, when ``collect_additions``, the applied (object,
@@ -240,7 +268,12 @@ def _run_update_batches(
             o = np.concatenate([o, np.full((padn, o.shape[1]), -1, np.int32)])
             l = np.concatenate([l, np.zeros((padn,), np.int32)])
             tq = np.concatenate([tq, np.zeros((padn,), np.int32)])
-        packed.words, costs, failed, chosen, first_obj, srv, load = _update_batch(
+        if routed_fn is not None:
+            # routed latency against the same snapshot the batch prices on
+            h_rt = np.asarray(routed_fn(o, l), np.int32)
+        else:
+            h_rt = np.zeros_like(tq)
+        packed.words, costs, failed, chosen, first_obj, srv, load, skipped = _update_batch(
             packed.words,
             to_device(o),
             to_device(l),
@@ -249,14 +282,17 @@ def _run_update_batches(
             tables,
             counts,
             to_device(tq),
+            to_device(h_rt),
             load,
             cap_j,
             eps_j,
             check_capacity,
+            routed_fn is not None,
         )
         k = min(batch_size, nb - i)
         stats.total_cost += float(np.asarray(costs)[:k].sum())
         stats.failed_paths += int(np.asarray(failed)[:k].sum())
+        stats.routed_skips += int(np.asarray(skipped)[:k].sum())
         if check_capacity:
             # exact load from the packed words, computed on device (the
             # incremental estimate can over-count duplicate additions
@@ -289,18 +325,26 @@ def _run_update_batches(
 
 
 def _budget_class_plan(
-    ps: PathSet, t_path: np.ndarray, shard_j, max_candidates: int
+    ps: PathSet,
+    t_path: np.ndarray,
+    shard_j,
+    max_candidates: int,
+    skip_tables: bool = False,
 ):
     """Bucket paths by distinct latency budget (ascending, tightest first).
 
     The candidate enumeration tables C(h, t) and the vectorizable/sequential
     split both depend on t, so each distinct budget gets its own tables and
     its own H_vec.  Yields ``(budget, class_pathset, vec_idx, seq_idx,
-    tables, counts)`` per class; with a uniform budget vector this is one
-    class covering every path in workload order — bit-identical to the old
-    scalar driver.  Processing tightest budgets first lets looser paths
-    reuse the replicas the tight ones forced (sound by Thm 5.3: existing
-    replicas only lower candidate costs).
+    h_all, tables, counts)`` per class; with a uniform budget vector this
+    is one class covering every path in workload order — bit-identical to
+    the old scalar driver.  Processing tightest budgets first lets looser
+    paths reuse the replicas the tight ones forced (sound by Thm 5.3:
+    existing replicas only lower candidate costs).
+
+    ``skip_tables`` (policy-aware drivers) yields None tables/counts: the
+    routed class filter rebuilds them on the surviving paths anyway, so
+    building+uploading them here would be dead work.
     """
     plan = []
     for b in np.unique(t_path):
@@ -315,11 +359,136 @@ def _budget_class_plan(
         H_vec = combi.max_h_within_budget(b, max_candidates, H_needed)
         vec_idx = np.nonzero(h_all <= H_vec)[0]
         seq_idx = np.nonzero(h_all > H_vec)[0]
-        tables_np, counts_np = combi.stacked_tables(max(H_vec, b, 1), b)
-        plan.append(
-            (b, cls, vec_idx, seq_idx, to_device(tables_np), to_device(counts_np))
-        )
+        if skip_tables:
+            tables = counts = None
+        else:
+            tables_np, counts_np = combi.stacked_tables(max(H_vec, b, 1), b)
+            tables, counts = to_device(tables_np), to_device(counts_np)
+        plan.append((b, cls, vec_idx, seq_idx, h_all, tables, counts))
     return plan
+
+
+def _routed_violation_idx(routed_fn, ps: PathSet, t_path: np.ndarray):
+    """Indices of paths over budget under the routed policy (one eval)."""
+    h_rt = np.asarray(
+        routed_fn(
+            np.asarray(ps.objects, np.int32), np.asarray(ps.lengths, np.int32)
+        ),
+        np.int64,
+    )
+    return np.nonzero(h_rt > t_path)[0]
+
+
+def _revalidate_routed(routed_fn, ps, t_path, run_classes, stats) -> None:
+    """Bounded re-validation after a policy-aware pass.
+
+    Receding-horizon walks are not monotone under foreign replica
+    additions, so a path gated out early can regress by the end of the
+    pass: re-run UPDATE over the violating paths for up to
+    ``_POLICY_REVALIDATE`` rounds and record whatever residue survives in
+    ``stats.routed_violations`` (0 = the scheme is routed-feasible for
+    every processed path; callers must not assume feasibility otherwise).
+    """
+    viol = _routed_violation_idx(routed_fn, ps, t_path)
+    for _ in range(_POLICY_REVALIDATE):
+        if not len(viol):
+            break
+        run_classes(ps.select(viol), t_path[viol])
+        viol = _routed_violation_idx(routed_fn, ps, t_path)
+    stats.routed_violations = int(len(viol))
+
+
+def _routed_gate_fn(packed: PackedScheme, pol, backend: str, block: int = 128):
+    """Routed-latency evaluator over the evolving packed snapshot.
+
+    Returns ``fn(objects, lengths) -> int32 [B]`` computing
+    h(p, r, rho; policy) against ``packed``'s *current* words, or None
+    when no gating is wanted (``pol`` is None / home_first — the closed
+    form the UPDATE already prices).  ``backend`` picks the
+    implementation: ``jnp`` (vectorized scan), ``pallas`` (the
+    policy-parameterized routed-walk kernel), or ``reference`` (the
+    pure-python oracle against a per-call readback — the parity anchor).
+    """
+    if pol is None:
+        return None
+    if backend == "reference":
+        from repro.core.reference import (  # lazy: no cycle at import
+            routed_path_latencies_reference,
+        )
+
+        def fn(objects, lengths):
+            return routed_path_latencies_reference(
+                np.asarray(objects, np.int32),
+                np.asarray(lengths, np.int32),
+                packed.unpack(),
+                np.asarray(packed.shard),
+                policy=pol,
+            )
+
+        return fn
+    if backend not in ("jnp", "pallas"):
+        raise ValueError(
+            f"unknown policy_backend {backend!r}; use reference | jnp | pallas"
+        )
+    from repro.engine import backends as _backends
+
+    if backend == "pallas":
+
+        def fn(objects, lengths):
+            return np.asarray(
+                _backends.pallas_routed_eval(
+                    to_device(np.asarray(objects, np.int32)),
+                    to_device(np.asarray(lengths, np.int32)),
+                    packed.words,
+                    packed.shard,
+                    pol,
+                    block=block,
+                )
+            )
+
+        return fn
+
+    def fn(objects, lengths):
+        return np.asarray(
+            _backends.routed_counts(
+                to_device(np.asarray(objects, np.int32)),
+                to_device(np.asarray(lengths, np.int32)),
+                packed.words,
+                packed.shard,
+                pol,
+            )
+        )
+
+    return fn
+
+
+def _routed_class_filter(
+    cls: PathSet, b: int, h_all: np.ndarray, routed_fn, max_candidates: int
+):
+    """Rebuild one budget class's plan on the routed walk.
+
+    Evaluates the class's paths under the routed policy against the
+    current snapshot, drops the ones already within budget (the expensive
+    enumeration fallbacks included), and re-derives H_vec + the C(h, t)
+    tables from the *surviving* paths only.  Returns
+    ``(vec_idx, seq_idx, tables, counts, n_skipped)``.
+    """
+    h_rt = np.asarray(
+        routed_fn(
+            np.asarray(cls.objects, np.int32), np.asarray(cls.lengths, np.int32)
+        ),
+        np.int64,
+    )
+    kept = np.nonzero(h_rt > b)[0]
+    # only structurally-infeasible paths the routed walk rescued count as
+    # skips (h <= b paths were no-ops under the closed form too)
+    n_skipped = int(((h_all > b) & (h_rt <= b)).sum())
+    H_needed = int(h_all[kept].max()) if len(kept) else 0
+    H_vec = combi.max_h_within_budget(b, max_candidates, H_needed)
+    vec_idx = kept[h_all[kept] <= H_vec]
+    seq_idx = kept[h_all[kept] > H_vec]
+    tables_np, counts_np = combi.stacked_tables(max(H_vec, b, 1), b)
+    return vec_idx, seq_idx, to_device(tables_np), to_device(counts_np), n_skipped
 
 
 def _capacity_arrays(n_servers: int, capacity, epsilon):
@@ -331,6 +500,14 @@ def _capacity_arrays(n_servers: int, capacity, epsilon):
         ).copy()
     eps = np.float32(epsilon if epsilon is not None else np.inf)
     return check, jnp.asarray(cap_arr), jnp.asarray(eps)
+
+
+# routed-feasibility re-validation rounds after a policy-aware pass: the
+# receding-horizon walks are not strictly monotone under foreign replica
+# additions, so a path gated out early is re-checked against the final
+# scheme and re-run through UPDATE if it regressed (rare; each round only
+# touches the violating paths)
+_POLICY_REVALIDATE = 2
 
 
 def replicate_workload(
@@ -346,6 +523,9 @@ def replicate_workload(
     prune: bool = True,
     track_rm: bool = False,
     return_engine: bool = False,
+    policy=None,
+    policy_backend: str = "jnp",
+    policy_prune: bool = True,
 ):
     """Alg 1 over a workload with the vectorized batched UPDATE.
 
@@ -362,6 +542,28 @@ def replicate_workload(
     ``replicate_workload(ps, ..., t=SLOSpec.uniform(k, nq))`` produce
     bit-identical schemes.
 
+    ``policy`` (str | ``repro.engine.routing.RoutingPolicy``) prices every
+    candidate under that *routed* walk instead of the home-first closed
+    form: per budget class the C(h, t) tables are rebuilt on the paths the
+    routed walk cannot already serve, and every batch gates additions on
+    h(p, r, rho; policy) <= t_q against the same snapshot it costs
+    candidates on — a path existing replicas already serve buys nothing
+    (``stats.routed_skips`` counts them).  After the main pass the routed
+    feasibility of the whole workload is re-validated and any regressed
+    paths re-run (bounded rounds).  ``policy="home_first"`` / ``None`` is
+    the historical driver, bit-identical.  ``policy_backend`` selects the
+    gate's evaluator: ``jnp`` | ``pallas`` (the policy-parameterized
+    routed-walk kernel) | ``reference`` (pure-python oracle).
+
+    The gate only prices a path against the replicas of *earlier*
+    batches (lock-free snapshot semantics — within one batch every path
+    still pays home-first style), so with ``policy_prune=True`` (the
+    default for policy runs) the driver finishes with one
+    :func:`~repro.core.replication.prune_scheme_replicas` sweep under the
+    same policy, dropping the within-batch redundancy the snapshot could
+    not see; ``stats.pruned_replicas`` counts the drops and the returned
+    scheme/engine reflect them.
+
     The evolving scheme lives on device as the engine's packed uint32
     bitmask; every batch bit-tests candidates against that snapshot and
     applies the chosen additions with one on-device scatter-OR — the
@@ -372,9 +574,12 @@ def replicate_workload(
     re-upload entirely.
     """
     from repro.core.slo import normalize_path_budgets  # local: no cycle at import
+    from repro.engine.routing import resolve_policy  # local: no cycle at import
 
     t0 = time.perf_counter()
     n = shard.shape[0]
+    pol = resolve_policy(policy)
+    pol = None if pol.name == "home_first" else pol
     t_path = normalize_path_budgets(t, pathset)
     if prune:
         # the budget joins the §5.3 dedup key: a tight-budget path must not
@@ -401,61 +606,89 @@ def replicate_workload(
 
     check_capacity, cap_j, eps_j = _capacity_arrays(n_servers, capacity, epsilon)
     load = jnp.asarray(scheme.storage_per_server(f_arr).astype(np.float32))
+    routed_fn = _routed_gate_fn(packed, pol, policy_backend)
 
-    for b, cls, vec_idx, seq_idx, tables, counts in _budget_class_plan(
-        ps, t_path, shard_j, max_candidates
-    ):
-        load, _ = _run_update_batches(
-            packed,
-            cls.objects[vec_idx],
-            cls.lengths[vec_idx],
-            shard_j,
-            f_arr,
-            f_j,
-            tables,
-            counts,
-            np.full(len(vec_idx), b, np.int32),
-            load,
-            cap_j,
-            eps_j,
-            check_capacity,
-            batch_size,
-            stats,
-            track_rm,
-        )
-
-        # Exact fallback for enumeration-heavy paths (processed after the
-        # class's vectorized paths; order is immaterial to correctness by
-        # Thm 5.3).  Additions run against a freshly synced host mask and
-        # are replayed into the packed words so later classes see them.
-        if len(seq_idx):
-            scheme.mask = packed.unpack()
-            fb_obj: list[int] = []
-            fb_srv: list[int] = []
-            for i in seq_idx:
-                res = update_exact(
-                    scheme, cls.path(int(i)), b, f_arr, capacity, epsilon
+    def run_classes(ps_run: PathSet, t_run: np.ndarray) -> None:
+        nonlocal load
+        for b, cls, vec_idx, seq_idx, h_all, tables, counts in _budget_class_plan(
+            ps_run, t_run, shard_j, max_candidates,
+            skip_tables=routed_fn is not None,
+        ):
+            if routed_fn is not None and cls.n_paths:
+                vec_idx, seq_idx, tables, counts, n_skip = _routed_class_filter(
+                    cls, b, h_all, routed_fn, max_candidates
                 )
-                stats.fallback_paths += 1
-                if res.feasible:
-                    stats.total_cost += res.cost
-                    fb_obj.extend(v for v, _ in res.additions)
-                    fb_srv.extend(s for _, s in res.additions)
-                    if track_rm:
-                        stats.rm.extend(res.rm_entries)
-                else:
-                    stats.failed_paths += 1
-            if fb_obj:
-                packed.add(np.asarray(fb_obj), np.asarray(fb_srv))
-                if check_capacity:
-                    load = jnp.asarray(
-                        packed.storage_per_server(f_arr).astype(np.float32)
+                stats.routed_skips += n_skip
+            load, _ = _run_update_batches(
+                packed,
+                cls.objects[vec_idx],
+                cls.lengths[vec_idx],
+                shard_j,
+                f_arr,
+                f_j,
+                tables,
+                counts,
+                np.full(len(vec_idx), b, np.int32),
+                load,
+                cap_j,
+                eps_j,
+                check_capacity,
+                batch_size,
+                stats,
+                track_rm,
+                routed_fn=routed_fn,
+            )
+
+            # Exact fallback for enumeration-heavy paths (processed after
+            # the class's vectorized paths; order is immaterial to
+            # correctness by Thm 5.3).  Additions run against a freshly
+            # synced host mask and are replayed into the packed words so
+            # later classes see them.
+            if len(seq_idx):
+                scheme.mask = packed.unpack()
+                fb_obj: list[int] = []
+                fb_srv: list[int] = []
+                for i in seq_idx:
+                    res = update_exact(
+                        scheme, cls.path(int(i)), b, f_arr, capacity,
+                        epsilon, policy=pol,
                     )
+                    stats.fallback_paths += 1
+                    if res.feasible:
+                        stats.total_cost += res.cost
+                        fb_obj.extend(v for v, _ in res.additions)
+                        fb_srv.extend(s for _, s in res.additions)
+                        if track_rm:
+                            stats.rm.extend(res.rm_entries)
+                    else:
+                        stats.failed_paths += 1
+                if fb_obj:
+                    packed.add(np.asarray(fb_obj), np.asarray(fb_srv))
+                    if check_capacity:
+                        load = jnp.asarray(
+                            packed.storage_per_server(f_arr).astype(np.float32)
+                        )
+
+    run_classes(ps, t_path)
+    if routed_fn is not None:
+        _revalidate_routed(routed_fn, ps, t_path, run_classes, stats)
 
     # single host readback of the packed words (vs. per-batch bool mask);
     # fallback additions were replayed into the words, so the packed state
     # stays the source of truth and return_engine never loses residency.
     scheme.mask = packed.unpack()
+
+    if pol is not None and policy_prune and stats.paths_processed:
+        from repro.core.replication import (  # lazy: no cycle at import
+            prune_scheme_replicas,
+        )
+
+        stats.pruned_replicas, _ = prune_scheme_replicas(
+            scheme, pathset, t, policy=pol, f=f_arr
+        )
+        if stats.pruned_replicas:
+            # removals are not monotone: the packed words are stale
+            packed = PackedScheme.from_mask(scheme.mask, scheme.shard)
 
     stats.replicas = scheme.replica_count()
     stats.runtime_s = time.perf_counter() - t0
@@ -475,6 +708,8 @@ def replicate_delta(
     max_candidates: int = 2048,
     prune: bool = True,
     track_rm: bool = False,
+    policy=None,
+    policy_backend: str = "jnp",
 ):
     """Warm-start incremental UPDATE over *delta* paths (online serving).
 
@@ -490,6 +725,12 @@ def replicate_delta(
     budgets run one UPDATE pass per budget class (tightest first), exactly
     like the from-scratch driver.
 
+    ``policy`` prices the delta under the routed walk, exactly as in
+    :func:`replicate_workload`: delta paths the resident scheme already
+    serves under the policy buy nothing — a controller that scores
+    violations under ``nearest_copy`` repairs with the same policy it
+    triggered on, instead of over-paying home-first bytes.
+
     By Thm 5.3 (latency-robustness) the existing replicas can only lower
     candidate costs, never invalidate previously established bounds, so
     warm-starting over a path delta is exactly as sound as processing those
@@ -501,6 +742,7 @@ def replicate_delta(
     scheme delta a controller ships to the cluster / replays on restart).
     """
     from repro.core.slo import normalize_path_budgets  # local: no cycle at import
+    from repro.engine.routing import resolve_policy  # local: no cycle at import
 
     t0 = time.perf_counter()
     if engine.packed is None:
@@ -511,6 +753,8 @@ def replicate_delta(
     shard = engine.host_shard()
     n = packed.n_objects
     n_servers = packed.n_servers
+    pol = resolve_policy(policy)
+    pol = None if pol.name == "home_first" else pol
     t_path = normalize_path_budgets(t, pathset)
     if prune:
         ps, keep = pathset.prune_redundant(
@@ -532,74 +776,95 @@ def replicate_delta(
 
     check_capacity, cap_j, eps_j = _capacity_arrays(n_servers, capacity, epsilon)
     load = jnp.asarray(packed.storage_per_server(f_arr).astype(np.float32))
+    routed_fn = _routed_gate_fn(packed, pol, policy_backend)
 
     add_obj = np.zeros(0, np.int64)
     add_srv = np.zeros(0, np.int64)
-    for b, cls, vec_idx, seq_idx, tables, counts in _budget_class_plan(
-        ps, t_path, shard_j, max_candidates
-    ):
-        load, additions = _run_update_batches(
-            packed,
-            cls.objects[vec_idx],
-            cls.lengths[vec_idx],
-            shard_j,
-            f_arr,
-            f_j,
-            tables,
-            counts,
-            np.full(len(vec_idx), b, np.int32),
-            load,
-            cap_j,
-            eps_j,
-            check_capacity,
-            batch_size,
-            stats,
-            track_rm,
-            collect_additions=True,
-        )
-        cls_obj, cls_srv = additions
 
-        # Mirror the vectorized additions into the host scheme FIRST: the
-        # exact fallback below prices candidates against the host mask,
-        # which must reflect what this class already scatter-ORed into the
-        # words (and later classes' fallbacks price against this class).
-        if engine.scheme is not None and len(cls_obj):
-            engine.scheme.mask[cls_obj, cls_srv] = True
-        add_obj = np.concatenate([add_obj, cls_obj])
-        add_srv = np.concatenate([add_srv, cls_srv])
-
-        # Exact fallback for enumeration-heavy delta paths: run against a
-        # host scheme and replay the additions into the device-resident
-        # words.
-        if len(seq_idx):
-            host = (
-                engine.scheme
-                if engine.scheme is not None
-                else engine.to_scheme()
-            )
-            fb_obj: list[int] = []
-            fb_srv: list[int] = []
-            for i in seq_idx:
-                res = update_exact(
-                    host, cls.path(int(i)), b, f_arr, capacity, epsilon
+    def run_classes(ps_run: PathSet, t_run: np.ndarray) -> None:
+        nonlocal load, add_obj, add_srv
+        for b, cls, vec_idx, seq_idx, h_all, tables, counts in _budget_class_plan(
+            ps_run, t_run, shard_j, max_candidates,
+            skip_tables=routed_fn is not None,
+        ):
+            if routed_fn is not None and cls.n_paths:
+                vec_idx, seq_idx, tables, counts, n_skip = _routed_class_filter(
+                    cls, b, h_all, routed_fn, max_candidates
                 )
-                stats.fallback_paths += 1
-                if res.feasible:
-                    stats.total_cost += res.cost
-                    fb_obj.extend(v for v, _ in res.additions)
-                    fb_srv.extend(s for _, s in res.additions)
-                    if track_rm:
-                        stats.rm.extend(res.rm_entries)
-                else:
-                    stats.failed_paths += 1
-            if fb_obj:
-                packed.add(np.asarray(fb_obj), np.asarray(fb_srv))
-                add_obj = np.concatenate([add_obj, np.asarray(fb_obj, np.int64)])
-                add_srv = np.concatenate([add_srv, np.asarray(fb_srv, np.int64)])
-                if check_capacity:
-                    load = jnp.asarray(
-                        packed.storage_per_server(f_arr).astype(np.float32)
+                stats.routed_skips += n_skip
+            load, additions = _run_update_batches(
+                packed,
+                cls.objects[vec_idx],
+                cls.lengths[vec_idx],
+                shard_j,
+                f_arr,
+                f_j,
+                tables,
+                counts,
+                np.full(len(vec_idx), b, np.int32),
+                load,
+                cap_j,
+                eps_j,
+                check_capacity,
+                batch_size,
+                stats,
+                track_rm,
+                collect_additions=True,
+                routed_fn=routed_fn,
+            )
+            cls_obj, cls_srv = additions
+
+            # Mirror the vectorized additions into the host scheme FIRST:
+            # the exact fallback below prices candidates against the host
+            # mask, which must reflect what this class already
+            # scatter-ORed into the words (and later classes' fallbacks
+            # price against this class).
+            if engine.scheme is not None and len(cls_obj):
+                engine.scheme.mask[cls_obj, cls_srv] = True
+            add_obj = np.concatenate([add_obj, cls_obj])
+            add_srv = np.concatenate([add_srv, cls_srv])
+
+            # Exact fallback for enumeration-heavy delta paths: run against
+            # a host scheme and replay the additions into the
+            # device-resident words.
+            if len(seq_idx):
+                host = (
+                    engine.scheme
+                    if engine.scheme is not None
+                    else engine.to_scheme()
+                )
+                fb_obj: list[int] = []
+                fb_srv: list[int] = []
+                for i in seq_idx:
+                    res = update_exact(
+                        host, cls.path(int(i)), b, f_arr, capacity,
+                        epsilon, policy=pol,
                     )
+                    stats.fallback_paths += 1
+                    if res.feasible:
+                        stats.total_cost += res.cost
+                        fb_obj.extend(v for v, _ in res.additions)
+                        fb_srv.extend(s for _, s in res.additions)
+                        if track_rm:
+                            stats.rm.extend(res.rm_entries)
+                    else:
+                        stats.failed_paths += 1
+                if fb_obj:
+                    packed.add(np.asarray(fb_obj), np.asarray(fb_srv))
+                    add_obj = np.concatenate(
+                        [add_obj, np.asarray(fb_obj, np.int64)]
+                    )
+                    add_srv = np.concatenate(
+                        [add_srv, np.asarray(fb_srv, np.int64)]
+                    )
+                    if check_capacity:
+                        load = jnp.asarray(
+                            packed.storage_per_server(f_arr).astype(np.float32)
+                        )
+
+    run_classes(ps, t_path)
+    if routed_fn is not None:
+        _revalidate_routed(routed_fn, ps, t_path, run_classes, stats)
 
     # Dedupe (a batch can choose the same (v, s) for several paths; the
     # scatter-OR is idempotent, but the returned delta is the exact set of

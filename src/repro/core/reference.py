@@ -69,7 +69,12 @@ def routed_trace_reference(
     ``repro.engine.backends.access_trace``, which is parity-tested
     against this function.
     """
-    from repro.engine.routing import pick_holder_host, resolve_policy
+    from repro.engine.routing import (
+        dp_suffix_scores,
+        pick_holder_host,
+        pick_holder_scored,
+        resolve_policy,
+    )
 
     pol = resolve_policy(policy)
     lv = load if pol.uses_load else None
@@ -81,6 +86,11 @@ def routed_trace_reference(
         n = int(lengths[i])
         if n == 0:
             continue
+        dp = (
+            dp_suffix_scores(objects[i, :n], mask, pol.depth)
+            if pol.name == "nearest_copy_dp"
+            else None
+        )
         cur = int(start[i]) if start is not None else int(home[objects[i, 0]])
         servers[i, 0] = cur
         local[i, 0] = True
@@ -90,6 +100,10 @@ def routed_trace_reference(
                 local[i, x] = True
             elif pol.name == "home_first":
                 cur = int(home[v])
+            elif dp is not None:
+                # score each holder by the optimal cost-to-go over the
+                # next `depth` accesses when the hop lands there
+                cur = pick_holder_scored(mask[v], int(home[v]), dp[x, :-1])
             else:
                 la = None
                 if pol.lookahead and x + 1 < n:
@@ -132,6 +146,7 @@ def update_exact(
     capacity: np.ndarray | float | None = None,
     epsilon: float | None = None,
     apply: bool = True,
+    policy=None,
 ) -> UpdateResult:
     """Alg 2: one UPDATE(r, p) call.  Mutates ``scheme`` in place if feasible.
 
@@ -140,6 +155,12 @@ def update_exact(
     with upward replication + latency-robustness, cost it against the
     current scheme, filter by storage capacity / load balance, and apply the
     cheapest feasible candidate.
+
+    ``policy`` (str | ``repro.engine.routing.RoutingPolicy``) prices the
+    path under that *routed* walk first: when the path's routed latency
+    against the current scheme is already within ``t`` — the serving path
+    can reach existing replicas the home-first closed form cannot — the
+    UPDATE is a free no-op (the policy-aware greedy's skip, oracle form).
     """
     shard = scheme.shard
     fv = (lambda v: 1.0) if f is None else (lambda v: float(f[v]))
@@ -147,6 +168,22 @@ def update_exact(
     h = len(groups) - 1
     if h <= t:
         return UpdateResult(True, 0.0, [], [])
+    if policy is not None:
+        from repro.engine.routing import resolve_policy  # lazy: no cycle
+
+        pol = resolve_policy(policy)
+        if pol.name != "home_first":
+            h_rt = int(
+                routed_path_latencies_reference(
+                    np.asarray([path], np.int32),
+                    np.asarray([len(path)], np.int32),
+                    scheme.mask,
+                    scheme.shard,
+                    policy=pol,
+                )[0]
+            )
+            if h_rt <= t:
+                return UpdateResult(True, 0.0, [], [])
 
     group_server = [int(shard[g[0]]) for g in groups]
     base_load = scheme.storage_per_server(f)
@@ -213,25 +250,65 @@ def replicate_workload_exact(
     capacity: np.ndarray | float | None = None,
     epsilon: float | None = None,
     prune: bool = True,
+    policy=None,
 ) -> tuple[ReplicationScheme, dict]:
-    """Alg 1 with the exact UPDATE; returns (scheme, stats)."""
+    """Alg 1 with the exact UPDATE; returns (scheme, stats).
+
+    ``policy`` makes every UPDATE price its path under the routed walk
+    first (see :func:`update_exact`) — the sequential oracle of
+    ``repro.core.greedy.replicate_workload(policy=...)``.  Because the
+    receding-horizon walks are not strictly monotone under foreign
+    replica additions, a skipped path can regress by the end of the
+    sweep; like the batched driver, bounded re-validation sweeps re-run
+    UPDATE on any path the routed walk no longer serves.
+    """
+    if policy is not None:
+        from repro.engine.routing import resolve_policy  # lazy: no cycle
+
+        pol = resolve_policy(policy)
+        policy = None if pol.name == "home_first" else pol
     ps = pathset.prune_redundant(shard) if prune else pathset
     scheme = ReplicationScheme.from_sharding(shard, n_servers)
     total_cost = 0.0
     failed = 0
     rm: list[tuple[int, int, int]] = []
-    for i in range(ps.n_paths):
-        res = update_exact(scheme, ps.path(i), t, f, capacity, epsilon)
-        if res.feasible:
-            total_cost += res.cost
-            rm.extend(res.rm_entries)
-        else:
-            failed += 1
+
+    def sweep(indices) -> list[int]:
+        nonlocal total_cost, failed
+        for i in indices:
+            res = update_exact(
+                scheme, ps.path(int(i)), t, f, capacity, epsilon,
+                policy=policy,
+            )
+            if res.feasible:
+                total_cost += res.cost
+                rm.extend(res.rm_entries)
+            else:
+                failed += 1
+        if policy is None:
+            return []
+        h_rt = routed_path_latencies_reference(
+            np.asarray(ps.objects), np.asarray(ps.lengths),
+            scheme.mask, scheme.shard, policy=policy,
+        )
+        return np.nonzero(h_rt > t)[0].tolist()
+
+    viol = sweep(range(ps.n_paths))
+    if policy is not None:
+        from repro.core.greedy import _POLICY_REVALIDATE  # lazy: no cycle
+
+        for _ in range(_POLICY_REVALIDATE):
+            if not viol:
+                break
+            viol = sweep(viol)
     stats = {
         "total_cost": total_cost,
         "failed_paths": failed,
         "replicas": scheme.replica_count(),
         "paths_processed": ps.n_paths,
         "rm": rm,
+        # paths still over budget under the routed policy after the
+        # bounded revalidation sweeps (0 whenever policy is None)
+        "routed_violations": len(viol),
     }
     return scheme, stats

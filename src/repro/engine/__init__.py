@@ -14,8 +14,10 @@ analyzer, and every benchmark.
   RawScheme      — minimal mask+shard scheme carrier (from_arrays input)
   PackedScheme   — the device-resident packed uint32 bitmask state
   RoutingPolicy  — pluggable remote-hop target selection for the batched
-                   access walk (home_first | nearest_copy | queue_aware);
+                   access walk (home_first | nearest_copy | queue_aware |
+                   nearest_copy_dp(k), the suffix-DP lookahead family);
                    consumed by access_trace / path_latencies(policy=)
+                   and the policy-aware greedy provisioning gate
   TRANSFER       — host<->device transfer accounting (perf benchmarks)
 """
 from repro.engine.engine import DevicePaths, LatencyEngine, RawScheme
@@ -24,8 +26,10 @@ from repro.engine.routing import (
     POLICIES,
     HomeFirst,
     NearestCopy,
+    NearestCopyDP,
     QueueAware,
     RoutingPolicy,
+    nearest_copy_dp,
     resolve_policy,
 )
 from repro.engine.streaming import TRANSFER, to_device
@@ -45,6 +49,8 @@ __all__ = [
     "RoutingPolicy",
     "HomeFirst",
     "NearestCopy",
+    "NearestCopyDP",
     "QueueAware",
+    "nearest_copy_dp",
     "resolve_policy",
 ]

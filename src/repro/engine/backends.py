@@ -175,14 +175,17 @@ def _unpack_rows(w):
 
 
 def _pick_targets(cand, home, load):
-    """Least-loaded holder per lane; home wins ties, then lowest id.
+    """Best-scoring holder per lane; home wins ties, then lowest id.
 
     ``cand`` bool [P, Sp] candidate holders, ``home`` int32 [P] (may be
-    -1), ``load`` float32 [Sp].  Returns int32 [P]; -1 when a lane has no
-    candidate.  The scalar twin is ``routing.pick_holder_host``.
+    -1), ``load`` float32 [Sp] (one shared score per server — the
+    queue-depth rank) or float32 [P, Sp] (a per-lane score plane — the
+    DP cost-to-go of ``nearest_copy_dp``).  Returns int32 [P]; -1 when a
+    lane has no candidate.  The scalar twins are
+    ``routing.pick_holder_host`` / ``routing.pick_holder_scored``.
     """
     any_c = cand.any(axis=1)
-    lv = jnp.where(cand, load[None, :], jnp.inf)
+    lv = jnp.where(cand, jnp.broadcast_to(load, cand.shape), jnp.inf)
     m = jnp.min(lv, axis=1)
     best = cand & (lv <= m[:, None])
     hc = jnp.maximum(home, 0)
@@ -262,6 +265,155 @@ def _routed_trace_impl(
     return servers, local
 
 
+# ---------------------------------------------------------------------------
+# Depth-k suffix DP (``nearest_copy_dp``): score every server by the optimal
+# paid-hop count over the next k accesses, then walk with the scored pick.
+# ---------------------------------------------------------------------------
+def _unpack_positions(wrows):
+    """[P, L, W] uint32 -> [P, L, W*32] bool holder bits per position."""
+    P, L, W = wrows.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (wrows[:, :, :, None] >> shifts[None, None, None, :]) & jnp.uint32(1)
+    return bits.reshape(P, L, W * 32).astype(jnp.bool_)
+
+
+def _dp_score_tables(objects, lengths, words, depth: int):
+    """``E[p, pos, s]``: optimal paid hops over the next ``depth`` accesses.
+
+    The batched twin of ``routing.dp_suffix_scores`` (the dead -1 state is
+    tracked in a separate ``D`` plane instead of an extra column).  A hop
+    may land on any holder of the hopped-to object; an object with no
+    holder sends the walk to the dead state, from which nothing is local
+    but later hops still revive.  ``depth < 0`` scores the whole suffix
+    (one backward scan); ``depth >= 0`` runs ``depth`` window-widening
+    sweeps (each a vectorized position shift).  Returns float32
+    ``[P, L, W*32]``.
+    """
+    P, L = objects.shape
+    valid = jnp.arange(L)[None, :] < lengths[:, None]
+    safe = jnp.maximum(objects, 0)
+    hold = _unpack_positions(words[safe]) & valid[:, :, None]  # [P, L, Sp]
+    Sp = hold.shape[2]
+    if L == 1:
+        return jnp.zeros((P, L, Sp), jnp.float32)
+
+    def hop_cost(hold_next, V_next, D_next):
+        lv = jnp.where(hold_next, V_next, jnp.inf)
+        vmin = jnp.min(lv, axis=-1)
+        any_h = hold_next.any(axis=-1)
+        return 1.0 + jnp.where(any_h, vmin, D_next)
+
+    if depth < 0:
+        # full suffix: one backward scan, carry = (V at pos+1, dead value)
+        def step(carry, xs):
+            Vn, Dn = carry
+            hold_next, v_next = xs
+            hop = hop_cost(hold_next, Vn, Dn)
+            V = jnp.where(
+                v_next[:, None],
+                jnp.where(hold_next, Vn, hop[:, None]),
+                0.0,
+            )
+            D = jnp.where(v_next, hop, 0.0)
+            return (V, D), V
+
+        xs = (
+            jnp.moveaxis(hold[:, 1:], 1, 0),
+            jnp.moveaxis(valid[:, 1:], 1, 0),
+        )
+        init = (jnp.zeros((P, Sp), jnp.float32), jnp.zeros((P,), jnp.float32))
+        _, Vs = jax.lax.scan(step, init, xs, reverse=True)
+        return jnp.concatenate(
+            [jnp.moveaxis(Vs, 0, 1), jnp.zeros((P, 1, Sp), jnp.float32)],
+            axis=1,
+        )
+
+    # window-widening sweeps: E_m[pos] from E_{m-1}[pos + 1] (position shift)
+    E = jnp.zeros((P, L, Sp), jnp.float32)
+    D = jnp.zeros((P, L), jnp.float32)
+    hold_next = jnp.concatenate(
+        [hold[:, 1:], jnp.zeros((P, 1, Sp), jnp.bool_)], axis=1
+    )
+    v_next = jnp.concatenate(
+        [valid[:, 1:], jnp.zeros((P, 1), jnp.bool_)], axis=1
+    )
+    for _ in range(depth):
+        E_next = jnp.concatenate(
+            [E[:, 1:], jnp.zeros((P, 1, Sp), jnp.float32)], axis=1
+        )
+        D_next = jnp.concatenate(
+            [D[:, 1:], jnp.zeros((P, 1), jnp.float32)], axis=1
+        )
+        hop = hop_cost(hold_next, E_next, D_next)  # [P, L]
+        E = jnp.where(
+            v_next[:, :, None],
+            jnp.where(hold_next, E_next, hop[:, :, None]),
+            0.0,
+        )
+        D = jnp.where(v_next, hop, 0.0)
+    return E
+
+
+def _scored_walk(objects, lengths, words, home, start, scores):
+    """The access walk with per-(position, server) hop scores.
+
+    Same scan as ``_routed_trace_impl`` but the remote-hop pick ranks
+    holders by ``scores[:, i, :]`` (the DP cost-to-go of landing at each
+    server for the hop at position ``i``) instead of a shared load
+    vector; home wins ties, then the lowest id.
+    """
+    P, L = objects.shape
+    valid = jnp.arange(L)[None, :] < lengths[:, None]
+    safe = jnp.maximum(objects, 0)
+    hrows = home[safe]
+    wrows = words[safe]
+
+    server0 = jnp.where(valid[:, 0], start, 0).astype(jnp.int32)
+
+    def step(server, xs):
+        h_t, w_t, sc_t, v_t = xs
+        srv_c = jnp.maximum(server, 0)
+        word = jnp.take_along_axis(w_t, (srv_c // 32)[:, None], axis=1)[:, 0]
+        bit = (srv_c % 32).astype(jnp.uint32)
+        has_local = ((word >> bit) & jnp.uint32(1)).astype(jnp.bool_)
+        has_local = has_local & (server >= 0)
+        cand = _unpack_rows(w_t)
+        tgt = _pick_targets(cand, h_t, sc_t)
+        nxt = jnp.where(has_local, server, tgt).astype(jnp.int32)
+        nxt = jnp.where(v_t, nxt, server)
+        return nxt, (nxt, has_local & v_t)
+
+    xs = (
+        jnp.moveaxis(hrows[:, 1:], 1, 0),
+        jnp.moveaxis(wrows[:, 1:], 1, 0),
+        jnp.moveaxis(scores[:, 1:], 1, 0),
+        jnp.moveaxis(valid[:, 1:], 1, 0),
+    )
+    _, (srv_rest, loc_rest) = jax.lax.scan(step, server0, xs)
+    servers = jnp.concatenate(
+        [server0[:, None], jnp.moveaxis(srv_rest, 0, 1)], axis=1
+    )
+    local = jnp.concatenate(
+        [valid[:, :1], jnp.moveaxis(loc_rest, 0, 1)], axis=1
+    )
+    return servers, local
+
+
+@functools.partial(jax.jit, static_argnames=("depth",))
+def _dp_trace_impl(objects, lengths, words, home, start, depth):
+    scores = _dp_score_tables(objects, lengths, words, depth)
+    return _scored_walk(objects, lengths, words, home, start, scores)
+
+
+@functools.partial(jax.jit, static_argnames=("depth",))
+def _dp_scores_jit(objects, lengths, words, depth):
+    return _dp_score_tables(objects, lengths, words, depth)
+
+
+def _dp_depth(pol) -> int:
+    return -1 if pol.depth is None else int(pol.depth)
+
+
 def _load_vector(load, words) -> jnp.ndarray:
     """Pad a per-server load vector to the words' W*32 bit width.
 
@@ -301,6 +453,10 @@ def access_trace(objects, lengths, words, home, start=None, policy=None,
         start = _root_home(objects, home)
     if pol.name == "home_first":
         return _access_trace_impl(objects, lengths, words, home, start)
+    if pol.name == "nearest_copy_dp":
+        return _dp_trace_impl(
+            objects, lengths, words, home, start, depth=_dp_depth(pol)
+        )
     return _routed_trace_impl(
         objects, lengths, words, home, start,
         _load_vector(load if pol.uses_load else None, words),
@@ -319,9 +475,22 @@ def _routed_counts_impl(objects, lengths, words, home, start, load, lookahead):
     return jnp.sum((valid & ~local).astype(jnp.int32), axis=1)
 
 
+@functools.partial(jax.jit, static_argnames=("depth",))
+def _dp_counts_impl(objects, lengths, words, home, start, depth):
+    _, local = _dp_trace_impl(objects, lengths, words, home, start, depth)
+    L = objects.shape[1]
+    valid = jnp.arange(L)[None, :] < lengths[:, None]
+    return jnp.sum((valid & ~local).astype(jnp.int32), axis=1)
+
+
 def routed_counts(objects, lengths, words, shard, policy, load=None):
     """h(p, r, rho) per path under a non-home-first routing policy."""
     pol = resolve_policy(policy)
+    if pol.name == "nearest_copy_dp":
+        return _dp_counts_impl(
+            objects, lengths, words, shard, _root_home(objects, shard),
+            depth=_dp_depth(pol),
+        )
     return _routed_counts_impl(
         objects, lengths, words, shard, _root_home(objects, shard),
         _load_vector(load if pol.uses_load else None, words),
@@ -334,12 +503,23 @@ def pallas_routed_trace(
     start=None,
 ):
     """Policy-routed walk via the Pallas kernel; (servers, local) arrays."""
-    from repro.kernels.routed_walk import routed_walk_pallas  # lazy import
+    from repro.kernels.routed_walk import (  # lazy import
+        routed_walk_pallas,
+        scored_walk_pallas,
+    )
 
     pol = resolve_policy(policy)
     home, masks = pallas_prep(objects, lengths, words, shard)
     if start is None:
         start = _root_home(objects, shard)
+    if pol.name == "nearest_copy_dp":
+        # the score tables are a plain jnp precompute (device-resident);
+        # the kernel is the score-parameterized walk over them
+        scores = _dp_scores_jit(objects, lengths, words, _dp_depth(pol))
+        return scored_walk_pallas(
+            home, masks, lengths, start, scores,
+            block=block, interpret=not _on_tpu(),
+        )
     return routed_walk_pallas(
         home, masks, lengths, start,
         _load_vector(load if pol.uses_load else None, words),

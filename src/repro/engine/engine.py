@@ -163,6 +163,24 @@ class LatencyEngine:
         if self.scheme is not None:
             self.scheme.mask[obj, srv] = True
 
+    def remove_replicas(self, objects, servers) -> None:
+        """Drop replicas, applied on device (and to the host scheme).
+
+        The inverse of :meth:`add_replicas` (same negative-pair masking),
+        used by the policy prune sweep.  Removals are not monotone: the
+        caller owns the feasibility re-check.
+        """
+        obj = np.asarray(objects)
+        srv = np.asarray(servers)
+        ok = (obj >= 0) & (srv >= 0)
+        obj, srv = obj[ok], srv[ok]
+        if obj.size == 0:
+            return
+        if self.packed is not None:
+            self.packed.remove(obj, srv)
+        if self.scheme is not None:
+            self.scheme.mask[obj, srv] = False
+
     def prepare(self, pathset) -> DevicePaths:
         """Pin a PathSet on device for repeated evaluation (one upload)."""
         return DevicePaths(pathset)

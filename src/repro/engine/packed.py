@@ -100,6 +100,36 @@ def _scatter_or_jit(words, objects, servers):
     return scatter_or_pairs(words, objects, servers)
 
 
+def scatter_clear_pairs(
+    words: jnp.ndarray, objects: jnp.ndarray, servers: jnp.ndarray
+) -> jnp.ndarray:
+    """Clear (object, server) membership bits (the prune-sweep inverse).
+
+    Same masking/bit-slicing discipline as :func:`scatter_or_pairs`:
+    negative pairs are routed to the sacrificial row, duplicates are
+    idempotent.  Removals are NOT monotone — callers that cached derived
+    state (bool masks, engines) must refresh it.
+    """
+    pad_row = words.shape[0] - 1
+    ok = (objects >= 0) & (servers >= 0) & (objects < pad_row)
+    obj = jnp.where(ok, objects, pad_row).reshape(-1)
+    srv = jnp.where(ok, servers, 0).reshape(-1)
+    w_idx = srv // 32
+    b_idx = srv % 32
+    for b in range(32):
+        sel = b_idx == b
+        o = jnp.where(sel, obj, pad_row)
+        w = jnp.where(sel, w_idx, 0)
+        old = words[o, w]
+        words = words.at[o, w].set(old & ~jnp.uint32(1 << b))
+    return words
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_clear_jit(words, objects, servers):
+    return scatter_clear_pairs(words, objects, servers)
+
+
 @jax.jit
 def _unpack_load_jit(words, f):
     """f_r(s) per server from packed words, entirely on device."""
@@ -171,6 +201,18 @@ class PackedScheme:
     def add(self, objects, servers) -> None:
         """On-device monotone scatter-OR (donated buffer; words reassigned)."""
         self.words = _scatter_or_jit(
+            self.words,
+            to_device(np.asarray(objects, dtype=np.int32)),
+            to_device(np.asarray(servers, dtype=np.int32)),
+        )
+
+    def remove(self, objects, servers) -> None:
+        """On-device membership-bit clear (the prune sweep's inverse).
+
+        NOT monotone: any derived state (unpacked masks, downstream
+        engines built from this scheme) is stale after a remove.
+        """
+        self.words = _scatter_clear_jit(
             self.words,
             to_device(np.asarray(objects, dtype=np.int32)),
             to_device(np.asarray(servers, dtype=np.int32)),

@@ -27,13 +27,32 @@ above it (engine -> distsys executor -> serve simulator/controller):
                     the preferred candidate class the least-loaded holder
                     serves the hop, the home server winning ties — the
                     batched generalization of ``Router.route_hop``.
+  ``nearest_copy_dp(k)``  the depth-``k`` generalization of the locality
+                    lookahead: a remote hop scores every alive holder by
+                    the *optimal* number of paid hops over the next ``k``
+                    accesses of the path (a DP over the path suffix,
+                    recomputed against the live replica state) and picks
+                    the best-scoring holder, home winning ties, then the
+                    lowest id.  ``k=0`` reduces to ``home_first`` and
+                    ``k=1`` to ``nearest_copy`` **bit-identically** (the
+                    one-step score is exactly "does this holder keep the
+                    next access local"); ``depth=None`` scores the whole
+                    remaining suffix, i.e. executes the *optimal*
+                    replica-aware walk — the latency it reports
+                    pathwise-dominates every other policy and is monotone
+                    under replica additions (the two properties
+                    ``tests/test_policy_properties.py`` pins).  For
+                    intermediate ``k`` the walk is receding-horizon:
+                    better in aggregate as ``k`` grows, but not pathwise
+                    (a deeper-but-still-myopic pick can lose to a lucky
+                    shallow one on an adversarial path).
 
 Policies are frozen dataclasses (hashable, usable as jit static args);
 the device implementations live in ``repro.engine.backends`` and a Pallas
 kernel twin in ``repro.kernels.routed_walk``.  :func:`pick_holder_host`
-is the scalar numpy twin shared by ``Router.route_hop`` and the
-``reference`` backend oracle, so all three implementations pin one
-semantics.
+and :func:`pick_holder_scored` are the scalar numpy twins shared by
+``Router.route_hop`` and the ``reference`` backend oracle, so all three
+implementations pin one semantics.
 """
 from __future__ import annotations
 
@@ -41,7 +60,7 @@ import dataclasses
 
 import numpy as np
 
-POLICIES = ("home_first", "nearest_copy", "queue_aware")
+POLICIES = ("home_first", "nearest_copy", "queue_aware", "nearest_copy_dp")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,6 +105,33 @@ class QueueAware(NearestCopy):
     uses_load = True
 
 
+@dataclasses.dataclass(frozen=True)
+class NearestCopyDP(RoutingPolicy):
+    """Depth-``k`` locality lookahead: a DP over the path suffix.
+
+    A remote hop scores every holder ``s'`` by the optimal paid-hop count
+    over the next ``depth`` accesses when the walk lands at ``s'`` (the
+    suffix DP of ``repro.engine.backends._dp_score_tables``); the
+    best-scoring holder serves the hop, the home server winning ties,
+    then the lowest id.  ``depth=None`` scores the entire remaining
+    suffix — the *optimal* replica-aware walk, the strongest reading of
+    Eqn 1's "any co-located copy counts".  ``depth=0`` is ``home_first``
+    and ``depth=1`` is ``nearest_copy``, bit-identically.
+    """
+
+    name = "nearest_copy_dp"
+    depth: int | None = None
+
+    def __post_init__(self):
+        if self.depth is not None and self.depth < 0:
+            raise ValueError("nearest_copy_dp depth must be >= 0 or None")
+
+
+def nearest_copy_dp(depth: int | None = None) -> NearestCopyDP:
+    """The depth-``k`` DP lookahead policy (``None`` = full suffix)."""
+    return NearestCopyDP(depth=depth)
+
+
 def resolve_policy(policy) -> RoutingPolicy:
     """str | RoutingPolicy | None -> RoutingPolicy (None = home_first)."""
     if policy is None:
@@ -98,6 +144,8 @@ def resolve_policy(policy) -> RoutingPolicy:
         return NearestCopy()
     if policy == "queue_aware":
         return QueueAware()
+    if policy == "nearest_copy_dp":
+        return NearestCopyDP()
     raise ValueError(f"unknown routing policy {policy!r}; use {POLICIES}")
 
 
@@ -139,3 +187,63 @@ def pick_holder_host(
     if home in best:
         return int(home)
     return int(best[0])
+
+
+def pick_holder_scored(
+    holders: np.ndarray, home: int, scores: np.ndarray
+) -> int:
+    """Scalar oracle of the scored holder pick (``nearest_copy_dp``).
+
+    ``holders`` bool [S] — alive copy holders of the hopped-to object;
+    ``home`` the object's home server (never wins a tie when -1);
+    ``scores`` float/int [S] — per-server cost-to-go (lower is better).
+    Among the minimum-score holders the home wins, then the lowest id;
+    returns -1 when ``holders`` is empty.  The batched jnp walk and the
+    scored Pallas kernel are parity-tested against this function.
+    """
+    holders = np.asarray(holders, bool)
+    ids = np.nonzero(holders)[0]
+    if len(ids) == 0:
+        return -1
+    sc = np.asarray(scores, np.float64)[ids]
+    m = sc.min()
+    best = ids[sc <= m]
+    if home in best:
+        return int(home)
+    return int(best[0])
+
+
+def dp_suffix_scores(
+    objs: np.ndarray, mask: np.ndarray, depth: int | None
+) -> "np.ndarray":
+    """Suffix-DP score table for one path (the scalar oracle).
+
+    ``E[pos, s]`` = minimal number of paid hops over the next ``depth``
+    accesses of the path (``objs[pos + 1 :]``, clipped at the path end)
+    when the walk sits at server ``s`` after access ``pos``; a hop may go
+    to any holder of the hopped-to object (``mask``), and an object with
+    no holder sends the walk to the dead server -1 (from which nothing is
+    local but later hops can still revive to a real holder).  The last
+    row ``E[pos, S]`` is that dead-state value.  ``depth=None`` scores
+    the whole suffix (the optimal cost-to-go).  Returns float64
+    ``[n, S + 1]``.
+    """
+    objs = [int(v) for v in objs]
+    n = len(objs)
+    S = mask.shape[1]
+    k = n if depth is None else min(int(depth), n)
+    # E[m] rows roll over positions; build bottom-up over the window size m
+    E = np.zeros((n, S + 1), np.float64)
+    for _ in range(k):
+        nxt = np.zeros((n, S + 1), np.float64)
+        for pos in range(n - 1):
+            v = objs[pos + 1]
+            hold = mask[v]
+            if hold.any():
+                hop = 1.0 + E[pos + 1, :S][hold].min()
+            else:
+                hop = 1.0 + E[pos + 1, S]
+            nxt[pos, :S] = np.where(hold, E[pos + 1, :S], hop)
+            nxt[pos, S] = hop
+        E = nxt
+    return E

@@ -44,14 +44,16 @@ def _unpack(words):
 
 
 def _pick(cand, home, load, iota_s):
-    """Least-loaded candidate per lane; home wins ties, then lowest id.
+    """Best-scoring candidate per lane; home wins ties, then lowest id.
 
-    ``cand`` bool [Sp, bP], ``home`` int32 [bP], ``load`` f32 [Sp].
-    Returns (target int32 [bP] — garbage where no candidate —, any bool
-    [bP]); the scalar twin is ``repro.engine.routing.pick_holder_host``.
+    ``cand`` bool [Sp, bP], ``home`` int32 [bP], ``load`` f32 [Sp] (one
+    shared rank per server) or f32 [Sp, bP] (a per-lane score plane — the
+    DP cost-to-go of ``nearest_copy_dp``).  Returns (target int32 [bP] —
+    garbage where no candidate —, any bool [bP]); the scalar twins are
+    ``repro.engine.routing.pick_holder_host`` / ``pick_holder_scored``.
     """
     any_c = cand.any(axis=0)
-    lv = jnp.where(cand, load[:, None], jnp.inf)
+    lv = jnp.where(cand, load[:, None] if load.ndim == 1 else load, jnp.inf)
     m = jnp.min(lv, axis=0)
     best = cand & (lv <= m[None, :])
     home_oh = iota_s == jnp.maximum(home, 0)[None, :]
@@ -162,4 +164,101 @@ def routed_walk_pallas(
         ],
         interpret=interpret,
     )(home_t, masks_t, lengths, start, load)
+    return srv.T[:P], loc.T[:P].astype(bool)
+
+
+def _make_scored_kernel(L: int, W: int):
+    """Score-parameterized walk: the ``nearest_copy_dp`` kernel twin.
+
+    Identical to the routed kernel except the remote-hop pick ranks
+    holders by a per-(position, server, path) score plane (the suffix-DP
+    cost-to-go, precomputed on device) instead of a shared load vector.
+    """
+    Sp = W * 32
+
+    def kernel(home_ref, mask_ref, len_ref, start_ref, score_ref,
+               srv_ref, loc_ref):
+        home = home_ref[...]      # [L, bP]
+        lens = len_ref[...]       # [bP]
+        start = start_ref[...]    # [bP]
+        iota_s = jnp.arange(Sp, dtype=jnp.int32)[:, None]
+        iota_l = jnp.arange(L, dtype=jnp.int32)
+
+        valid0 = lens > 0
+        server0 = jnp.where(valid0, start, 0).astype(jnp.int32)
+        srv_acc = jnp.broadcast_to(server0[None, :], (L, start.shape[0]))
+        loc_acc = jnp.zeros((L, start.shape[0]), jnp.bool_)
+        loc_acc = jnp.where((iota_l == 0)[:, None], valid0[None, :], loc_acc)
+
+        def body(i, carry):
+            server, srv_acc, loc_acc = carry
+            valid = i < lens
+            bits = _unpack(mask_ref[i])           # [Sp, bP]
+            srv_oh = iota_s == jnp.maximum(server, 0)[None, :]
+            local = (bits & srv_oh).any(axis=0) & (server >= 0)
+            tgt, any_c = _pick(bits, home[i], score_ref[i], iota_s)
+            tgt = jnp.where(any_c, tgt, -1)
+            nxt = jnp.where(local, server, tgt).astype(jnp.int32)
+            nxt = jnp.where(valid, nxt, server)
+            row = (iota_l == i)[:, None]
+            srv_acc = jnp.where(row, nxt[None, :], srv_acc)
+            loc_acc = jnp.where(row, (local & valid)[None, :], loc_acc)
+            return nxt, srv_acc, loc_acc
+
+        _, srv_acc, loc_acc = jax.lax.fori_loop(
+            1, L, body, (server0, srv_acc, loc_acc)
+        )
+        srv_ref[...] = srv_acc
+        loc_ref[...] = loc_acc.astype(jnp.int32)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def scored_walk_pallas(
+    home: jnp.ndarray,     # int32 [P, L]  per-position target (-1 pad)
+    masks: jnp.ndarray,    # uint32 [P, L, W]  packed replica words
+    lengths: jnp.ndarray,  # int32 [P]
+    start: jnp.ndarray,    # int32 [P]  start server per path
+    scores: jnp.ndarray,   # float32 [P, L, W*32]  per-position hop scores
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(servers int32 [P, L], local bool [P, L]); scored-pick walk."""
+    P, L = home.shape
+    W = masks.shape[2]
+    pad = (-P) % block
+    if pad:
+        home = jnp.pad(home, ((0, pad), (0, 0)), constant_values=-1)
+        masks = jnp.pad(masks, ((0, pad), (0, 0), (0, 0)))
+        lengths = jnp.pad(lengths, (0, pad))
+        start = jnp.pad(start, (0, pad))
+        scores = jnp.pad(scores, ((0, pad), (0, 0), (0, 0)))
+    Pp = P + pad
+    home_t = home.T                              # [L, Pp]
+    masks_t = jnp.transpose(masks, (1, 2, 0))    # [L, W, Pp]
+    scores_t = jnp.transpose(scores, (1, 2, 0))  # [L, Sp, Pp]
+    Sp = W * 32
+
+    grid = (Pp // block,)
+    srv, loc = pl.pallas_call(
+        _make_scored_kernel(L, W),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((L, block), lambda p: (0, p)),
+            pl.BlockSpec((L, W, block), lambda p: (0, 0, p)),
+            pl.BlockSpec((block,), lambda p: (p,)),
+            pl.BlockSpec((block,), lambda p: (p,)),
+            pl.BlockSpec((L, Sp, block), lambda p: (0, 0, p)),
+        ],
+        out_specs=[
+            pl.BlockSpec((L, block), lambda p: (0, p)),
+            pl.BlockSpec((L, block), lambda p: (0, p)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L, Pp), jnp.int32),
+            jax.ShapeDtypeStruct((L, Pp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(home_t, masks_t, lengths, start, scores_t)
     return srv.T[:P], loc.T[:P].astype(bool)

@@ -72,10 +72,11 @@ class ControllerConfig:
     demote_after: int = 1                   # consecutive cold checks before
     #                                         a replica may be evicted
     tenants: tuple[TenantSpec, ...] = ()    # known tenants (budgets + SLOs)
-    # routing policy h is scored under for triggers / window re-checks:
+    # routing policy h is scored under for triggers / window re-checks
+    # AND the policy repairs are priced under (replicate_delta(policy=)):
     # "home_first" (historical) or "nearest_copy" (the paper-faithful
     # any-co-located-replica reading — tighter, so fewer false triggers
-    # when the serving path routes hops replica-aware)
+    # and no bytes bought for paths the routed walk already serves)
     score_policy: str = "home_first"
 
     def __post_init__(self):
@@ -518,6 +519,11 @@ class AdaptiveController:
             bad = PathSet.from_lists([])
             bad_slo = SLOSpec.uniform(0, 0)
 
+        # repair under the SAME policy the violations were scored with:
+        # a nearest_copy-scored trigger is repaired by the policy-aware
+        # delta pass, so the controller never buys home-first bytes the
+        # serving walk will not use (score_policy="home_first" keeps the
+        # historical pricing, bit-identical)
         stats, (add_obj, add_srv) = replicate_delta(
             bad,
             self.engine,
@@ -526,6 +532,7 @@ class AdaptiveController:
             capacity=self.config.capacity,
             epsilon=self.config.epsilon,
             track_rm=True,
+            policy=self.config.score_policy,
         )
         # the engine already flipped the shared host mask; this records the
         # delta through the cluster's own hook (idempotent monotone flips)

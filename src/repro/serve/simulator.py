@@ -23,8 +23,9 @@ server, not from the RPC constants.  This module adds the time dimension:
   ``home_first`` (Eqn 1 verbatim), ``nearest_copy`` (holder that keeps
   the walk local longest), or ``queue_aware`` (least-loaded holder,
   seeded from the cluster's live queue depths and refreshed mid-run
-  every ``reroute_every`` arrivals so hop targets react to the queues
-  the traffic itself builds up);
+  every ``reroute_every`` arrivals — or, with ``hop_feedback=True``,
+  re-picked per remote hop at dispatch time — so hop targets react to
+  the queues the traffic itself builds up);
 * **per-server FIFO queues** — each server serves at most ``concurrency``
   accesses at once (default 32, two hardware threads per vCPU on the
   paper's 16-vCPU r5d.4xlarge servers); excess accesses wait in FIFO
@@ -86,6 +87,9 @@ class SimReport:
     n_clients: int = 0
     policy: str = "home_first"               # per-hop routing policy
     reroutes: int = 0                        # mid-run hop-target refreshes
+    # per-hop load feedback: remote-hop targets picked at dispatch time
+    # against the queue state the batch itself built up
+    hop_feedback: bool = False
 
     def percentile(self, q: float) -> float:
         return float(np.percentile(self.latency_us, q))
@@ -115,6 +119,8 @@ class SimReport:
 
     @property
     def achieved_qps(self) -> float:
+        if len(self.latency_us) == 0:
+            return 0.0
         if self.duration_us <= 0:
             return float("inf")
         return len(self.latency_us) / (self.duration_us / 1e6)
@@ -127,13 +133,17 @@ class SimReport:
 
     def summary(self) -> dict:
         util = self.utilization()
+        n_done = int(self.latency_us.size)
         out = {
-            "mean_us": self.mean_us,
-            "p50_us": self.p50_us,
-            "p99_us": self.p99_us,
-            "p999_us": self.p999_us,
+            # an empty run (clients=0, or a zero-query workload) has no
+            # latency distribution: stats are None, never NaN/garbage
+            "mean_us": self.mean_us if n_done else None,
+            "p50_us": self.p50_us if n_done else None,
+            "p99_us": self.p99_us if n_done else None,
+            "p999_us": self.p999_us if n_done else None,
             "offered_qps": self.offered_qps,
             "achieved_qps": self.achieved_qps,
+            "completed_queries": n_done,
             "max_utilization": float(util.max()) if util.size else 0.0,
             "mean_queue_wait_us": self.queue_wait_us,
             "failed_queries": int(self.query_failed.sum()),
@@ -142,9 +152,18 @@ class SimReport:
         }
         if self.closed_loop:
             # in closed loop the offered rate is endogenous: achieved_qps
-            # IS the saturation throughput at this client count
+            # IS the saturation throughput at this client count.  With no
+            # completed jobs (clients=0) or a degenerate zero-length run
+            # there is no throughput to report: None, not a division by
+            # zero or +inf
             out["n_clients"] = self.n_clients
-            out["saturation_qps"] = self.achieved_qps
+            out["saturation_qps"] = (
+                self.achieved_qps
+                if n_done and self.duration_us > 0
+                else None
+            )
+        if self.hop_feedback:
+            out["hop_feedback"] = True
         if self.reroutes:
             out["reroutes"] = self.reroutes
         if self.tenant_of is not None:
@@ -226,6 +245,44 @@ def _build_variant(
     return trees, dead
 
 
+def _build_dynamic_trees(pathset: PathSet):
+    """Per-query access trees with UNRESOLVED hop targets (hop feedback).
+
+    Same shared-prefix trie as :func:`_build_variant`, but a node is
+    ``[object, children]`` — the visited server and service cost are
+    resolved at *dispatch time* against the live queue state, so every
+    remote hop reacts to the congestion accumulated within the batch.
+    """
+    nq = pathset.n_queries
+    trees: list[tuple[list, list[int]]] = [([], []) for _ in range(nq)]
+    tries: list[dict] = [dict() for _ in range(nq)]
+    qids = np.asarray(pathset.query_ids)
+    lengths = np.asarray(pathset.lengths)
+    objects = np.asarray(pathset.objects)
+    for p in range(pathset.n_paths):
+        q = int(qids[p])
+        n = int(lengths[p])
+        if n == 0:
+            continue
+        nodes, roots = trees[q]
+        trie = tries[q]
+        prefix: tuple = ()
+        parent = -1
+        for x in range(n):
+            prefix = prefix + (int(objects[p, x]),)
+            idx = trie.get(prefix)
+            if idx is None:
+                idx = len(nodes)
+                nodes.append([int(objects[p, x]), []])
+                trie[prefix] = idx
+                if parent < 0:
+                    roots.append(idx)
+                else:
+                    nodes[parent][1].append(idx)
+            parent = idx
+    return trees
+
+
 def simulate(
     cluster: Cluster,
     pathset: PathSet,
@@ -238,6 +295,7 @@ def simulate(
     slo=None,
     policy=None,
     reroute_every: int | None = None,
+    hop_feedback: bool = False,
     clients: int | None = None,
     think_time_us: float = 0.0,
 ) -> SimReport:
@@ -265,12 +323,22 @@ def simulate(
     live queue state, so routing reacts to the congestion the batch
     itself builds; in-flight queries finish on their old routes.
 
+    ``hop_feedback=True`` (requires a load-aware policy and
+    ``router=None``; mutually exclusive with ``reroute_every``) goes one
+    step further: hop targets are not precomputed at all — every remote
+    access picks its server at *dispatch time* from the alive copy
+    holders ranked by the instantaneous ``busy + queued`` depth (the
+    scalar ``pick_holder_host`` oracle), so routing consumes the queue
+    depths accumulated *within* the batch, per hop, not per
+    ``reroute_every`` window.  ``SimReport.reroutes`` then counts the
+    load-ranked remote picks.
+
     ``slo`` (an :class:`repro.core.slo.SLOSpec` aligned with the pathset's
     queries) tags every job with its query's tenant, so the report carries
     per-tenant latency histograms (``summary()["per_tenant"]``) — the
     per-tenant p99s the multi-tenant controller monitors.
     """
-    from repro.engine.routing import resolve_policy
+    from repro.engine.routing import pick_holder_host, resolve_policy
 
     model = model or LatencyModel()
     rng = np.random.default_rng(seed)
@@ -279,27 +347,52 @@ def simulate(
     nq = pathset.n_queries
     hop_policy = resolve_policy(policy)
     hop_load = cluster.queue_depths() if hop_policy.uses_load else None
-    closed = clients is not None and int(clients) > 0
+    closed = clients is not None
+    if hop_feedback:
+        if router is not None:
+            raise ValueError("hop_feedback requires router=None")
+        if reroute_every is not None:
+            raise ValueError(
+                "pass either reroute_every or hop_feedback, not both"
+            )
+        if not hop_policy.uses_load:
+            raise ValueError(
+                "hop_feedback only makes sense for a load-aware policy "
+                "(queue_aware): load-blind policies pick the same targets"
+            )
     tenant_of = None
     tenant_names: tuple[str, ...] = ()
     if slo is not None:
         assert slo.n_queries == nq
         tenant_of = np.asarray(slo.tenant_of, np.int32)
         tenant_names = tuple(ts.name for ts in slo.tenants)
-    if nq == 0:
+    if nq == 0 or (closed and int(clients) <= 0):
+        # nothing to serve (or nobody to serve it): an empty report, with
+        # zero-length latency arrays — summary() reports None stats, not
+        # NaN percentiles / infinite saturation throughput
         return SimReport(
             latency_us=np.zeros(0), arrival_us=np.zeros(0),
             query_failed=np.zeros(0, bool), busy_us=np.zeros(S),
-            queue_wait_us=0.0, duration_us=0.0, offered_qps=rate_qps,
+            queue_wait_us=0.0, duration_us=0.0,
+            offered_qps=0.0 if closed else rate_qps,
             concurrency=concurrency,
             tenant_of=tenant_of, tenant_names=tenant_names,
             closed_loop=closed, n_clients=int(clients or 0),
-            policy=hop_policy.name,
+            policy=hop_policy.name, hop_feedback=hop_feedback,
         )
 
     # --- routing variants -------------------------------------------------
     coord_policy = router.policy if router is not None else "home"
-    if router is not None and coord_policy in ("replica_lb", "hedged"):
+    if hop_feedback:
+        from repro.distsys.executor import failover_home
+
+        coord_policy = "home"
+        mask_alive = cluster.scheme.mask & alive[None, :]
+        fo_home = failover_home(cluster.scheme, alive)
+        variants_trees = [_build_dynamic_trees(pathset)]
+        variants_dead = [np.zeros(nq, bool)]
+        coords = [None]
+    elif router is not None and coord_policy in ("replica_lb", "hedged"):
         roots = _query_roots(pathset)
         primary, backup = router.route_roots_hedged(roots, alive, seed=seed)
         qids = np.asarray(pathset.query_ids)
@@ -353,13 +446,16 @@ def simulate(
     wait_us = 0.0
 
     # a "job" is one access-tree node instance of one (query, variant)
-    # launch: job = (query, variant, node_idx); per-(query, variant)
-    # remaining-node counters decide completion (all accesses done =
-    # slowest root-to-leaf chain done).
+    # launch: job = (query, variant, node_idx, server, base_service_us),
+    # with (server, base) resolved at dispatch time — from the
+    # precomputed tree in the static modes, from the live queue state
+    # under hop feedback; per-(query, variant) remaining-node counters
+    # decide completion (all accesses done = slowest chain done).
     remaining: dict[tuple[int, int], int] = {}
 
     heap: list[tuple[float, int, str, object]] = []
     seq = 0
+    reroutes = 0
 
     def push(t, kind, data):
         nonlocal seq
@@ -369,20 +465,46 @@ def simulate(
     def jitter():
         return rng.lognormal(0.0, model.jitter_sigma)
 
-    def node_of(job):
-        q, v, i = job
-        return variants_trees[v][q][0][i]
+    def resolve(q, v, i, parent):
+        """(server, base_service_us) of one access.
+
+        ``parent`` is the landing server of the node's parent (-2 for a
+        root).  Static modes read the precomputed tree node; hop
+        feedback applies Eqn 1 live: local at the parent's server when a
+        copy is there, otherwise the least-loaded alive holder by the
+        instantaneous busy+queued depth (home wins ties).
+        """
+        nonlocal reroutes
+        node = variants_trees[v][q][0][i]
+        if not hop_feedback:
+            return node[0], node[1]
+        obj = node[0]
+        if parent == -2:
+            return int(fo_home[obj]), model.local_us
+        if parent >= 0 and mask_alive[obj, parent]:
+            return parent, model.local_us
+        live = np.asarray(
+            [busy[s] + len(queues[s]) for s in range(S)], np.float64
+        )
+        reroutes += 1
+        return (
+            pick_holder_host(mask_alive[obj], int(fo_home[obj]), live),
+            model.remote_us,
+        )
 
     def start_service(t, s, job):
         busy[s] += 1
-        svc = node_of(job)[1] * jitter()
+        svc = job[4] * jitter()
         busy_us[s] += svc
         push(t + svc, "done", (s, job))
 
-    def dispatch(t, job):
-        s = node_of(job)[0]
+    def dispatch(t, q, v, i, parent):
+        s, base = resolve(q, v, i, parent)
+        job = (q, v, i, s, base)
         if s < 0:
             # no alive copy anywhere: degraded completion, no queueing
+            if hop_feedback:
+                failed[q] = True
             push(t + model.remote_us, "advance", job)
             return
         if busy[s] < concurrency:
@@ -392,7 +514,6 @@ def simulate(
 
     next_q = 0
     cur_variant = 0
-    reroutes = 0
     since_reroute = 0
     think = float(think_time_us)
 
@@ -406,9 +527,10 @@ def simulate(
             next_q += 1
 
     def advance(t, job):
-        q, v, i = job
-        for child in node_of(job)[2]:
-            dispatch(t, (q, v, child))
+        q, v, i, s, _ = job
+        children = variants_trees[v][q][0][i][-1]
+        for child in children:
+            dispatch(t, q, v, child, s)
         remaining[(q, v)] -= 1
         if remaining[(q, v)] == 0 and completion[q] < 0:
             complete(q, t)
@@ -421,7 +543,7 @@ def simulate(
                 complete(q, t)
             return
         for i in roots:
-            dispatch(t, (q, v, i))
+            dispatch(t, q, v, i, -2)
 
     if closed:
         for _ in range(min(int(clients), nq)):
@@ -510,7 +632,9 @@ def simulate(
                 failed[q] = variants_dead[v][q]
             else:
                 launch(t, q, cur_variant)
-                failed[q] = variants_dead[cur_variant][q]
+                # OR, not assignment: a hop-feedback launch may already
+                # have flagged the query dead at dispatch time
+                failed[q] = failed[q] or bool(variants_dead[cur_variant][q])
         elif kind == "done":
             s, job = data
             busy[s] -= 1
@@ -548,4 +672,5 @@ def simulate(
         n_clients=int(clients or 0),
         policy=hop_policy.name,
         reroutes=reroutes,
+        hop_feedback=hop_feedback,
     )

@@ -1,0 +1,371 @@
+"""Property / metamorphic suite for the routing-policy family (PR 5).
+
+Pins the contracts the policy-aware greedy provisioning rests on:
+
+  * **reduction** — ``nearest_copy_dp(0)`` IS ``home_first`` and
+    ``nearest_copy_dp(1)`` IS ``nearest_copy``, bit-identically (servers
+    and locality), on all three backends;
+  * **dominance** — the full-suffix DP walk (``nearest_copy_dp()``,
+    depth=None: optimal replica-aware routing) pathwise-dominates every
+    executed policy, including every finite-depth receding-horizon walk
+    (finite depths only dominate in aggregate — a deeper-but-myopic pick
+    can lose pathwise, which is exactly why the greedy driver re-validates);
+  * **monotonicity** — adding any replica never increases the optimal
+    routed latency of any path (more copies = more routing options);
+  * **prune-then-reevaluate** — ``prune_scheme_replicas`` preserves
+    ``is_feasible`` under the pruning policy;
+  * **greedy parity** — the policy-aware greedy inner loop produces the
+    same scheme whichever backend evaluates the routed gate
+    (reference | jnp | pallas), ``policy="home_first"`` stays bit-identical
+    to the pre-refactor driver, and a scalar-budget ``SLOSpec`` broadcast
+    equals the int budget bit-identically through the policy-aware path.
+
+All generators are seeded numpy (deterministic in CI); when ``hypothesis``
+is installed the same properties additionally run over generated inputs.
+"""
+import numpy as np
+import pytest
+
+from repro.core.paths import PathSet
+from repro.core.replication import (
+    ReplicationScheme,
+    prune_scheme_replicas,
+)
+from repro.core.greedy import replicate_workload
+from repro.core.slo import SLOSpec
+from repro.engine import (
+    BACKENDS,
+    LatencyEngine,
+    nearest_copy_dp,
+    resolve_policy,
+)
+from repro.engine.routing import (
+    NearestCopyDP,
+    dp_suffix_scores,
+    pick_holder_scored,
+)
+
+from tests.conftest import random_workload
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional dependency
+    HAVE_HYPOTHESIS = False
+
+
+def _replicated(rng, n_obj, n_srv, density=0.25):
+    shard = rng.integers(0, n_srv, n_obj).astype(np.int32)
+    mask = np.zeros((n_obj, n_srv), bool)
+    mask[np.arange(n_obj), shard] = True
+    mask |= rng.random((n_obj, n_srv)) < density
+    return mask, shard
+
+
+# ---------------------------------------------------------------------------
+# policy resolution + scalar oracles
+# ---------------------------------------------------------------------------
+def test_resolve_dp_policy():
+    assert resolve_policy("nearest_copy_dp") == NearestCopyDP()
+    assert resolve_policy(nearest_copy_dp(3)).depth == 3
+    assert nearest_copy_dp().depth is None
+    with pytest.raises(ValueError):
+        NearestCopyDP(depth=-2)
+
+
+def test_pick_holder_scored_ordering():
+    holders = np.array([False, True, True, True, False])
+    # lowest score wins
+    assert pick_holder_scored(holders, home=2, scores=[9, 3, 9, 1, 9]) == 3
+    # home breaks score ties, then lowest id
+    assert pick_holder_scored(holders, 2, [9, 5, 5, 5, 9]) == 2
+    assert pick_holder_scored(holders, 0, [9, 5, 5, 5, 9]) == 1
+    assert pick_holder_scored(np.zeros(5, bool), 2, np.zeros(5)) == -1
+
+
+def test_dp_suffix_scores_window_semantics():
+    """E[pos, s] counts optimal hops over the next `depth` accesses only."""
+    shard = np.array([0, 1, 2], np.int32)
+    mask = np.zeros((3, 3), bool)
+    mask[np.arange(3), shard] = True
+    objs = [0, 1, 2]
+    e1 = dp_suffix_scores(objs, mask, 1)
+    # after access 0 at server 1 the next access (obj 1) is local: 0 hops
+    assert e1[0, 1] == 0 and e1[0, 0] == 1
+    efull = dp_suffix_scores(objs, mask, None)
+    # from server 0: obj1 remote (1) + obj2 remote (1)
+    assert efull[0, 0] == 2
+    # depth widening never increases a window score
+    e2 = dp_suffix_scores(objs, mask, 2)
+    assert (e1 <= e2).all()  # wider window only adds later-access costs
+
+
+# ---------------------------------------------------------------------------
+# reduction: dp(0) == home_first, dp(1) == nearest_copy (bit-identical)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_dp_reduces_to_named_policies(backend):
+    rng = np.random.default_rng(7)
+    ps, _ = random_workload(rng, n_obj=90, n_srv=8, n_paths=80, max_len=6)
+    mask, shard = _replicated(rng, 90, 8)
+    eng = LatencyEngine.from_arrays(mask, shard, backend=backend)
+    for named, depth in (("home_first", 0), ("nearest_copy", 1)):
+        srv_n, loc_n = eng.access_trace(ps, policy=named)
+        srv_d, loc_d = eng.access_trace(ps, policy=nearest_copy_dp(depth))
+        np.testing.assert_array_equal(srv_n, srv_d)
+        np.testing.assert_array_equal(loc_n, loc_d)
+        np.testing.assert_array_equal(
+            eng.path_latencies(ps, policy=named),
+            eng.path_latencies(ps, policy=nearest_copy_dp(depth)),
+        )
+
+
+# ---------------------------------------------------------------------------
+# three-way backend parity for the DP walk
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("depth", [0, 1, 2, None])
+def test_three_way_dp_parity(depth):
+    rng = np.random.default_rng(11)
+    ps, _ = random_workload(rng, n_obj=70, n_srv=9, n_paths=60, max_len=6)
+    mask, shard = _replicated(rng, 70, 9, density=0.2)
+    pol = nearest_copy_dp(depth)
+    outs, traces = {}, {}
+    for b in BACKENDS:
+        eng = LatencyEngine.from_arrays(mask, shard, backend=b)
+        outs[b] = eng.path_latencies(ps, policy=pol)
+        traces[b] = eng.access_trace(ps, policy=pol)
+    for b in ("jnp", "pallas"):
+        np.testing.assert_array_equal(outs["reference"], outs[b])
+        np.testing.assert_array_equal(traces["reference"][0], traces[b][0])
+        np.testing.assert_array_equal(traces["reference"][1], traces[b][1])
+
+
+def test_dp_single_position_paths():
+    rng = np.random.default_rng(3)
+    mask, shard = _replicated(rng, 20, 4)
+    ps = PathSet.from_lists([[0], [5], [7]])
+    for b in BACKENDS:
+        eng = LatencyEngine.from_arrays(mask, shard, backend=b)
+        h = eng.path_latencies(ps, policy=nearest_copy_dp(None))
+        assert h.tolist() == [0, 0, 0]
+
+
+# ---------------------------------------------------------------------------
+# (b) dominance: the optimal walk pathwise-dominates every policy
+# ---------------------------------------------------------------------------
+def _dominance_case(seed):
+    rng = np.random.default_rng(seed)
+    ps, _ = random_workload(rng, n_obj=100, n_srv=7, n_paths=120, max_len=7)
+    mask, shard = _replicated(rng, 100, 7)
+    return ps, mask, shard
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_full_depth_dominates_every_policy_pathwise(seed):
+    ps, mask, shard = _dominance_case(seed)
+    eng = LatencyEngine.from_arrays(mask, shard)
+    h_opt = eng.path_latencies(ps, policy=nearest_copy_dp(None))
+    load = np.arange(7, dtype=np.float64)
+    for pol, kw in [
+        ("home_first", {}),
+        ("nearest_copy", {}),
+        ("queue_aware", {"load": load}),
+        (nearest_copy_dp(2), {}),
+        (nearest_copy_dp(3), {}),
+    ]:
+        h = eng.path_latencies(ps, policy=pol, **kw)
+        assert (h_opt <= h).all(), f"optimal walk lost to {pol} pathwise"
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_deeper_lookahead_dominates_in_aggregate(seed):
+    """Finite depths are receding-horizon: no pathwise guarantee (that is
+    the optimal walk's privilege), but on workload totals deeper
+    lookahead must not lose on these seeded instances."""
+    ps, mask, shard = _dominance_case(seed)
+    eng = LatencyEngine.from_arrays(mask, shard)
+    totals = [
+        int(eng.path_latencies(ps, policy=nearest_copy_dp(k)).sum())
+        for k in (0, 1, 2)
+    ]
+    totals.append(
+        int(eng.path_latencies(ps, policy=nearest_copy_dp(None)).sum())
+    )
+    assert totals[1] <= totals[0]
+    assert totals[3] <= min(totals), totals
+
+
+# ---------------------------------------------------------------------------
+# (a) monotonicity: replicas never hurt the optimal routed latency
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_optimal_walk_monotone_under_additions(seed):
+    rng = np.random.default_rng(seed)
+    ps, _ = random_workload(rng, n_obj=80, n_srv=6, n_paths=80, max_len=6)
+    mask, shard = _replicated(rng, 80, 6, density=0.1)
+    eng = LatencyEngine.from_arrays(mask.copy(), shard)
+    h = eng.path_latencies(ps, policy=nearest_copy_dp(None))
+    for _ in range(6):
+        v = rng.integers(0, 80, 15)
+        s = rng.integers(0, 6, 15)
+        eng.add_replicas(v, s)
+        h_new = eng.path_latencies(ps, policy=nearest_copy_dp(None))
+        assert (h_new <= h).all(), "a replica addition increased optimal h"
+        h = h_new
+
+
+def test_greedy_walks_not_monotone_documentation():
+    """The *executed* home-first walk is NOT monotone under arbitrary
+    additions (the constructed counterexample) — the reason the greedy
+    driver re-validates routed feasibility instead of assuming it."""
+    shard = np.array([0, 1, 2, 1], np.int32)
+    mask = np.zeros((4, 3), bool)
+    mask[np.arange(4), shard] = True
+    mask[2, 1] = True  # replica of c at server 1
+    ps = PathSet.from_lists([[0, 1, 2, 3]])
+    eng = LatencyEngine.from_arrays(mask.copy(), shard)
+    before = int(eng.path_latencies(ps)[0])
+    eng.add_replicas([1], [0])  # replica of b at the root's server
+    after = int(eng.path_latencies(ps)[0])
+    assert after > before  # the addition re-routed the walk for the worse
+    # ... while the optimal walk is monotone on the same instance
+    eng2 = LatencyEngine.from_arrays(mask.copy(), shard)
+    b0 = int(eng2.path_latencies(ps, policy=nearest_copy_dp(None))[0])
+    eng2.add_replicas([1], [0])
+    b1 = int(eng2.path_latencies(ps, policy=nearest_copy_dp(None))[0])
+    assert b1 <= b0
+
+
+# ---------------------------------------------------------------------------
+# (c) prune-then-reevaluate preserves feasibility under the pruning policy
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "policy", ["nearest_copy", NearestCopyDP(depth=None)]
+)
+def test_prune_preserves_feasibility(policy):
+    rng = np.random.default_rng(5)
+    ps, _ = random_workload(rng, n_obj=60, n_srv=5, n_paths=70, max_len=6)
+    mask, shard = _replicated(rng, 60, 5, density=0.4)
+    scheme = ReplicationScheme(mask.copy(), shard)
+    eng = LatencyEngine(scheme)
+    t = int(eng.path_latencies(ps, policy=policy).max())
+    n, saved = prune_scheme_replicas(scheme, ps, t, policy=policy)
+    assert n > 0 and saved > 0
+    assert LatencyEngine(scheme).is_feasible(ps, t, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# policy-aware greedy: parity, bit-identity, and budget broadcast
+# ---------------------------------------------------------------------------
+def _greedy_case(seed=0, n_paths=90):
+    rng = np.random.default_rng(seed)
+    paths = [
+        rng.integers(0, 80, rng.integers(1, 7)).tolist()
+        for _ in range(n_paths)
+    ]
+    shard = rng.integers(0, 5, 80).astype(np.int32)
+    return PathSet.from_lists(paths), shard
+
+
+def test_policy_home_first_bit_identical():
+    ps, shard = _greedy_case()
+    s0, _ = replicate_workload(ps, shard, 5, t=1)
+    s1, _ = replicate_workload(ps, shard, 5, t=1, policy="home_first")
+    np.testing.assert_array_equal(s0.mask, s1.mask)
+
+
+@pytest.mark.parametrize("policy", ["nearest_copy", "nearest_copy_dp"])
+def test_policy_greedy_three_way_backend_parity(policy):
+    """Acceptance: reference | jnp | pallas agree on the policy-aware
+    greedy inner loop (identical gate values => identical schemes)."""
+    ps, shard = _greedy_case(seed=1, n_paths=60)
+    masks = {}
+    stats = {}
+    for b in BACKENDS:
+        scheme, st = replicate_workload(
+            ps, shard, 5, t=1, policy=policy, policy_backend=b
+        )
+        masks[b] = scheme.mask
+        stats[b] = st
+    for b in ("jnp", "pallas"):
+        np.testing.assert_array_equal(masks["reference"], masks[b])
+        assert stats["reference"].routed_skips == stats[b].routed_skips
+    # and the result is feasible under the provisioning policy
+    eng = LatencyEngine.from_arrays(masks["jnp"], shard)
+    assert eng.is_feasible(ps, 1, policy=policy)
+
+
+def test_policy_greedy_feasible_and_never_more_replicas():
+    ps, shard = _greedy_case(seed=2, n_paths=120)
+    s_hf, _ = replicate_workload(ps, shard, 5, t=1)
+    s_pa, st = replicate_workload(ps, shard, 5, t=1, policy="nearest_copy")
+    assert s_pa.replica_count() <= s_hf.replica_count()
+    assert st.routed_skips + st.pruned_replicas > 0
+    # the driver reports residual routed infeasibility honestly; here the
+    # revalidation rounds repaired everything, consistent with is_feasible
+    assert st.routed_violations == 0
+    assert LatencyEngine(s_pa).is_feasible(ps, 1, policy="nearest_copy")
+
+
+def test_policy_greedy_scalar_slospec_bit_identical():
+    """(d) scalar-budget SLOSpec broadcast == int budget, bit-identically,
+    through the policy-aware greedy path."""
+    ps, shard = _greedy_case(seed=3)
+    s_int, st_int = replicate_workload(
+        ps, shard, 5, t=2, policy="nearest_copy"
+    )
+    s_slo, st_slo = replicate_workload(
+        ps, shard, 5, t=SLOSpec.uniform(2, ps.n_queries),
+        policy="nearest_copy",
+    )
+    np.testing.assert_array_equal(s_int.mask, s_slo.mask)
+    assert st_int.routed_skips == st_slo.routed_skips
+    assert st_int.pruned_replicas == st_slo.pruned_replicas
+
+
+# ---------------------------------------------------------------------------
+# hypothesis wrappers (optional): the same theorems over generated inputs
+# ---------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def replicated_workloads(draw):
+        n_obj = draw(st.integers(5, 40))
+        n_srv = draw(st.integers(2, 6))
+        n_paths = draw(st.integers(1, 20))
+        seed = draw(st.integers(0, 2**31 - 1))
+        rng = np.random.default_rng(seed)
+        paths = [
+            rng.integers(0, n_obj, rng.integers(1, 6)).tolist()
+            for _ in range(n_paths)
+        ]
+        mask, shard = _replicated(rng, n_obj, n_srv, density=0.3)
+        return PathSet.from_lists(paths), mask, shard, rng
+
+    @settings(max_examples=25, deadline=None)
+    @given(replicated_workloads())
+    def test_hyp_optimal_dominates_and_monotone(wl):
+        ps, mask, shard, rng = wl
+        eng = LatencyEngine.from_arrays(mask.copy(), shard)
+        h_opt = eng.path_latencies(ps, policy=nearest_copy_dp(None))
+        for pol in ("home_first", "nearest_copy"):
+            assert (h_opt <= eng.path_latencies(ps, policy=pol)).all()
+        v = rng.integers(0, mask.shape[0], 10)
+        s = rng.integers(0, mask.shape[1], 10)
+        eng.add_replicas(v, s)
+        h2 = eng.path_latencies(ps, policy=nearest_copy_dp(None))
+        assert (h2 <= h_opt).all()
+
+    @settings(max_examples=15, deadline=None)
+    @given(replicated_workloads())
+    def test_hyp_prune_preserves_feasibility(wl):
+        ps, mask, shard, _ = wl
+        scheme = ReplicationScheme(mask.copy(), shard)
+        eng = LatencyEngine(scheme)
+        h = eng.path_latencies(ps, policy="nearest_copy")
+        t = int(h.max()) if len(h) else 0
+        prune_scheme_replicas(scheme, ps, t, policy="nearest_copy")
+        assert LatencyEngine(scheme).is_feasible(
+            ps, t, policy="nearest_copy"
+        )

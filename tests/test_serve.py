@@ -387,3 +387,123 @@ def test_closed_loop_think_time_throttles(rng):
     assert slow.achieved_qps < 0.5 * fast.achieved_qps
     # thinking clients leave the queues emptier: lower tail
     assert slow.p99_us <= fast.p99_us
+
+
+# ---------------------------------------------------------------------------
+# reroute_every x closed loop, hop feedback, and SimReport edge cases (PR 5)
+# ---------------------------------------------------------------------------
+def test_reroute_closed_loop_counts_exactly_and_orphans_nothing(rng):
+    """Mid-run re-picks with a closed-loop client pool.
+
+    Every query arrives exactly once (after its client's think time), so
+    with ``reroute_every=K`` the rebuild fires exactly ``nq // K`` times;
+    think-time jobs whose arrive events were scheduled before a rebuild
+    must still find their (rebuilt) trees — nothing is orphaned and every
+    query completes.
+    """
+    ps, scheme = _closed_loop_setup(rng)
+    nq = ps.n_queries
+    for k in (7, 64):
+        rep = simulate(
+            Cluster(scheme.copy()), ps, clients=6, think_time_us=50.0,
+            seed=3, concurrency=4, policy="queue_aware", reroute_every=k,
+        )
+        assert rep.reroutes == nq // k
+        assert len(rep.latency_us) == nq          # nothing orphaned
+        assert (rep.latency_us > 0).all()
+        assert rep.closed_loop and rep.policy == "queue_aware"
+
+
+def test_saturation_qps_none_when_no_jobs(rng):
+    """clients=0 / zero-query runs must report None, not 1/0 garbage."""
+    ps, scheme = _closed_loop_setup(rng)
+    rep = simulate(Cluster(scheme.copy()), ps, clients=0)
+    s = rep.summary()
+    assert s["saturation_qps"] is None
+    assert s["p99_us"] is None and s["mean_us"] is None
+    assert s["completed_queries"] == 0
+    assert rep.achieved_qps == 0.0
+
+    rep2 = simulate(
+        Cluster(scheme.copy()), PathSet.from_lists([]), clients=4
+    )
+    assert rep2.summary()["saturation_qps"] is None
+    # open-loop zero-query run keeps reporting its offered rate
+    rep3 = simulate(Cluster(scheme.copy()), PathSet.from_lists([]))
+    assert rep3.summary()["saturation_qps"] is None if rep3.closed_loop else True
+    assert rep3.summary()["p99_us"] is None
+
+
+def test_hop_feedback_contract(rng):
+    """Per-hop load feedback: live picks, validation, and completion."""
+    ps, shard = random_workload(
+        rng, n_obj=150, n_srv=5, n_paths=250, n_queries=120
+    )
+    from repro.core import ReplicationScheme
+
+    mask = np.zeros((150, 5), bool)
+    mask[np.arange(150), shard] = True
+    mask |= rng.random((150, 5)) < 0.3
+    scheme = ReplicationScheme(mask, shard)
+
+    rep = simulate(
+        Cluster(scheme.copy()), ps, rate_qps=3e4, seed=2,
+        policy="queue_aware", hop_feedback=True,
+    )
+    assert rep.hop_feedback
+    assert rep.reroutes > 0                      # load-ranked remote picks
+    assert len(rep.latency_us) == ps.n_queries
+    assert (rep.latency_us > 0).all()
+    assert rep.summary()["hop_feedback"] is True
+
+    with pytest.raises(ValueError):
+        simulate(Cluster(scheme.copy()), ps, policy="queue_aware",
+                 hop_feedback=True, reroute_every=4)
+    with pytest.raises(ValueError):
+        simulate(Cluster(scheme.copy()), ps, policy="nearest_copy",
+                 hop_feedback=True)
+    with pytest.raises(ValueError):
+        simulate(Cluster(scheme.copy()), ps, policy="queue_aware",
+                 hop_feedback=True,
+                 router=Router(scheme, "replica_lb"))
+
+
+def test_hop_feedback_closed_loop_serves_all(rng):
+    ps, scheme = _closed_loop_setup(rng)
+    rep = simulate(
+        Cluster(scheme.copy()), ps, clients=6, think_time_us=25.0, seed=4,
+        concurrency=4, policy="queue_aware", hop_feedback=True,
+    )
+    assert len(rep.latency_us) == ps.n_queries
+    assert rep.summary()["saturation_qps"] is not None
+
+
+def test_controller_repairs_under_score_policy():
+    """score_policy threads into replicate_delta: the repair prices its
+    candidates under the same routed walk the trigger scored, and the
+    post-repair windows are feasible under that policy."""
+    phases = synthetic_phases(n_phases=2, queries=150, seed=5)
+    ps0 = phases[0].pathset
+    n_obj, n_srv, t = 300, 5, 1
+    shard = (np.arange(n_obj) % n_srv).astype(np.int32)
+    scheme, _ = replicate_workload(ps0, shard, n_srv, t=t)
+    cluster = Cluster(scheme)
+    ctl = AdaptiveController(
+        cluster,
+        ControllerConfig(t=t, window=600, min_queries=32,
+                         score_policy="nearest_copy"),
+    )
+    report = None
+    drifted = phases[1].pathset
+    for lo in range(0, drifted.n_queries, 50):
+        batch = drifted.select_queries(lo, min(lo + 50, drifted.n_queries))
+        r = ctl.observe(batch)
+        report = r or report
+    assert report is not None, "drifted phase should have triggered"
+    assert report.feasible_after
+    eng = LatencyEngine(cluster.scheme)
+    # every windowed entry is feasible under the scoring policy
+    for w in ctl._tenants.values():
+        for e in w.entries:
+            lats = eng.path_latencies(e.pathset, policy="nearest_copy")
+            assert (lats <= e.path_budgets).all()
