@@ -17,6 +17,9 @@
   provisioning_policies — policy-aware greedy vs home-first(+prune):
                           shipped/resident replication bytes at equal
                           nearest_copy feasibility over drift sequences
+  provisioning_scale    — fused UPDATE megakernel vs separate dispatch
+                          (bit-identical, >= 5x) + servers x paths scale
+                          grid with streamed ingestion
 
 Usage: PYTHONPATH=src python -m benchmarks.run [module ...]
 Prints ``bench,metric,tags,value`` CSV.
@@ -28,7 +31,8 @@ import time
 MODULES = ["fig2_traversals", "fig6_latency_tradeoff", "fig7_sharding",
            "table4_runtime", "reshard_cost", "beyond_paper",
            "engine_backends", "perf_iterate", "serve_tail",
-           "tenant_frontier", "routing_policies", "provisioning_policies"]
+           "tenant_frontier", "routing_policies", "provisioning_policies",
+           "provisioning_scale"]
 
 # zero-arg entry point per module when it isn't ``run`` (perf_iterate's
 # ``run`` is the arch-cell driver; its benchmark entry is ``run_engine``)

@@ -33,7 +33,12 @@ from repro.core.replication import (
     subpath_structure,
 )
 from repro.core.slo import SLOSpec, TenantSpec
-from repro.core.greedy import GreedyStats, replicate_delta, replicate_workload
+from repro.core.greedy import (
+    GreedyStats,
+    replicate_delta,
+    replicate_stream,
+    replicate_workload,
+)
 from repro.core.reference import (
     path_latencies_reference,
     replicate_workload_exact,
@@ -76,6 +81,7 @@ __all__ = [
     "subpath_structure",
     "GreedyStats",
     "replicate_delta",
+    "replicate_stream",
     "replicate_workload",
     "replicate_workload_exact",
     "path_latencies_reference",

@@ -52,12 +52,7 @@ from repro.engine.packed import scatter_or_pairs, test_bits
 _INF = jnp.float32(1e30)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("check_capacity", "routed_gate"),
-    donate_argnums=(0,),
-)
-def _update_batch(
+def _update_batch_core(
     words: jnp.ndarray,      # uint32 [(n+1), W] — packed scheme, sacrificial row
     objects: jnp.ndarray,    # int32 [B, L]
     lengths: jnp.ndarray,    # int32 [B]
@@ -197,6 +192,110 @@ def _update_batch(
     return words, applied_cost, no_solution, chosen, first_obj, srv, new_load, skipped
 
 
+# Back-compat separate-dispatch entry point: the PR-5 pipeline (gate as its
+# own host-driven dispatch per batch, stats read back per batch).  The fused
+# driver path below replaces it; kept as the benchmark baseline + parity
+# anchor.
+_update_batch = functools.partial(
+    jax.jit,
+    static_argnames=("check_capacity", "routed_gate"),
+    donate_argnums=(0,),
+)(_update_batch_core)
+
+
+def _first_obj_of_subpaths(objects, lengths, shard, Hp1):
+    """[B, Hp1] first object of each subpath (resharding-map representative);
+    same ops as the core (garbage where the subpath is absent)."""
+    B, L = objects.shape
+    _, seg, _ = subpath_structure(objects, lengths, shard)
+    valid = seg >= 0
+    seg_cl = jnp.clip(seg, 0, Hp1 - 1)
+    b_idx = jnp.arange(B)[:, None].repeat(L, 1)
+    big = jnp.int32(2**30)
+    first_pos = (
+        jnp.full((B, Hp1), big, jnp.int32)
+        .at[b_idx, seg_cl]
+        .min(jnp.where(valid, jnp.arange(L)[None, :], big))
+    )
+    return jnp.take_along_axis(objects, jnp.clip(first_pos, 0, L - 1), axis=1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("check_capacity", "pol", "use_pallas"),
+    donate_argnums=(0, 1),
+)
+def _fused_update_batch(
+    words: jnp.ndarray,      # uint32 [(n+1), W] — donated packed snapshot
+    acc: jnp.ndarray,        # float32 [3] — donated [cost, failed, skipped] sums
+    objects: jnp.ndarray,    # int32 [B, L]
+    lengths: jnp.ndarray,    # int32 [B]
+    shard: jnp.ndarray,      # int32 [n]
+    f: jnp.ndarray,          # float32 [n]
+    tables: jnp.ndarray,     # bool [H+1, C, H+1]
+    counts: jnp.ndarray,     # int32 [H+1]
+    t: jnp.ndarray,          # int32 [B]
+    rank: jnp.ndarray,       # float32 [W*32] gate holder-rank (queue load)
+    load: jnp.ndarray,       # float32 [S]
+    capacity: jnp.ndarray,   # float32 [S]
+    epsilon: jnp.ndarray,    # float32 scalar
+    check_capacity: bool,
+    pol,                     # resolved non-home-first policy or None (static)
+    use_pallas: bool,
+):
+    """One *fused* UPDATE round: gate + candidate scoring + bit-test +
+    scatter-OR in a single dispatch, batch statistics reduced on device
+    into ``acc`` (read back once per budget class, not once per batch).
+
+    The routed gate h(p, r, rho; policy) is computed *inside* this jit via
+    ``backends.gate_counts`` against the very words snapshot the
+    candidates are priced on — no host round trip between gate and UPDATE.
+    With ``use_pallas`` the whole round runs as the
+    ``kernels.provision_update`` megakernel (capacity checking falls back
+    to the jnp core: the marginal-load einsum needs the full [B, C, S]
+    plane the lane kernel deliberately never materializes).
+
+    Pad rows (length 0, t 0) are inert in every statistic — h = 0 means
+    the empty window costs 0 and C(0, t)'s first candidate accepts — so
+    ``acc`` sums the whole padded batch without slicing.
+    """
+    from repro.engine.backends import gate_counts  # lazy: no cycle at import
+
+    if use_pallas and not check_capacity:
+        from repro.kernels.provision_update import fused_update_pallas
+
+        words, costs, failed, chosen, srv, skipped = fused_update_pallas(
+            words, objects, lengths, shard, f, tables, counts, t, rank,
+            pol=pol,
+        )
+        first_obj = _first_obj_of_subpaths(
+            objects, lengths, shard, tables.shape[2]
+        )
+        new_load = load
+    else:
+        if pol is None:
+            h_routed = jnp.zeros_like(t)
+        else:
+            h_routed = gate_counts(
+                objects, lengths, words, shard, pol, rank,
+                backend="pallas" if use_pallas else "jnp",
+            )
+        (
+            words, costs, failed, chosen, first_obj, srv, new_load, skipped
+        ) = _update_batch_core(
+            words, objects, lengths, shard, f, tables, counts, t, h_routed,
+            load, capacity, epsilon, check_capacity, pol is not None,
+        )
+    acc = acc + jnp.stack(
+        [
+            jnp.sum(costs),
+            jnp.sum(failed.astype(jnp.float32)),
+            jnp.sum(skipped.astype(jnp.float32)),
+        ]
+    )
+    return words, acc, new_load, chosen, first_obj, srv
+
+
 @dataclasses.dataclass
 class GreedyStats:
     total_cost: float = 0.0
@@ -217,6 +316,10 @@ class GreedyStats:
     # not repair) — 0 means the returned scheme is routed-feasible for
     # every path the driver processed
     routed_violations: int = 0
+    # streamed ingestion (replicate_stream): largest number of paths ever
+    # host-resident at once — the residency contract the provisioning-scale
+    # benchmark asserts stays below the total path count
+    peak_resident_paths: int = 0
 
 
 def _run_update_batches(
@@ -238,6 +341,11 @@ def _run_update_batches(
     track_rm: bool,
     collect_additions: bool = False,
     routed_fn=None,
+    fused: bool = False,
+    pol=None,
+    rank=None,
+    use_pallas: bool = False,
+    put=None,
 ):
     """The batched UPDATE loop over vectorizable paths (shared by the
     from-scratch driver and the incremental delta driver).
@@ -246,11 +354,20 @@ def _run_update_batches(
     ``vec_objects``); the candidate ``tables`` must have been enumerated
     for these budgets (one budget class per call — see the drivers).
 
-    ``routed_fn`` (policy-aware greedy) maps a host (objects, lengths)
-    batch to its routed path latencies against the *current* packed
-    snapshot; paths within budget under the routed walk are gated out of
-    the UPDATE (they buy nothing), re-checked per batch so mid-class
-    additions keep shrinking the bill.
+    ``routed_fn`` (policy-aware greedy, separate-dispatch path) maps a
+    host (objects, lengths) batch to its routed path latencies against
+    the *current* packed snapshot; paths within budget under the routed
+    walk are gated out of the UPDATE (they buy nothing), re-checked per
+    batch so mid-class additions keep shrinking the bill.
+
+    ``fused`` replaces the per-batch (host gate dispatch -> UPDATE
+    dispatch -> three blocking stat readbacks) round trip with one
+    ``_fused_update_batch`` step per batch: the gate runs inside the same
+    jit (``pol`` + ``rank``), stats accumulate in a device vector read
+    once at the end, and ``use_pallas`` lowers the round to the
+    ``kernels.provision_update`` megakernel.  ``put`` overrides the
+    host->device upload (the sharded driver installs a mesh-aware put so
+    batches land path-sharded across devices).
 
     Mutates ``packed`` (donated words) and ``stats``; returns the final
     device load and, when ``collect_additions``, the applied (object,
@@ -259,40 +376,68 @@ def _run_update_batches(
     add_obj: list[np.ndarray] = []
     add_srv: list[np.ndarray] = []
     nb = len(vec_objects)
+    put = to_device if put is None else put
+    if fused:
+        acc = jnp.zeros((3,), jnp.float32)
+        if rank is None:
+            rank = jnp.zeros((packed.words.shape[1] * 32,), jnp.float32)
     for i in range(0, nb, batch_size):
         o = vec_objects[i : i + batch_size]
         l = vec_lengths[i : i + batch_size]
         tq = t_vec[i : i + batch_size]
+        # payload = the real rows; pad rows added below cross the bus too
+        # but are booked as TRANSFER.padded_bytes, not workload data
+        pb_o, pb_l, pb_t = o.nbytes, l.nbytes, tq.nbytes
         if o.shape[0] < batch_size:  # pad batch to a fixed shape
             padn = batch_size - o.shape[0]
             o = np.concatenate([o, np.full((padn, o.shape[1]), -1, np.int32)])
             l = np.concatenate([l, np.zeros((padn,), np.int32)])
             tq = np.concatenate([tq, np.zeros((padn,), np.int32)])
-        if routed_fn is not None:
-            # routed latency against the same snapshot the batch prices on
-            h_rt = np.asarray(routed_fn(o, l), np.int32)
-        else:
-            h_rt = np.zeros_like(tq)
-        packed.words, costs, failed, chosen, first_obj, srv, load, skipped = _update_batch(
-            packed.words,
-            to_device(o),
-            to_device(l),
-            shard_j,
-            f_j,
-            tables,
-            counts,
-            to_device(tq),
-            to_device(h_rt),
-            load,
-            cap_j,
-            eps_j,
-            check_capacity,
-            routed_fn is not None,
-        )
         k = min(batch_size, nb - i)
-        stats.total_cost += float(np.asarray(costs)[:k].sum())
-        stats.failed_paths += int(np.asarray(failed)[:k].sum())
-        stats.routed_skips += int(np.asarray(skipped)[:k].sum())
+        if fused:
+            packed.words, acc, load, chosen, first_obj, srv = _fused_update_batch(
+                packed.words,
+                acc,
+                put(o, payload_bytes=pb_o),
+                put(l, payload_bytes=pb_l),
+                shard_j,
+                f_j,
+                tables,
+                counts,
+                put(tq, payload_bytes=pb_t),
+                rank,
+                load,
+                cap_j,
+                eps_j,
+                check_capacity,
+                pol,
+                use_pallas,
+            )
+        else:
+            if routed_fn is not None:
+                # routed latency against the snapshot the batch prices on
+                h_rt = np.asarray(routed_fn(o, l), np.int32)
+            else:
+                h_rt = np.zeros_like(tq)
+            packed.words, costs, failed, chosen, first_obj, srv, load, skipped = _update_batch(
+                packed.words,
+                to_device(o, payload_bytes=pb_o),
+                to_device(l, payload_bytes=pb_l),
+                shard_j,
+                f_j,
+                tables,
+                counts,
+                to_device(tq, payload_bytes=pb_t),
+                to_device(h_rt, payload_bytes=h_rt[:k].nbytes),
+                load,
+                cap_j,
+                eps_j,
+                check_capacity,
+                routed_fn is not None,
+            )
+            stats.total_cost += float(np.asarray(costs)[:k].sum())
+            stats.failed_paths += int(np.asarray(failed)[:k].sum())
+            stats.routed_skips += int(np.asarray(skipped)[:k].sum())
         if check_capacity:
             # exact load from the packed words, computed on device (the
             # incremental estimate can over-count duplicate additions
@@ -313,6 +458,13 @@ def _run_update_batches(
                     stats.rm.append(
                         (int(fo[b, kk_]), int(o[b, x]), int(sv[b, kk_]))
                     )
+    if fused:
+        # one device->host readback for the whole class (pad rows are
+        # inert in every component, see _fused_update_batch)
+        a = np.asarray(acc)
+        stats.total_cost += float(a[0])
+        stats.failed_paths += int(a[1])
+        stats.routed_skips += int(a[2])
     additions = (
         (
             np.concatenate(add_obj) if add_obj else np.zeros(0, np.int64),
@@ -398,7 +550,8 @@ def _revalidate_routed(routed_fn, ps, t_path, run_classes, stats) -> None:
     stats.routed_violations = int(len(viol))
 
 
-def _routed_gate_fn(packed: PackedScheme, pol, backend: str, block: int = 128):
+def _routed_gate_fn(packed: PackedScheme, pol, backend: str, block: int = 128,
+                    load=None):
     """Routed-latency evaluator over the evolving packed snapshot.
 
     Returns ``fn(objects, lengths) -> int32 [B]`` computing
@@ -408,6 +561,8 @@ def _routed_gate_fn(packed: PackedScheme, pol, backend: str, block: int = 128):
     implementation: ``jnp`` (vectorized scan), ``pallas`` (the
     policy-parameterized routed-walk kernel), or ``reference`` (the
     pure-python oracle against a per-call readback — the parity anchor).
+    ``load`` is the forecast per-server load profile a ``queue_aware``
+    policy prices the gate with (ignored by load-blind policies).
     """
     if pol is None:
         return None
@@ -423,6 +578,7 @@ def _routed_gate_fn(packed: PackedScheme, pol, backend: str, block: int = 128):
                 packed.unpack(),
                 np.asarray(packed.shard),
                 policy=pol,
+                load=load,
             )
 
         return fn
@@ -442,6 +598,7 @@ def _routed_gate_fn(packed: PackedScheme, pol, backend: str, block: int = 128):
                     packed.words,
                     packed.shard,
                     pol,
+                    load=load,
                     block=block,
                 )
             )
@@ -456,6 +613,7 @@ def _routed_gate_fn(packed: PackedScheme, pol, backend: str, block: int = 128):
                 packed.words,
                 packed.shard,
                 pol,
+                load=load,
             )
         )
 
@@ -489,6 +647,35 @@ def _routed_class_filter(
     seq_idx = kept[h_all[kept] > H_vec]
     tables_np, counts_np = combi.stacked_tables(max(H_vec, b, 1), b)
     return vec_idx, seq_idx, to_device(tables_np), to_device(counts_np), n_skipped
+
+
+def _fused_setup(packed: PackedScheme, pol, load, fused: bool, mesh,
+                 batch_size: int):
+    """Shared fused-driver preamble: the gate holder-rank vector, the
+    (optionally mesh-sharded) batch upload, and the batch size rounded to
+    a device-count multiple.  With a mesh the packed words are replicated
+    across devices here — the single device-resident truth every sharded
+    batch reads and the scatter-OR updates in place.
+    """
+    if not fused:
+        if mesh is not None:
+            raise ValueError("mesh= requires fused=True")
+        return None, None, batch_size
+    from repro.engine.backends import _load_vector  # lazy: no cycle at import
+
+    rank = _load_vector(
+        load if (pol is not None and pol.uses_load) else None, packed.words
+    )
+    put = None
+    if mesh is not None:
+        from repro.engine import sharding as _sharding
+
+        packed.words = _sharding.replicate(packed.words, mesh)
+        rank = _sharding.replicate(rank, mesh)
+        put = _sharding.batch_put(mesh)
+        nd = int(np.prod(list(mesh.shape.values())))
+        batch_size = -(-batch_size // nd) * nd
+    return rank, put, batch_size
 
 
 def _capacity_arrays(n_servers: int, capacity, epsilon):
@@ -526,6 +713,9 @@ def replicate_workload(
     policy=None,
     policy_backend: str = "jnp",
     policy_prune: bool = True,
+    load: np.ndarray | None = None,
+    fused: bool = False,
+    mesh=None,
 ):
     """Alg 1 over a workload with the vectorized batched UPDATE.
 
@@ -572,6 +762,25 @@ def replicate_workload(
     returned tuple gains a ``LatencyEngine`` that still holds the final
     scheme device-resident, so follow-up feasibility sweeps skip the
     re-upload entirely.
+
+    ``load`` is a forecast per-server load profile: a ``queue_aware``
+    policy prices the gate (and the exact fallbacks, the revalidation
+    rounds, and the final prune) with it instead of the static zero-load
+    default — provision-time load awareness.  Load-blind policies ignore
+    it.
+
+    ``fused`` replaces the separate-dispatch pipeline (host-driven gate
+    eval + UPDATE + per-batch stat readbacks) with one fused jit step per
+    batch — gate + candidate scoring + bit-test + scatter-OR in a single
+    dispatch, statistics reduced on device (``policy_backend="pallas"``
+    lowers the step to the ``kernels.provision_update`` megakernel) — and
+    prices the final prune sweep with the batched independent-group
+    plan.  Bit-identical to ``fused=False`` by construction (asserted
+    across the full policy x backend matrix in
+    tests/test_provision_scale.py).  ``mesh`` (a ``jax.sharding.Mesh``
+    from ``repro.engine.sharding.provisioning_mesh``) additionally shards
+    every batch across devices on the path axis while the packed words
+    stay replicated (requires ``fused=True``).
     """
     from repro.core.slo import normalize_path_budgets  # local: no cycle at import
     from repro.engine.routing import resolve_policy  # local: no cycle at import
@@ -605,11 +814,16 @@ def replicate_workload(
     f_j = to_device(f_arr)
 
     check_capacity, cap_j, eps_j = _capacity_arrays(n_servers, capacity, epsilon)
-    load = jnp.asarray(scheme.storage_per_server(f_arr).astype(np.float32))
-    routed_fn = _routed_gate_fn(packed, pol, policy_backend)
+    srv_load = jnp.asarray(scheme.storage_per_server(f_arr).astype(np.float32))
+    routed_fn = _routed_gate_fn(packed, pol, policy_backend, load=load)
+    fused = fused and policy_backend != "reference"
+    use_pallas = policy_backend == "pallas"
+    rank, put, batch_size = _fused_setup(
+        packed, pol, load, fused, mesh, batch_size
+    )
 
     def run_classes(ps_run: PathSet, t_run: np.ndarray) -> None:
-        nonlocal load
+        nonlocal srv_load
         for b, cls, vec_idx, seq_idx, h_all, tables, counts in _budget_class_plan(
             ps_run, t_run, shard_j, max_candidates,
             skip_tables=routed_fn is not None,
@@ -619,7 +833,7 @@ def replicate_workload(
                     cls, b, h_all, routed_fn, max_candidates
                 )
                 stats.routed_skips += n_skip
-            load, _ = _run_update_batches(
+            srv_load, _ = _run_update_batches(
                 packed,
                 cls.objects[vec_idx],
                 cls.lengths[vec_idx],
@@ -629,14 +843,19 @@ def replicate_workload(
                 tables,
                 counts,
                 np.full(len(vec_idx), b, np.int32),
-                load,
+                srv_load,
                 cap_j,
                 eps_j,
                 check_capacity,
                 batch_size,
                 stats,
                 track_rm,
-                routed_fn=routed_fn,
+                routed_fn=None if fused else routed_fn,
+                fused=fused,
+                pol=pol,
+                rank=rank,
+                use_pallas=use_pallas,
+                put=put,
             )
 
             # Exact fallback for enumeration-heavy paths (processed after
@@ -651,7 +870,7 @@ def replicate_workload(
                 for i in seq_idx:
                     res = update_exact(
                         scheme, cls.path(int(i)), b, f_arr, capacity,
-                        epsilon, policy=pol,
+                        epsilon, policy=pol, load=load,
                     )
                     stats.fallback_paths += 1
                     if res.feasible:
@@ -665,7 +884,7 @@ def replicate_workload(
                 if fb_obj:
                     packed.add(np.asarray(fb_obj), np.asarray(fb_srv))
                     if check_capacity:
-                        load = jnp.asarray(
+                        srv_load = jnp.asarray(
                             packed.storage_per_server(f_arr).astype(np.float32)
                         )
 
@@ -684,7 +903,7 @@ def replicate_workload(
         )
 
         stats.pruned_replicas, _ = prune_scheme_replicas(
-            scheme, pathset, t, policy=pol, f=f_arr
+            scheme, pathset, t, policy=pol, f=f_arr, load=load, fused=fused
         )
         if stats.pruned_replicas:
             # removals are not monotone: the packed words are stale
@@ -710,6 +929,10 @@ def replicate_delta(
     track_rm: bool = False,
     policy=None,
     policy_backend: str = "jnp",
+    load: np.ndarray | None = None,
+    fused: bool = False,
+    mesh=None,
+    collect_additions: bool = True,
 ):
     """Warm-start incremental UPDATE over *delta* paths (online serving).
 
@@ -737,9 +960,18 @@ def replicate_delta(
     paths later in a longer from-scratch run — with batch boundaries
     aligned, the two produce identical schemes (see tests/test_serve.py).
 
+    ``load`` / ``fused`` / ``mesh`` mirror :func:`replicate_workload`:
+    forecast load pricing for ``queue_aware`` gates, the fused
+    single-dispatch UPDATE step, and multi-device path sharding.
+
     Returns ``(stats, (objects, servers))`` — the greedy stats for the
     delta and the applied replica additions as two int64 arrays (the
     scheme delta a controller ships to the cluster / replays on restart).
+    With ``collect_additions=False`` (streamed ingestion: the caller only
+    wants the evolving scheme, not the delta) the per-batch chosen-mask
+    readbacks are skipped entirely and the returned arrays are empty; the
+    engine's host mask, when present, is refreshed from the packed words
+    once per class instead of per-pair.
     """
     from repro.core.slo import normalize_path_budgets  # local: no cycle at import
     from repro.engine.routing import resolve_policy  # local: no cycle at import
@@ -775,14 +1007,19 @@ def replicate_delta(
     shard_j = packed.shard
 
     check_capacity, cap_j, eps_j = _capacity_arrays(n_servers, capacity, epsilon)
-    load = jnp.asarray(packed.storage_per_server(f_arr).astype(np.float32))
-    routed_fn = _routed_gate_fn(packed, pol, policy_backend)
+    srv_load = jnp.asarray(packed.storage_per_server(f_arr).astype(np.float32))
+    routed_fn = _routed_gate_fn(packed, pol, policy_backend, load=load)
+    fused = fused and policy_backend != "reference"
+    use_pallas = policy_backend == "pallas"
+    rank, put, batch_size = _fused_setup(
+        packed, pol, load, fused, mesh, batch_size
+    )
 
     add_obj = np.zeros(0, np.int64)
     add_srv = np.zeros(0, np.int64)
 
     def run_classes(ps_run: PathSet, t_run: np.ndarray) -> None:
-        nonlocal load, add_obj, add_srv
+        nonlocal srv_load, add_obj, add_srv
         for b, cls, vec_idx, seq_idx, h_all, tables, counts in _budget_class_plan(
             ps_run, t_run, shard_j, max_candidates,
             skip_tables=routed_fn is not None,
@@ -792,7 +1029,7 @@ def replicate_delta(
                     cls, b, h_all, routed_fn, max_candidates
                 )
                 stats.routed_skips += n_skip
-            load, additions = _run_update_batches(
+            srv_load, additions = _run_update_batches(
                 packed,
                 cls.objects[vec_idx],
                 cls.lengths[vec_idx],
@@ -802,27 +1039,38 @@ def replicate_delta(
                 tables,
                 counts,
                 np.full(len(vec_idx), b, np.int32),
-                load,
+                srv_load,
                 cap_j,
                 eps_j,
                 check_capacity,
                 batch_size,
                 stats,
                 track_rm,
-                collect_additions=True,
-                routed_fn=routed_fn,
+                collect_additions=collect_additions,
+                routed_fn=None if fused else routed_fn,
+                fused=fused,
+                pol=pol,
+                rank=rank,
+                use_pallas=use_pallas,
+                put=put,
             )
-            cls_obj, cls_srv = additions
 
             # Mirror the vectorized additions into the host scheme FIRST:
             # the exact fallback below prices candidates against the host
             # mask, which must reflect what this class already
             # scatter-ORed into the words (and later classes' fallbacks
             # price against this class).
-            if engine.scheme is not None and len(cls_obj):
-                engine.scheme.mask[cls_obj, cls_srv] = True
-            add_obj = np.concatenate([add_obj, cls_obj])
-            add_srv = np.concatenate([add_srv, cls_srv])
+            if collect_additions:
+                cls_obj, cls_srv = additions
+                if engine.scheme is not None and len(cls_obj):
+                    engine.scheme.mask[cls_obj, cls_srv] = True
+                add_obj = np.concatenate([add_obj, cls_obj])
+                add_srv = np.concatenate([add_srv, cls_srv])
+            elif engine.scheme is not None and len(seq_idx):
+                # no per-pair readback requested: the exact fallback below
+                # prices against the host mask, so refresh it from the
+                # packed truth (one readback) right before it is consumed
+                engine.scheme.mask = packed.unpack()
 
             # Exact fallback for enumeration-heavy delta paths: run against
             # a host scheme and replay the additions into the
@@ -838,7 +1086,7 @@ def replicate_delta(
                 for i in seq_idx:
                     res = update_exact(
                         host, cls.path(int(i)), b, f_arr, capacity,
-                        epsilon, policy=pol,
+                        epsilon, policy=pol, load=load,
                     )
                     stats.fallback_paths += 1
                     if res.feasible:
@@ -851,20 +1099,26 @@ def replicate_delta(
                         stats.failed_paths += 1
                 if fb_obj:
                     packed.add(np.asarray(fb_obj), np.asarray(fb_srv))
-                    add_obj = np.concatenate(
-                        [add_obj, np.asarray(fb_obj, np.int64)]
-                    )
-                    add_srv = np.concatenate(
-                        [add_srv, np.asarray(fb_srv, np.int64)]
-                    )
+                    if collect_additions:
+                        add_obj = np.concatenate(
+                            [add_obj, np.asarray(fb_obj, np.int64)]
+                        )
+                        add_srv = np.concatenate(
+                            [add_srv, np.asarray(fb_srv, np.int64)]
+                        )
                     if check_capacity:
-                        load = jnp.asarray(
+                        srv_load = jnp.asarray(
                             packed.storage_per_server(f_arr).astype(np.float32)
                         )
 
     run_classes(ps, t_path)
     if routed_fn is not None:
         _revalidate_routed(routed_fn, ps, t_path, run_classes, stats)
+
+    if not collect_additions and engine.scheme is not None:
+        # keep the engine's host mirror consistent at return (the per-pair
+        # incremental mirror is what collect_additions=False skipped)
+        engine.scheme.mask = packed.unpack()
 
     # Dedupe (a batch can choose the same (v, s) for several paths; the
     # scatter-OR is idempotent, but the returned delta is the exact set of
@@ -876,3 +1130,82 @@ def replicate_delta(
     stats.replicas = int(len(add_obj))
     stats.runtime_s = time.perf_counter() - t0
     return stats, (add_obj, add_srv)
+
+
+def replicate_stream(
+    stream,
+    shard: np.ndarray,
+    n_servers: int,
+    t=None,
+    f: np.ndarray | None = None,
+    capacity: np.ndarray | float | None = None,
+    epsilon: float | None = None,
+    batch_size: int = 256,
+    max_candidates: int = 2048,
+    prune: bool = True,
+    policy=None,
+    policy_backend: str = "jnp",
+    load: np.ndarray | None = None,
+    fused: bool = True,
+    mesh=None,
+    return_engine: bool = False,
+):
+    """Alg 1 over a *streamed* workload — the full path set is never
+    host-resident.
+
+    ``stream`` is a :class:`~repro.engine.streaming.PathStream` (or any
+    iterable of ``PathSet`` chunks / ``(PathSet, budgets)`` tuples, which
+    is wrapped in one): the producer builds each chunk on demand and
+    drops it after the yield, so host residency peaks at one chunk
+    (``stats.peak_resident_paths`` — the contract
+    ``benchmarks/provisioning_scale.py`` asserts).  Each chunk runs the
+    warm-started incremental UPDATE (:func:`replicate_delta`) against the
+    single device-resident packed scheme; by Thm 5.3 replica additions
+    are monotone, so chunked provisioning is exactly as sound as one long
+    run with different batch boundaries (paths duplicated across chunks
+    re-enter UPDATE, find themselves already served, and buy nothing).
+
+    ``t`` is the default budget for chunks yielded without one; chunks
+    yielded as ``(PathSet, budgets)`` override it per chunk.  ``fused``
+    defaults on (this is the provisioning-scale entry point) and, with
+    ``collect_additions`` off internally, no per-batch readback ever
+    crosses the bus — per chunk the driver reads back one stat vector and
+    (only when a chunk needs the exact fallback) one scheme unpack.
+
+    Returns ``(scheme, stats)``; ``return_engine=True`` appends the
+    device-resident :class:`LatencyEngine`.
+    """
+    from repro.engine.streaming import PathStream  # lazy: no cycle at import
+
+    t0 = time.perf_counter()
+    if not isinstance(stream, PathStream):
+        stream = PathStream(stream)
+    scheme = ReplicationScheme.from_sharding(shard, n_servers)
+    engine = LatencyEngine(scheme)
+    stats = GreedyStats()
+    for ps, t_chunk in stream:
+        budgets = t if t_chunk is None else t_chunk
+        if budgets is None:
+            raise ValueError(
+                "no latency budget: pass t= or stream (PathSet, t) tuples"
+            )
+        cstats, _ = replicate_delta(
+            ps, engine, budgets, f=f, capacity=capacity, epsilon=epsilon,
+            batch_size=batch_size, max_candidates=max_candidates,
+            prune=prune, policy=policy, policy_backend=policy_backend,
+            load=load, fused=fused, mesh=mesh, collect_additions=False,
+        )
+        stats.total_cost += cstats.total_cost
+        stats.failed_paths += cstats.failed_paths
+        stats.paths_processed += cstats.paths_processed
+        stats.fallback_paths += cstats.fallback_paths
+        stats.routed_skips += cstats.routed_skips
+        stats.routed_violations += cstats.routed_violations
+    if engine.packed is not None:
+        scheme.mask = engine.packed.unpack()
+    stats.replicas = scheme.replica_count()
+    stats.peak_resident_paths = stream.stats.peak_resident_paths
+    stats.runtime_s = time.perf_counter() - t0
+    if return_engine:
+        return scheme, stats, engine
+    return scheme, stats

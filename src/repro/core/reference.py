@@ -147,6 +147,7 @@ def update_exact(
     epsilon: float | None = None,
     apply: bool = True,
     policy=None,
+    load: np.ndarray | None = None,
 ) -> UpdateResult:
     """Alg 2: one UPDATE(r, p) call.  Mutates ``scheme`` in place if feasible.
 
@@ -161,6 +162,8 @@ def update_exact(
     against the current scheme is already within ``t`` — the serving path
     can reach existing replicas the home-first closed form cannot — the
     UPDATE is a free no-op (the policy-aware greedy's skip, oracle form).
+    ``load`` is the forecast per-server load profile a ``queue_aware``
+    policy ranks holders with (ignored by load-blind policies).
     """
     shard = scheme.shard
     fv = (lambda v: 1.0) if f is None else (lambda v: float(f[v]))
@@ -180,6 +183,7 @@ def update_exact(
                     scheme.mask,
                     scheme.shard,
                     policy=pol,
+                    load=load,
                 )[0]
             )
             if h_rt <= t:
@@ -251,6 +255,7 @@ def replicate_workload_exact(
     epsilon: float | None = None,
     prune: bool = True,
     policy=None,
+    load: np.ndarray | None = None,
 ) -> tuple[ReplicationScheme, dict]:
     """Alg 1 with the exact UPDATE; returns (scheme, stats).
 
@@ -278,7 +283,7 @@ def replicate_workload_exact(
         for i in indices:
             res = update_exact(
                 scheme, ps.path(int(i)), t, f, capacity, epsilon,
-                policy=policy,
+                policy=policy, load=load,
             )
             if res.feasible:
                 total_cost += res.cost
@@ -289,7 +294,7 @@ def replicate_workload_exact(
             return []
         h_rt = routed_path_latencies_reference(
             np.asarray(ps.objects), np.asarray(ps.lengths),
-            scheme.mask, scheme.shard, policy=policy,
+            scheme.mask, scheme.shard, policy=policy, load=load,
         )
         return np.nonzero(h_rt > t)[0].tolist()
 

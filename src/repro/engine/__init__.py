@@ -19,6 +19,9 @@ analyzer, and every benchmark.
                    consumed by access_trace / path_latencies(policy=)
                    and the policy-aware greedy provisioning gate
   TRANSFER       — host<->device transfer accounting (perf benchmarks)
+  PathStream     — streamed PathSet ingestion from a host generator with
+                   peak-residency accounting (provisioning at scale);
+                   consumed by ``repro.core.greedy.replicate_stream``
 """
 from repro.engine.engine import DevicePaths, LatencyEngine, RawScheme
 from repro.engine.packed import PackedScheme, pack_bool_mask, unpack_words
@@ -32,10 +35,12 @@ from repro.engine.routing import (
     nearest_copy_dp,
     resolve_policy,
 )
-from repro.engine.streaming import TRANSFER, to_device
+from repro.engine.streaming import TRANSFER, PathStream, StreamStats, to_device
 from repro.engine.backends import BACKENDS
 
 __all__ = [
+    "PathStream",
+    "StreamStats",
     "LatencyEngine",
     "DevicePaths",
     "RawScheme",

@@ -498,6 +498,53 @@ def routed_counts(objects, lengths, words, shard, policy, load=None):
     )
 
 
+def gate_counts(objects, lengths, words, shard, pol, rank, backend="jnp",
+                block: int = 128):
+    """Traceable routed-gate latencies — callable inside an enclosing jit.
+
+    The fused greedy UPDATE (``repro.core.greedy``) and the batched prune
+    sweep compute the policy gate h(p, r, rho; policy) in the *same* jit
+    step as candidate scoring and the scatter-OR, against the same words
+    snapshot.  ``pol`` must be a resolved, non-home-first policy (a jit
+    static — frozen dataclasses hash); ``rank`` the already-padded
+    ``[W*32]`` float32 holder-rank vector (``_load_vector`` of the live
+    queue depths for ``queue_aware``, zeros otherwise — callers own that
+    normalization because this function must stay trace-transparent).
+    Dispatch mirrors :func:`routed_counts` / :func:`pallas_routed_eval`
+    bit-for-bit, so gating fused vs separate cannot diverge.
+    """
+    start = _root_home(objects, shard)
+    if backend == "pallas":
+        from repro.kernels.routed_walk import (  # lazy import
+            routed_walk_pallas,
+            scored_walk_pallas,
+        )
+
+        home, masks = pallas_prep(objects, lengths, words, shard)
+        if pol.name == "nearest_copy_dp":
+            scores = _dp_score_tables(objects, lengths, words, _dp_depth(pol))
+            _, local = scored_walk_pallas(
+                home, masks, lengths, start, scores,
+                block=block, interpret=not _on_tpu(),
+            )
+        else:
+            _, local = routed_walk_pallas(
+                home, masks, lengths, start, rank,
+                block=block, interpret=not _on_tpu(),
+                lookahead=pol.lookahead, home_first=pol.name == "home_first",
+            )
+        L = objects.shape[1]
+        valid = jnp.arange(L)[None, :] < lengths[:, None]
+        return jnp.sum((valid & ~local.astype(bool)).astype(jnp.int32), axis=1)
+    if pol.name == "nearest_copy_dp":
+        return _dp_counts_impl(
+            objects, lengths, words, shard, start, depth=_dp_depth(pol)
+        )
+    return _routed_counts_impl(
+        objects, lengths, words, shard, start, rank, lookahead=pol.lookahead
+    )
+
+
 def pallas_routed_trace(
     objects, lengths, words, shard, policy, load=None, block: int = 128,
     start=None,

@@ -1,0 +1,89 @@
+"""Multi-device layout for provisioning-scale greedy (jax.sharding).
+
+The fused UPDATE step is embarrassingly parallel over paths: every path
+in a batch prices its candidates against the same packed-words snapshot
+and the scatter-OR union of the chosen additions is order-free (Thm 5.3
+monotonicity — the same argument that justifies the lock-free batch).
+So the layout is the simplest one GSPMD supports:
+
+  * packed scheme words, shard map, f, C(h, t) tables — **replicated**
+    (``PartitionSpec()``): every device holds the full snapshot, exactly
+    like every thread of the paper's 64-thread UPDATE reads the full
+    scheme;
+  * batch arrays (objects / lengths / budgets) — **sharded on the path
+    axis** (``PartitionSpec("paths")``): each device gates + scores its
+    slice of the batch;
+  * the per-batch scatter-OR and stat sums are cross-device reductions
+    XLA inserts automatically (bitwise-OR of the replicated words'
+    per-device updates, psum of the stat vector).
+
+``shard_map`` was considered and rejected: the scatter-OR needs a
+bitwise-OR collective over uint32 words, which the manual-collective API
+does not provide — under plain ``jit`` + ``NamedSharding`` GSPMD lowers
+the same program to an all-gather of each device's chosen additions,
+which is tiny (the chosen planes, not the words).
+
+CPU note: the test/CI environment exposes one device;
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` splits the host
+into N devices (tests/test_provision_scale.py runs the sharded-equality
+check in a subprocess with that flag, and skips in-process when only one
+device is visible).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.engine.streaming import TRANSFER
+
+PATH_AXIS = "paths"
+
+
+def device_count() -> int:
+    return len(jax.devices())
+
+
+def provisioning_mesh(n_devices: int | None = None) -> Mesh:
+    """1-D device mesh over the path axis (all visible devices by default)."""
+    devs = jax.devices()
+    if n_devices is not None:
+        devs = devs[:n_devices]
+    return Mesh(np.asarray(devs), (PATH_AXIS,))
+
+
+def path_sharding(mesh: Mesh) -> NamedSharding:
+    """Leading axis split across devices (batch rows = paths)."""
+    return NamedSharding(mesh, PartitionSpec(PATH_AXIS))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    """Full copy on every device (scheme words, tables, f, shard map)."""
+    return NamedSharding(mesh, PartitionSpec())
+
+
+def replicate(x, mesh: Mesh):
+    """Place ``x`` fully replicated on the mesh (no byte accounting: the
+    words/tables are already device-resident; this is a device-to-device
+    broadcast, not host traffic)."""
+    return jax.device_put(x, replicated(mesh))
+
+
+def batch_put(mesh: Mesh):
+    """Counted host->device upload landing path-sharded on the mesh.
+
+    Drop-in for ``streaming.to_device`` in the greedy batch loop — books
+    the same TRANSFER bytes (each row goes to exactly one device, so the
+    payload crosses the bus once, same as the single-device path).
+    """
+    sh = path_sharding(mesh)
+
+    def put(x, payload_bytes: int | None = None):
+        a = np.asarray(x)
+        payload = a.nbytes if payload_bytes is None else int(payload_bytes)
+        TRANSFER.h2d_bytes += payload
+        TRANSFER.padded_bytes += a.nbytes - payload
+        TRANSFER.h2d_calls += 1
+        return jax.device_put(a, sh)
+
+    return put

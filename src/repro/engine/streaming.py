@@ -5,6 +5,11 @@ so the byte counter (``TRANSFER``) reflects real traffic; the perf
 benchmarks (``benchmarks/perf_iterate.py engine`` and
 ``benchmarks/engine_backends.py``) read it to track the packed-resident
 path's transfer advantage over the legacy per-call bool-mask uploads.
+``h2d_bytes`` counts *payload* bytes only — alignment padding a caller
+appends to hit a fixed jit shape is tracked separately in
+``padded_bytes`` (it rides the same copy, but it is not workload data, and
+folding it into the payload counter made the final partial chunk look more
+expensive than the data it carried).
 
 ``stream_chunks`` is the engine's evaluation pipeline: while chunk ``i``
 computes on device (JAX dispatch is asynchronous), chunk ``i + 1``'s
@@ -12,11 +17,17 @@ host->device copy is already enqueued — a two-deep software pipeline that
 replaces the old synchronous per-chunk ``jnp.asarray`` + ``np.asarray``
 round trip.  The final chunk is padded to the full chunk shape so every
 step hits the same jit cache entry.
+
+``PathStream`` is the provisioning-scale ingestion contract: a host
+generator of :class:`~repro.core.paths.PathSet` chunks, consumed once,
+with peak-residency accounting — the greedy driver
+(``repro.core.greedy.replicate_stream``) provisions against it without
+the full path set ever being host-resident.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence
+from typing import Callable, Iterable, Iterator, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -27,27 +38,40 @@ class TransferStats:
     h2d_bytes: int = 0
     h2d_calls: int = 0
     d2h_bytes: int = 0
+    # alignment-pad bytes appended by callers to hit a fixed jit shape;
+    # they cross the bus but carry no workload data (kept out of
+    # h2d_bytes so the perf benchmarks' byte assertions stay exact)
+    padded_bytes: int = 0
 
     def reset(self) -> None:
         self.h2d_bytes = 0
         self.h2d_calls = 0
         self.d2h_bytes = 0
+        self.padded_bytes = 0
 
     def snapshot(self) -> dict:
         return {
             "h2d_bytes": self.h2d_bytes,
             "h2d_calls": self.h2d_calls,
             "d2h_bytes": self.d2h_bytes,
+            "padded_bytes": self.padded_bytes,
         }
 
 
 TRANSFER = TransferStats()
 
 
-def to_device(x) -> jnp.ndarray:
-    """Counted host->device transfer (the only upload path in the engine)."""
+def to_device(x, payload_bytes: int | None = None) -> jnp.ndarray:
+    """Counted host->device transfer (the only upload path in the engine).
+
+    ``payload_bytes`` marks how many of the array's bytes are real data;
+    the remainder (alignment padding) is booked under
+    ``TRANSFER.padded_bytes`` instead of ``h2d_bytes``.
+    """
     a = np.asarray(x)
-    TRANSFER.h2d_bytes += a.nbytes
+    payload = a.nbytes if payload_bytes is None else int(payload_bytes)
+    TRANSFER.h2d_bytes += payload
+    TRANSFER.padded_bytes += a.nbytes - payload
     TRANSFER.h2d_calls += 1
     return jnp.asarray(a)
 
@@ -65,7 +89,8 @@ def stream_chunks(
     ``arrays`` are host arrays sharing leading dimension ``n``.  Full
     chunks have exactly ``chunk`` rows; the final partial chunk is padded
     up to a multiple of ``align`` with ``pad_values`` (one per array), so
-    a call compiles at most two shapes.  Returns the list of *device*
+    a call compiles at most two shapes.  Pad rows are accounted as
+    ``TRANSFER.padded_bytes``, not payload.  Returns the list of *device*
     outputs (callers concatenate / read back once at the end, keeping
     dispatch async).
     """
@@ -79,10 +104,11 @@ def stream_chunks(
         out = []
         for a, pv in zip(arrays, pad_values):
             piece = a[start:stop]
+            payload = piece.nbytes
             if rows < target:
                 pad = np.full((target - rows,) + a.shape[1:], pv, a.dtype)
                 piece = np.concatenate([piece, pad], axis=0)
-            out.append(to_device(piece))
+            out.append(to_device(piece, payload_bytes=payload))
         return tuple(out)
 
     starts = list(range(0, n, chunk))
@@ -95,3 +121,46 @@ def stream_chunks(
             nxt = put(starts[i + 1])  # upload overlaps the in-flight compute
         outs.append(out)
     return outs
+
+
+@dataclasses.dataclass
+class StreamStats:
+    """Residency accounting of one :class:`PathStream` consumption."""
+
+    total_paths: int = 0
+    chunks: int = 0
+    peak_resident_paths: int = 0
+
+
+class PathStream:
+    """Streamed PathSet ingestion from a host generator (consumed once).
+
+    Wraps an iterable of :class:`~repro.core.paths.PathSet` chunks — or
+    ``(PathSet, per_path_budgets)`` tuples when the latency constraint
+    varies within the stream — and records how many paths were ever
+    host-resident at once (``stats.peak_resident_paths``): the contract
+    the provisioning-scale benchmark asserts (peak < total for a genuine
+    stream).  Iteration yields normalized ``(PathSet, budgets_or_None)``
+    pairs; generators are consumed lazily, so the producer can build each
+    chunk on demand and drop it after the yield.
+    """
+
+    def __init__(self, chunks: Iterable):
+        self._chunks = chunks
+        self._consumed = False
+        self.stats = StreamStats()
+
+    def __iter__(self) -> Iterator[tuple]:
+        if self._consumed:
+            raise RuntimeError("PathStream is single-use; build a new one")
+        self._consumed = True
+        for item in self._chunks:
+            ps, t = item if isinstance(item, tuple) else (item, None)
+            if ps.n_paths == 0:
+                continue
+            self.stats.total_paths += ps.n_paths
+            self.stats.chunks += 1
+            self.stats.peak_resident_paths = max(
+                self.stats.peak_resident_paths, ps.n_paths
+            )
+            yield ps, t

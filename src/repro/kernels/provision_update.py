@@ -1,0 +1,347 @@
+"""Pallas TPU megakernel: one fused greedy-UPDATE round (Alg 2 hot loop).
+
+One ``pallas_call`` evaluates, per 128-path lane block, everything the
+separate-dispatch driver used to round-trip through four kernels:
+
+  1. the policy-routed gate walk h(p, r, rho; policy) against the packed
+     snapshot (the ``kernels.routed_walk`` body, inlined),
+  2. the server-local subpath structure under d (Def 5.1),
+  3. every C(h, t) candidate's upward-replication interval mask, bit-tested
+     against the holder words (which additions are actually *needed*),
+  4. the per-candidate marginal cost + running argmin (ties -> lowest
+     candidate index, the driver's determinism rule).
+
+The chosen additions leave the kernel as an ``[L, H+1]`` plane per path;
+the wrapper applies them with the engine's ``scatter_or_pairs`` in the
+same jit (the scatter's per-bit dynamic updates are XLA's strength and a
+lane-parallel kernel's weakness — a per-lane scatter would serialize into
+scalar stores on TPU).  Cost / infeasibility / gate-skip statistics reduce
+on device; the driver reads one tiny accumulator per budget class instead
+of three arrays per batch.
+
+Layout (TPU-native, as in ``routed_walk``): paths on the 128-wide lane
+axis; holder bits unpack to ``[W*32, bP]`` planes; all candidate logic is
+full-width vector ops over the lanes.  ``interpret=True`` on CPU.
+
+Bit-identity contract: every intermediate mirrors
+``repro.core.greedy._update_batch_core`` op-for-op (same clipping, same
+scatter-max subpath servers, same strict-argmin tie rule), and the gate
+walk reuses ``routed_walk``'s ``_pick`` — the three-backend parity matrix
+of ``tests/test_provision_scale.py`` pins fused == separate == reference
+on every routing policy.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.routed_walk import _pick, _unpack
+
+DEFAULT_BLOCK = 128
+_INF = 1e30  # plain float: a jnp scalar here would be a captured kernel constant
+
+
+def _make_kernel(
+    L: int,
+    W: int,
+    Hc: int,
+    C: int,
+    Hp1: int,
+    gate_mode: str,   # "none" | "routed" | "scored"
+    lookahead: bool,
+):
+    Sp = W * 32
+
+    def kernel(home_ref, mask_ref, len_ref, t_ref, f_ref, start_ref,
+               rank_ref, tab_ref, cnt_ref,
+               chosen_ref, srv_ref, cost_ref, nosol_ref, skip_ref):
+        home = home_ref[...]          # int32 [L, bP] (-1 at pad positions)
+        lens = len_ref[...]           # int32 [bP]
+        t = t_ref[...]                # int32 [bP]
+        fpos = f_ref[...]             # f32 [L, bP] (0 at pad positions)
+        bP = lens.shape[0]
+        iota_l = jnp.arange(L, dtype=jnp.int32)[:, None]      # [L, 1]
+        iota_s = jnp.arange(Sp, dtype=jnp.int32)[:, None]     # [Sp, 1]
+        valid = iota_l < lens[None, :]                        # [L, bP]
+
+        # ---- subpath structure under d (Def 5.1) ----
+        prev = jnp.concatenate(
+            [jnp.full((1, bP), -2, jnp.int32), home[:-1]], axis=0
+        )
+        boundary = valid & (iota_l > 0) & (home != prev)
+        seg = jnp.cumsum(boundary.astype(jnp.int32), axis=0)
+        seg = jnp.where(valid, seg, -1)
+        h = jnp.max(jnp.where(valid, seg, 0), axis=0)         # [bP]
+        h_cl = jnp.clip(h, 0, Hp1 - 1)
+        seg_cl = jnp.clip(seg, 0, Hp1 - 1)
+
+        # server of each subpath (scatter-max twin: positions of a subpath
+        # share one home; absent subpaths -> -1)
+        srv = jnp.stack(
+            [
+                jnp.max(
+                    jnp.where(valid & (seg == k), home + 1, 0), axis=0
+                ) - 1
+                for k in range(Hp1)
+            ]
+        )  # int32 [Hp1, bP]
+
+        # ---- policy-routed gate walk (the routed_walk body, inlined) ----
+        if gate_mode == "none":
+            h_routed = jnp.zeros_like(h)
+        else:
+            start = start_ref[...]
+            server0 = jnp.where(lens > 0, start, 0).astype(jnp.int32)
+            if gate_mode == "routed":
+                rank = rank_ref[...]          # f32 [Sp]
+
+            def gate_body(i, carry):
+                server, cnt = carry
+                v = i < lens
+                bits = _unpack(mask_ref[i])   # [Sp, bP]
+                srv_oh = iota_s == jnp.maximum(server, 0)[None, :]
+                local = (bits & srv_oh).any(axis=0) & (server >= 0)
+                if gate_mode == "scored":
+                    tgt, any_c = _pick(bits, home[i], rank_ref[i], iota_s)
+                    tgt = jnp.where(any_c, tgt, -1)
+                else:
+                    tgt, any_c = _pick(bits, home[i], rank, iota_s)
+                    tgt = jnp.where(any_c, tgt, -1)
+                    if lookahead:
+                        nxt_ok = (i + 1) < lens
+                        nbits = _unpack(mask_ref[jnp.minimum(i + 1, L - 1)])
+                        la = bits & nbits & nxt_ok[None, :]
+                        la_tgt, la_any = _pick(la, home[i], rank, iota_s)
+                        tgt = jnp.where(la_any, la_tgt, tgt)
+                nxt = jnp.where(local, server, tgt).astype(jnp.int32)
+                nxt = jnp.where(v, nxt, server)
+                cnt = cnt + ((~local) & v).astype(jnp.int32)
+                return nxt, cnt
+
+            _, h_routed = jax.lax.fori_loop(
+                1, L, gate_body, (server0, jnp.zeros_like(lens))
+            )
+
+        over = h > t
+        if gate_mode == "none":
+            gate_ok = over
+            skipped = jnp.zeros_like(over)
+        else:
+            gate_ok = over & (h_routed > t)
+            skipped = over & (h_routed <= t)
+
+        # ---- needed(x, k): no copy of objects[x] at srv[k] yet ----
+        masks_all = mask_ref[...]             # uint32 [L, W, bP]
+        srv_c = jnp.maximum(srv, 0)
+        w_idx = srv_c // 32                   # [Hp1, bP]
+        b_idx = (srv_c % 32).astype(jnp.uint32)
+        word = jnp.zeros((L, Hp1, bP), jnp.uint32)
+        for w in range(W):
+            word = jnp.where(
+                (w_idx == w)[None, :, :], masks_all[:, w][:, None, :], word
+            )
+        present = ((word >> b_idx[None, :, :]) & jnp.uint32(1)).astype(
+            jnp.bool_
+        )
+        needed = (~present) & (srv >= 0)[None, :, :] & valid[:, None, :]
+
+        # ---- candidate loop: running strict argmin (ties -> lowest c) ----
+        onehot_h = (
+            jnp.arange(Hc, dtype=jnp.int32)[:, None] == h_cl[None, :]
+        )  # [Hc, bP]
+        n_cand = jnp.sum(
+            jnp.where(onehot_h, cnt_ref[...][:, None], 0), axis=0
+        )  # int32 [bP]
+        tab = tab_ref[...]                    # int32 [Hc, C, Hp1]
+        k_r = jnp.arange(Hp1, dtype=jnp.int32)[None, :, None]
+
+        def cand_body(c, carry):
+            best_cost, chosen = carry
+            tab_c = jax.lax.dynamic_index_in_dim(
+                tab, c, axis=1, keepdims=False
+            )  # [Hc, Hp1]
+            sel = (
+                jnp.sum(
+                    tab_c[:, :, None] * onehot_h[:, None, :].astype(jnp.int32),
+                    axis=0,
+                )
+                > 0
+            )  # [Hp1, bP]
+            run = jnp.full((bP,), -1, jnp.int32)
+            prev_sel = []
+            for k in range(Hp1):
+                run = jnp.where(sel[k], k, run)
+                prev_sel.append(run)
+            j_of_x = jnp.zeros((L, bP), jnp.int32)
+            for k in range(Hp1):
+                j_of_x = jnp.where(seg_cl == k, prev_sel[k][None, :], j_of_x)
+            window = (
+                (k_r >= j_of_x[:, None, :])
+                & (k_r < seg_cl[:, None, :])
+                & valid[:, None, :]
+                & gate_ok[None, None, :]
+            )
+            add = window & needed             # [L, Hp1, bP]
+            cost_c = jnp.sum(
+                add.astype(jnp.float32) * fpos[:, None, :], axis=(0, 1)
+            )
+            cost_c = jnp.where(c < n_cand, cost_c, _INF)
+            better = cost_c < best_cost
+            chosen = jnp.where(better[None, None, :], add, chosen)
+            best_cost = jnp.where(better, cost_c, best_cost)
+            return best_cost, chosen
+
+        best_cost, chosen = jax.lax.fori_loop(
+            0,
+            C,
+            cand_body,
+            (
+                jnp.full((bP,), _INF, jnp.float32),
+                jnp.zeros((L, Hp1, bP), jnp.bool_),
+            ),
+        )
+        no_sol = best_cost >= _INF
+        chosen = chosen & ~no_sol[None, None, :]
+
+        chosen_ref[...] = chosen.astype(jnp.int32)
+        srv_ref[...] = srv
+        cost_ref[...] = best_cost
+        nosol_ref[...] = no_sol.astype(jnp.int32)
+        skip_ref[...] = skipped.astype(jnp.int32)
+
+    return kernel
+
+
+def fused_update_pallas(
+    words: jnp.ndarray,    # uint32 [(n+1), W] — packed scheme snapshot
+    objects: jnp.ndarray,  # int32 [B, L] (-1 padded)
+    lengths: jnp.ndarray,  # int32 [B]
+    shard: jnp.ndarray,    # int32 [n]
+    f: jnp.ndarray,        # float32 [n]
+    tables: jnp.ndarray,   # bool [Hc, C, Hp1] candidate retained-sets
+    counts: jnp.ndarray,   # int32 [Hc]
+    t: jnp.ndarray,        # int32 [B] per-path budgets
+    rank: jnp.ndarray,     # float32 [W*32] holder-rank (queue_aware load)
+    pol=None,              # resolved RoutingPolicy or None (jit static)
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+):
+    """One fused UPDATE round; traceable (callers jit + donate ``words``).
+
+    Returns ``(words, applied_cost [B], no_solution [B], chosen
+    [B, L, Hp1], srv [B, Hp1], skipped [B])`` — the
+    ``_update_batch_core`` contract minus capacity/load bookkeeping
+    (the driver falls back to the jnp core when capacity checking is on).
+    """
+    B, L = objects.shape
+    W = words.shape[1]
+    Hc, C, Hp1 = tables.shape
+    Sp = W * 32
+
+    valid = jnp.arange(L)[None, :] < lengths[:, None]
+    safe = jnp.maximum(objects, 0)
+    home = jnp.where(valid, shard[safe], -1).astype(jnp.int32)
+    wrows = words[safe]                                   # [B, L, W]
+    fpos = f[safe] * valid.astype(jnp.float32)
+    start = shard[jnp.maximum(objects[:, 0], 0)].astype(jnp.int32)
+
+    if pol is None:
+        gate_mode, lookahead = "none", False
+        rank_in = rank
+        rank_spec = pl.BlockSpec((Sp,), lambda p: (0,))
+    elif pol.name == "nearest_copy_dp":
+        from repro.engine.backends import _dp_depth, _dp_score_tables
+
+        gate_mode, lookahead = "scored", False
+        rank_in = _dp_score_tables(objects, lengths, words, _dp_depth(pol))
+        rank_spec = pl.BlockSpec((L, Sp, block), lambda p: (0, 0, p))
+    else:
+        gate_mode, lookahead = "routed", bool(pol.lookahead)
+        rank_in = rank
+        rank_spec = pl.BlockSpec((Sp,), lambda p: (0,))
+
+    pad = (-B) % block
+    if pad:
+        home = jnp.pad(home, ((0, pad), (0, 0)), constant_values=-1)
+        wrows = jnp.pad(wrows, ((0, pad), (0, 0), (0, 0)))
+        lengths = jnp.pad(lengths, (0, pad))
+        t = jnp.pad(t, (0, pad))
+        fpos = jnp.pad(fpos, ((0, pad), (0, 0)))
+        start = jnp.pad(start, (0, pad))
+        if gate_mode == "scored":
+            rank_in = jnp.pad(rank_in, ((0, pad), (0, 0), (0, 0)))
+    Bp = B + pad
+
+    home_t = home.T                                       # [L, Bp]
+    masks_t = jnp.transpose(wrows, (1, 2, 0))             # [L, W, Bp]
+    fpos_t = fpos.T                                       # [L, Bp]
+    if gate_mode == "scored":
+        rank_in = jnp.transpose(rank_in, (1, 2, 0))       # [L, Sp, Bp]
+
+    grid = (Bp // block,)
+    chosen, srv, cost, nosol, skip = pl.pallas_call(
+        _make_kernel(L, W, Hc, C, Hp1, gate_mode, lookahead),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((L, block), lambda p: (0, p)),
+            pl.BlockSpec((L, W, block), lambda p: (0, 0, p)),
+            pl.BlockSpec((block,), lambda p: (p,)),
+            pl.BlockSpec((block,), lambda p: (p,)),
+            pl.BlockSpec((L, block), lambda p: (0, p)),
+            pl.BlockSpec((block,), lambda p: (p,)),
+            rank_spec,
+            pl.BlockSpec((Hc, C, Hp1), lambda p: (0, 0, 0)),
+            pl.BlockSpec((Hc,), lambda p: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((L, Hp1, block), lambda p: (0, 0, p)),
+            pl.BlockSpec((Hp1, block), lambda p: (0, p)),
+            pl.BlockSpec((block,), lambda p: (p,)),
+            pl.BlockSpec((block,), lambda p: (p,)),
+            pl.BlockSpec((block,), lambda p: (p,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L, Hp1, Bp), jnp.int32),
+            jax.ShapeDtypeStruct((Hp1, Bp), jnp.int32),
+            jax.ShapeDtypeStruct((Bp,), jnp.float32),
+            jax.ShapeDtypeStruct((Bp,), jnp.int32),
+            jax.ShapeDtypeStruct((Bp,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(home_t, masks_t, lengths, t, fpos_t, start, rank_in,
+      tables.astype(jnp.int32), counts)
+
+    chosen = jnp.transpose(chosen, (2, 0, 1))[:B].astype(bool)  # [B, L, Hp1]
+    srv = srv.T[:B]                                             # [B, Hp1]
+    cost = cost[:B]
+    no_solution = nosol[:B].astype(bool)
+    skipped = skip[:B].astype(bool)
+
+    # scatter-OR in the same jit: XLA's bit-sliced dynamic-update rounds,
+    # not a per-lane kernel scatter (which would serialize on TPU)
+    from repro.engine.packed import scatter_or_pairs
+
+    obj_w = jnp.where(chosen, jnp.maximum(objects, 0)[:, :, None], -1)
+    srv_w = jnp.broadcast_to(jnp.maximum(srv, 0)[:, None, :], chosen.shape)
+    words = scatter_or_pairs(words, obj_w, srv_w)
+
+    applied_cost = jnp.where(no_solution, 0.0, cost)
+    return words, applied_cost, no_solution, chosen, srv, skipped
+
+
+@functools.partial(
+    jax.jit, static_argnames=("pol", "block", "interpret"), donate_argnums=(0,)
+)
+def fused_update_jit(
+    words, objects, lengths, shard, f, tables, counts, t, rank,
+    pol=None, block: int = DEFAULT_BLOCK, interpret: bool = True,
+):
+    """Jitted standalone wrapper (tests / micro-benchmarks); the greedy
+    driver uses its own enclosing jit with stat accumulators instead."""
+    return fused_update_pallas(
+        words, objects, lengths, shard, f, tables, counts, t, rank,
+        pol=pol, block=block, interpret=interpret,
+    )
