@@ -1,0 +1,101 @@
+"""Benchmark regression gate: fresh BENCH_*.json vs committed floors.
+
+``benchmarks/baselines.json`` records the headline invariants the
+benchmarks must keep — simulator/model agreement error, incremental
+repair beating a rebuild, the fused megakernel's bit-identity and
+speedup floor, the tracing-overhead budget.  This script diffs a fresh
+benchmark run against those floors and exits non-zero on any miss, so
+the nightly job fails loudly instead of letting a regression coast in a
+JSON artifact nobody reads.
+
+Bounds are deliberately machine-independent (booleans, ratios, relative
+errors) rather than wall-clock numbers: the gate must hold on a slow CI
+runner as well as a dev box.
+
+Usage:  PYTHONPATH=src python -m benchmarks.check_regress [--dir DIR]
+
+``--dir`` points at the directory holding the fresh ``BENCH_*.json``
+files (default: current directory).  A baseline file that is absent
+from the directory is reported and counts as a failure — a benchmark
+that silently stopped producing output is itself a regression.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+BASELINES = os.path.join(os.path.dirname(__file__), "baselines.json")
+
+
+def lookup(blob, dotted: str):
+    """Walk a dotted path through dicts and lists ('a.2.b')."""
+    cur = blob
+    for part in dotted.split("."):
+        if isinstance(cur, list):
+            cur = cur[int(part)]
+        else:
+            cur = cur[part]
+    return cur
+
+
+def check_value(value, bound: dict) -> tuple[bool, str]:
+    """Apply one bound; returns (ok, human-readable verdict)."""
+    if "equals" in bound:
+        want = bound["equals"]
+        return value == want, f"{value!r} == {want!r}"
+    if "max" in bound:
+        return value <= bound["max"], f"{value} <= {bound['max']}"
+    if "min" in bound:
+        return value >= bound["min"], f"{value} >= {bound['min']}"
+    return False, f"unknown bound {bound!r}"
+
+
+def run(bench_dir: str = ".", baselines_path: str = BASELINES) -> int:
+    with open(baselines_path) as fh:
+        baselines = json.load(fh)
+    failures = 0
+    checks = 0
+    for fname, bounds in baselines.items():
+        if fname.startswith("_"):
+            continue
+        path = os.path.join(bench_dir, fname)
+        if not os.path.exists(path):
+            print(f"FAIL {fname}: missing (benchmark produced no output)")
+            failures += 1
+            continue
+        with open(path) as fh:
+            blob = json.load(fh)
+        for dotted, bound in bounds.items():
+            checks += 1
+            try:
+                value = lookup(blob, dotted)
+            except (KeyError, IndexError, TypeError):
+                print(f"FAIL {fname}:{dotted}: path missing from output")
+                failures += 1
+                continue
+            ok, verdict = check_value(value, bound)
+            tag = "ok  " if ok else "FAIL"
+            print(f"{tag} {fname}:{dotted}: {verdict}")
+            failures += 0 if ok else 1
+    print(
+        f"# {checks} checks, {failures} failures"
+        if failures
+        else f"# all {checks} checks passed"
+    )
+    return 1 if failures else 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--dir", default=".", help="directory holding fresh BENCH_*.json"
+    )
+    ap.add_argument("--baselines", default=BASELINES)
+    args = ap.parse_args()
+    sys.exit(run(args.dir, args.baselines))
+
+
+if __name__ == "__main__":
+    main()

@@ -23,10 +23,21 @@
 
 Usage: PYTHONPATH=src python -m benchmarks.run [module ...]
 Prints ``bench,metric,tags,value`` CSV.
+
+The harness runs with the telemetry plane enabled (``repro.obs``) and the
+jit compile hook installed; each module executes inside its own
+``TRANSFER.scope()`` so the per-module transfer snapshot is the module's
+own traffic.  At exit the global metrics registry plus the per-module
+transfer snapshots land in ``BENCH_metrics.json`` — the nightly metrics
+artifact that rides next to the other ``BENCH_*.json`` files.
 """
 import json
 import sys
 import time
+
+from repro import obs
+from repro.engine import TRANSFER
+from repro.obs import install_compile_hook
 
 MODULES = ["fig2_traversals", "fig6_latency_tradeoff", "fig7_sharding",
            "table4_runtime", "reshard_cost", "beyond_paper",
@@ -41,19 +52,35 @@ ENTRY = {"perf_iterate": "run_engine"}
 
 def main() -> None:
     want = sys.argv[1:] or MODULES
+    obs.enable()
+    install_compile_hook()
+    transfer_per_module = {}
     t0 = time.perf_counter()
     print("bench,metric,tags,value")
     for name in want:
         entry = ENTRY.get(name, "run")
         mod = __import__(f"benchmarks.{name}", fromlist=[entry])
         t1 = time.perf_counter()
-        out = getattr(mod, entry)()
+        with TRANSFER.scope():
+            out = getattr(mod, entry)()
+            transfer_per_module[name] = TRANSFER.snapshot()
         if name in ENTRY and out is not None:
             # detail blob; '#'-prefixed to keep the CSV stream parseable
             for line in json.dumps(out, indent=2).splitlines():
                 print(f"# {line}")
         print(f"# {name} done in {time.perf_counter()-t1:.1f}s")
     print(f"# total {time.perf_counter()-t0:.1f}s")
+    with open("BENCH_metrics.json", "w") as fh:
+        json.dump(
+            {
+                "modules": want,
+                "registry": obs.REGISTRY.snapshot(),
+                "transfer_per_module": transfer_per_module,
+            },
+            fh,
+            indent=2,
+        )
+    print("# metrics snapshot -> BENCH_metrics.json")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,85 @@
+"""Trace a tail-latency violation down to the hop and server that caused it.
+
+The observability walkthrough on top of the serving simulator:
+
+  1. replicate the phase-0 workload, then serve the *drifted* phase with a
+     hop-level span ``Tracer`` attached — every access records which
+     server served it and how the time split between FIFO queue wait and
+     service,
+  2. set the trace budget to the run's p99: the ~1% of queries above it
+     are *violators*, and tail-biased sampling keeps every one of them,
+  3. print the worst query's hop-by-hop walk (the p99 is no longer an
+     opaque scalar — it is THIS query waiting THIS long on THIS server),
+  4. fold all violators into a burn-rate blame table
+     (``attribute_burn``): which server consumed the violators' budgets,
+  5. export a Chrome ``trace_event`` JSON — load it in chrome://tracing
+     or https://ui.perfetto.dev and the hotspot server is a dense lane.
+
+Run:  PYTHONPATH=src python examples/trace_tail.py
+"""
+import numpy as np
+
+from repro.core import replicate_workload
+from repro.distsys import Cluster, LatencyModel
+from repro.graph import make_sharding, snb_like
+from repro.obs import Tracer, attribute_burn
+from repro.serve import simulate, snb_drift
+
+T, N_SERVERS, RATE_QPS = 1, 6, 60_000
+
+print(f"== tracing the serving tail (t={T}, {N_SERVERS} servers, "
+      f"{RATE_QPS:,} qps offered) ==")
+snb = snb_like(1, seed=0)
+f = snb.graph.object_sizes().astype(np.float32)
+shard = make_sharding("hash", snb.graph, N_SERVERS, seed=0)
+phases = snb_drift(snb, n_phases=3, queries_per_phase=800, seed=0)
+
+scheme, _ = replicate_workload(phases[0].pathset, shard, N_SERVERS, t=T, f=f)
+cluster = Cluster(scheme, f=f)
+model = LatencyModel()
+drifted = phases[-1].pathset
+
+# pass 1 (untraced) just to learn the run's p99 -> the violation budget
+rep = simulate(cluster, drifted, rate_qps=RATE_QPS, model=model, seed=11)
+p99 = float(np.percentile(rep.latency_us, 99.0))
+print(f"\nserved {drifted.n_queries} queries: p50 {rep.p50_us:.0f}us, "
+      f"p99 {p99:.0f}us")
+
+# pass 2: identical run (same seed), now with spans
+tracer = Tracer(budget_us=p99)
+rep = simulate(
+    cluster, drifted, rate_qps=RATE_QPS, model=model, seed=11, trace=tracer
+)
+print(f"spans recorded: {tracer.n_spans}; violators kept: "
+      f"{tracer.n_violations} (tail-biased: never sampled away)")
+
+# -- the worst query, hop by hop -------------------------------------------
+worst = tracer.worst(1)[0]
+print(f"\nworst query #{worst.query}: latency {worst.latency_us:.0f}us "
+      f"vs budget {worst.budget_us:.0f}us")
+for s in worst.spans:
+    print(f"  hop {s.hop}: object {s.obj} on server {s.server} ({s.why}) "
+          f"queue {s.queue_wait_us:7.1f}us  service {s.service_us:6.1f}us")
+blamed = worst.worst_hop()
+print(f"  -> budget went to hop {blamed.hop} on server {blamed.server} "
+      f"({blamed.queue_wait_us:.0f}us of queue wait)")
+
+# -- all violators folded into per-server blame ----------------------------
+burn = attribute_burn(tracer, allowed_frac=0.01)
+tb = burn["default"]
+print(f"\nburn rate {tb.burn_rate:.1f}x allowed "
+      f"({tb.n_violations}/{tb.n_queries} queries over budget)")
+print("per-server blame (violators' worst hops + queue-wait blame):")
+for srv in sorted(
+    tb.blame_queue_us,
+    key=lambda s: (tb.blamed_counts.get(s, 0), tb.blame_queue_us[s]),
+    reverse=True,
+):
+    n = tb.blamed_counts.get(srv, 0)
+    print(f"  server {srv}: worst hop of {n} violator(s), "
+          f"{tb.blame_queue_us[srv]:9.0f}us queue blame")
+print(f"=> server {tb.top_server()} ate the tail")
+
+out = "trace_tail.json"
+tracer.chrome_trace(out)
+print(f"\nwrote {out} — open in chrome://tracing or ui.perfetto.dev")

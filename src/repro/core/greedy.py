@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import combi
 from repro.core.paths import PathSet
 from repro.core.replication import ReplicationScheme, subpath_structure
@@ -320,6 +321,64 @@ class GreedyStats:
     # host-resident at once — the residency contract the provisioning-scale
     # benchmark asserts stays below the total path count
     peak_resident_paths: int = 0
+    # streamed ingestion: host seconds of chunk materialization hidden
+    # behind in-flight device compute (the double-buffer pipeline's win)
+    ingest_overlap_s: float = 0.0
+    # per-budget-class provisioning telemetry (obs-gated; None when the
+    # telemetry plane is disabled): dicts of {budget, n_vec, n_seq,
+    # n_candidates, routed_skips} in processing order
+    timeline: list | None = None
+
+
+class DeviceStatsAcc:
+    """Deferred device-side stat accumulation across UPDATE passes.
+
+    The fused UPDATE accumulates (cost, failed, skipped) in a device
+    f32[3]; reading it back per class blocks dispatch and breaks the
+    streamed-ingestion pipeline.  Holding the accumulator here instead
+    carries it across :func:`replicate_delta` calls — chunk ``i + 1``'s
+    host work proceeds while chunk ``i`` still computes — and
+    :meth:`drain` performs the one blocking readback at stream end.
+    While deferred, per-chunk stats report these components as 0; the
+    caller adds the drained totals once.
+    """
+
+    def __init__(self):
+        self.acc = None
+
+    def drain(self, stats: "GreedyStats") -> None:
+        """One blocking readback; folds the totals into ``stats``."""
+        if self.acc is None:
+            return
+        a = np.asarray(self.acc)
+        stats.total_cost += float(a[0])
+        stats.failed_paths += int(a[1])
+        stats.routed_skips += int(a[2])
+        self.acc = None
+        if obs.enabled():
+            obs.REGISTRY.counter("repro.greedy.stat_readbacks").inc()
+
+
+def _obs_record_class(stats, b, n_vec, n_seq, counts, n_skip) -> None:
+    """Per-budget-class provisioning telemetry (no-op when obs is off)."""
+    if not obs.enabled():
+        return
+    n_cand = int(np.asarray(counts).sum()) if counts is not None else 0
+    if stats.timeline is None:
+        stats.timeline = []
+    stats.timeline.append({
+        "budget": int(b),
+        "n_vec": int(n_vec),
+        "n_seq": int(n_seq),
+        "n_candidates": n_cand,
+        "routed_skips": int(n_skip),
+    })
+    reg = obs.REGISTRY
+    reg.counter("repro.greedy.classes").inc()
+    reg.counter("repro.greedy.vec_paths").inc(n_vec)
+    reg.counter("repro.greedy.seq_paths").inc(n_seq)
+    reg.counter("repro.greedy.candidates").inc(n_cand)
+    reg.counter("repro.greedy.routed_skips").inc(n_skip)
 
 
 def _run_update_batches(
@@ -346,6 +405,7 @@ def _run_update_batches(
     rank=None,
     use_pallas: bool = False,
     put=None,
+    acc_holder: DeviceStatsAcc | None = None,
 ):
     """The batched UPDATE loop over vectorizable paths (shared by the
     from-scratch driver and the incremental delta driver).
@@ -367,7 +427,10 @@ def _run_update_batches(
     once at the end, and ``use_pallas`` lowers the round to the
     ``kernels.provision_update`` megakernel.  ``put`` overrides the
     host->device upload (the sharded driver installs a mesh-aware put so
-    batches land path-sharded across devices).
+    batches land path-sharded across devices).  ``acc_holder`` defers
+    even that one end-of-call readback: the device stat vector is carried
+    in the holder across calls (streamed ingestion) and drained once by
+    the caller — the stat components stay 0 in ``stats`` until then.
 
     Mutates ``packed`` (donated words) and ``stats``; returns the final
     device load and, when ``collect_additions``, the applied (object,
@@ -378,7 +441,10 @@ def _run_update_batches(
     nb = len(vec_objects)
     put = to_device if put is None else put
     if fused:
-        acc = jnp.zeros((3,), jnp.float32)
+        if acc_holder is not None and acc_holder.acc is not None:
+            acc = acc_holder.acc
+        else:
+            acc = jnp.zeros((3,), jnp.float32)
         if rank is None:
             rank = jnp.zeros((packed.words.shape[1] * 32,), jnp.float32)
     for i in range(0, nb, batch_size):
@@ -459,12 +525,18 @@ def _run_update_batches(
                         (int(fo[b, kk_]), int(o[b, x]), int(sv[b, kk_]))
                     )
     if fused:
-        # one device->host readback for the whole class (pad rows are
-        # inert in every component, see _fused_update_batch)
-        a = np.asarray(acc)
-        stats.total_cost += float(a[0])
-        stats.failed_paths += int(a[1])
-        stats.routed_skips += int(a[2])
+        if acc_holder is not None:
+            # deferred: keep the stats on device, drained at stream end
+            acc_holder.acc = acc
+        else:
+            # one device->host readback for the whole class (pad rows are
+            # inert in every component, see _fused_update_batch)
+            a = np.asarray(acc)
+            stats.total_cost += float(a[0])
+            stats.failed_paths += int(a[1])
+            stats.routed_skips += int(a[2])
+            if obs.enabled():
+                obs.REGISTRY.counter("repro.greedy.stat_readbacks").inc()
     additions = (
         (
             np.concatenate(add_obj) if add_obj else np.zeros(0, np.int64),
@@ -828,11 +900,13 @@ def replicate_workload(
             ps_run, t_run, shard_j, max_candidates,
             skip_tables=routed_fn is not None,
         ):
+            n_skip = 0
             if routed_fn is not None and cls.n_paths:
                 vec_idx, seq_idx, tables, counts, n_skip = _routed_class_filter(
                     cls, b, h_all, routed_fn, max_candidates
                 )
                 stats.routed_skips += n_skip
+            _obs_record_class(stats, b, len(vec_idx), len(seq_idx), counts, n_skip)
             srv_load, _ = _run_update_batches(
                 packed,
                 cls.objects[vec_idx],
@@ -933,6 +1007,8 @@ def replicate_delta(
     fused: bool = False,
     mesh=None,
     collect_additions: bool = True,
+    stats_acc: DeviceStatsAcc | None = None,
+    sync_host: bool = True,
 ):
     """Warm-start incremental UPDATE over *delta* paths (online serving).
 
@@ -972,6 +1048,15 @@ def replicate_delta(
     readbacks are skipped entirely and the returned arrays are empty; the
     engine's host mask, when present, is refreshed from the packed words
     once per class instead of per-pair.
+
+    ``stats_acc`` (fused runs) keeps the device stat accumulator live
+    across calls instead of reading it back before returning — the
+    returned stats' cost/failed/skipped components stay 0 until the
+    caller :meth:`DeviceStatsAcc.drain`\\ s the holder.  ``sync_host=False``
+    additionally skips the end-of-call host-mask refresh (the other
+    per-call sync point).  Together they make a fused, non-policy call
+    fully asynchronous — what :func:`replicate_stream`'s double-buffered
+    pipeline needs to overlap chunk ingestion with device compute.
     """
     from repro.core.slo import normalize_path_budgets  # local: no cycle at import
     from repro.engine.routing import resolve_policy  # local: no cycle at import
@@ -1024,11 +1109,13 @@ def replicate_delta(
             ps_run, t_run, shard_j, max_candidates,
             skip_tables=routed_fn is not None,
         ):
+            n_skip = 0
             if routed_fn is not None and cls.n_paths:
                 vec_idx, seq_idx, tables, counts, n_skip = _routed_class_filter(
                     cls, b, h_all, routed_fn, max_candidates
                 )
                 stats.routed_skips += n_skip
+            _obs_record_class(stats, b, len(vec_idx), len(seq_idx), counts, n_skip)
             srv_load, additions = _run_update_batches(
                 packed,
                 cls.objects[vec_idx],
@@ -1053,6 +1140,7 @@ def replicate_delta(
                 rank=rank,
                 use_pallas=use_pallas,
                 put=put,
+                acc_holder=stats_acc if fused else None,
             )
 
             # Mirror the vectorized additions into the host scheme FIRST:
@@ -1071,6 +1159,8 @@ def replicate_delta(
                 # prices against the host mask, so refresh it from the
                 # packed truth (one readback) right before it is consumed
                 engine.scheme.mask = packed.unpack()
+                if obs.enabled():
+                    obs.REGISTRY.counter("repro.greedy.mask_syncs").inc()
 
             # Exact fallback for enumeration-heavy delta paths: run against
             # a host scheme and replay the additions into the
@@ -1115,10 +1205,14 @@ def replicate_delta(
     if routed_fn is not None:
         _revalidate_routed(routed_fn, ps, t_path, run_classes, stats)
 
-    if not collect_additions and engine.scheme is not None:
+    if not collect_additions and sync_host and engine.scheme is not None:
         # keep the engine's host mirror consistent at return (the per-pair
-        # incremental mirror is what collect_additions=False skipped)
+        # incremental mirror is what collect_additions=False skipped);
+        # sync_host=False defers even this to the caller (streamed
+        # ingestion syncs once at stream end)
         engine.scheme.mask = packed.unpack()
+        if obs.enabled():
+            obs.REGISTRY.counter("repro.greedy.mask_syncs").inc()
 
     # Dedupe (a batch can choose the same (v, s) for several paths; the
     # scatter-OR is idempotent, but the returned delta is the exact set of
@@ -1169,13 +1263,24 @@ def replicate_stream(
     yielded as ``(PathSet, budgets)`` override it per chunk.  ``fused``
     defaults on (this is the provisioning-scale entry point) and, with
     ``collect_additions`` off internally, no per-batch readback ever
-    crosses the bus — per chunk the driver reads back one stat vector and
-    (only when a chunk needs the exact fallback) one scheme unpack.
+    crosses the bus.
+
+    Ingestion is **double-buffered** (the engine's ``stream_chunks``
+    pipeline shape, applied to provisioning): each chunk's UPDATE passes
+    are dispatched with the stat readback *deferred* to a device
+    accumulator (:class:`DeviceStatsAcc`) and the host-mask sync skipped,
+    so while chunk ``i``'s batches compute on device, the producer
+    generator is already materializing chunk ``i + 1`` on the host.  The
+    overlapped producer seconds are reported in
+    ``stats.ingest_overlap_s`` (and, when the telemetry plane is on, the
+    ``repro.stream.ingest_overlap_s`` gauge).  Policy-aware runs
+    (``policy=``) still sync per chunk inside the routed gate; the
+    pipeline degrades gracefully rather than breaking.
 
     Returns ``(scheme, stats)``; ``return_engine=True`` appends the
     device-resident :class:`LatencyEngine`.
     """
-    from repro.engine.streaming import PathStream  # lazy: no cycle at import
+    from repro.engine.streaming import PathStream, double_buffer  # lazy: no cycle
 
     t0 = time.perf_counter()
     if not isinstance(stream, PathStream):
@@ -1183,7 +1288,11 @@ def replicate_stream(
     scheme = ReplicationScheme.from_sharding(shard, n_servers)
     engine = LatencyEngine(scheme)
     stats = GreedyStats()
-    for ps, t_chunk in stream:
+    fused = fused and policy_backend != "reference"
+    acc_holder = DeviceStatsAcc() if fused else None
+
+    def dispatch(item):
+        ps, t_chunk = item
         budgets = t if t_chunk is None else t_chunk
         if budgets is None:
             raise ValueError(
@@ -1194,18 +1303,37 @@ def replicate_stream(
             batch_size=batch_size, max_candidates=max_candidates,
             prune=prune, policy=policy, policy_backend=policy_backend,
             load=load, fused=fused, mesh=mesh, collect_additions=False,
+            stats_acc=acc_holder, sync_host=False,
         )
+        # cost/failed/skipped live in the deferred device accumulator
+        # (fused) and drain once after the stream; the host-side components
+        # accumulate per chunk as before
         stats.total_cost += cstats.total_cost
         stats.failed_paths += cstats.failed_paths
         stats.paths_processed += cstats.paths_processed
         stats.fallback_paths += cstats.fallback_paths
         stats.routed_skips += cstats.routed_skips
         stats.routed_violations += cstats.routed_violations
+        if cstats.timeline:
+            stats.timeline = (stats.timeline or []) + cstats.timeline
+
+    overlap_s = double_buffer(stream, dispatch)
+    if acc_holder is not None:
+        acc_holder.drain(stats)
+    stats.ingest_overlap_s = stream.stats.ingest_overlap_s = overlap_s
     if engine.packed is not None:
+        # the one end-of-stream host sync the per-chunk sync_host=False
+        # deferred (keeps scheme and the engine's host mirror consistent)
         scheme.mask = engine.packed.unpack()
     stats.replicas = scheme.replica_count()
     stats.peak_resident_paths = stream.stats.peak_resident_paths
     stats.runtime_s = time.perf_counter() - t0
+    if obs.enabled():
+        obs.REGISTRY.gauge("repro.stream.ingest_overlap_s").set(overlap_s)
+        obs.REGISTRY.gauge("repro.stream.peak_resident_paths").set(
+            stats.peak_resident_paths
+        )
+        obs.REGISTRY.counter("repro.stream.chunks").inc(stream.stats.chunks)
     if return_engine:
         return scheme, stats, engine
     return scheme, stats

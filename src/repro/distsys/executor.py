@@ -170,10 +170,10 @@ def _path_costs(
     """Access walk + counters.
 
     Returns (n_local [P], n_remote [P], local_per_server [S],
-    rpc_per_server [S], dead [P]).  A dead server's copies are unavailable;
-    originals of dead servers are served by the lowest-id alive replica
-    holder (fail-over).  ``dead[p]`` marks paths that hit an object with no
-    alive copy at all (visited server -1).
+    rpc_per_server [S], dead [P], servers [P, L], local [P, L]).  A dead
+    server's copies are unavailable; originals of dead servers are served
+    by the lowest-id alive replica holder (fail-over).  ``dead[p]`` marks
+    paths that hit an object with no alive copy at all (visited server -1).
     """
     S = scheme.n_servers
     servers, local = trace_paths(pathset, scheme, alive, start, policy, load)
@@ -187,7 +187,7 @@ def _path_costs(
     srv_c = np.maximum(servers, 0)
     local_srv = np.bincount(srv_c[local], minlength=S).astype(np.int64)
     rpc_srv = np.bincount(srv_c[remote], minlength=S).astype(np.int64)
-    return n_local, n_remote, local_srv, rpc_srv, dead
+    return n_local, n_remote, local_srv, rpc_srv, dead, servers, local
 
 
 def _query_roots(pathset: PathSet) -> np.ndarray:
@@ -199,6 +199,37 @@ def _query_roots(pathset: PathSet) -> np.ndarray:
     return roots
 
 
+def _emit_structural_spans(
+    trace, pathset, servers, local, model, q_lat, q_dead
+) -> None:
+    """Record the closed-form walk into a ``repro.obs.Tracer``.
+
+    Shared prefixes across a query's paths execute once (Def 4.1) and
+    emit one span each, exactly like the simulator's trie-deduped trees;
+    times are cumulative jitter-free model constants with zero queue wait.
+    """
+    qids = np.asarray(pathset.query_ids)
+    lengths = np.asarray(pathset.lengths)
+    objects = np.asarray(pathset.objects)
+    seen: dict[int, set] = {}
+    for p in range(pathset.n_paths):
+        q = int(qids[p])
+        prefixes = seen.setdefault(q, set())
+        t = 0.0
+        prefix: tuple = ()
+        for x in range(int(lengths[p])):
+            obj = int(objects[p, x])
+            prefix = prefix + (obj,)
+            lc = bool(local[p, x])
+            cost = model.local_us if lc else model.remote_us
+            if prefix not in prefixes:
+                prefixes.add(prefix)
+                trace.record(q, obj, int(servers[p, x]), lc, t, t, t + cost)
+            t += cost
+    for q in range(len(q_lat)):
+        trace.finalize(q, 0.0, float(q_lat[q]), failed=bool(q_dead[q]))
+
+
 def execute_workload(
     cluster: Cluster,
     pathset: PathSet,
@@ -207,6 +238,7 @@ def execute_workload(
     hedge_replicas: bool = False,
     router: Router | None = None,
     policy=None,
+    trace=None,
 ) -> ExecutionReport:
     """Execute a workload; per-query latency = slowest path + coordination.
 
@@ -228,6 +260,14 @@ def execute_workload(
     has >1 alive copy, the executor issues hedged requests and takes the
     faster jitter draw (min of two lognormals), a direct secondary benefit
     of the replication scheme.
+
+    ``trace``: a :class:`repro.obs.Tracer` collecting *structural* spans —
+    one per unique access of each query's shared-prefix walk (hop order,
+    object, server, local/remote), timed with the jitter-free model
+    constants and no queueing (enqueue == start).  The executor prices
+    queries in isolation, so span times decompose the modeled walk, not
+    the sampled latency; the simulator's spans are the ones whose
+    queue/service split sums to real latency.
     """
     model = model or LatencyModel()
     rng = np.random.default_rng(seed)
@@ -254,8 +294,8 @@ def execute_workload(
             )
         start = coord[qids]
 
-    n_local, n_remote, local_srv, rpc_srv, dead = _path_costs(
-        pathset, cluster.scheme, alive, start, policy, load
+    n_local, n_remote, local_srv, rpc_srv, dead, w_servers, w_local = (
+        _path_costs(pathset, cluster.scheme, alive, start, policy, load)
     )
 
     lat = model.sample(n_local.astype(np.float64), n_remote.astype(np.float64), rng)
@@ -279,7 +319,7 @@ def execute_workload(
     if backup_start is not None:
         # race the backup coordinator pick: independent walk + jitter draw,
         # keep the faster completion per query (min of two path-maxima).
-        b_local, b_remote, _, _, b_dead = _path_costs(
+        b_local, b_remote, _, _, b_dead, _, _ = _path_costs(
             pathset, cluster.scheme, alive, backup_start, policy, load
         )
         b_lat = model.sample(
@@ -308,6 +348,13 @@ def execute_workload(
         )
         for s in cluster.servers:
             s.queries_coordinated += int(counts[s.server_id])
+
+    if trace is not None:
+        if policy is not None:
+            trace.policy = getattr(policy, "name", str(policy))
+        _emit_structural_spans(
+            trace, pathset, w_servers, w_local, model, q_lat, q_dead
+        )
 
     # throughput model: per-server service capacity is shared; the
     # bottleneck server's work bounds qps (open-loop approximation).

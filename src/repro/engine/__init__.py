@@ -35,7 +35,13 @@ from repro.engine.routing import (
     nearest_copy_dp,
     resolve_policy,
 )
-from repro.engine.streaming import TRANSFER, PathStream, StreamStats, to_device
+from repro.engine.streaming import (
+    TRANSFER,
+    PathStream,
+    StreamStats,
+    double_buffer,
+    to_device,
+)
 from repro.engine.backends import BACKENDS
 
 __all__ = [
@@ -49,6 +55,7 @@ __all__ = [
     "unpack_words",
     "TRANSFER",
     "to_device",
+    "double_buffer",
     "BACKENDS",
     "POLICIES",
     "RoutingPolicy",

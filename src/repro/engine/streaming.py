@@ -26,7 +26,9 @@ the full path set ever being host-resident.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import time
 from typing import Callable, Iterable, Iterator, Sequence
 
 import jax.numpy as jnp
@@ -56,6 +58,28 @@ class TransferStats:
             "d2h_bytes": self.d2h_bytes,
             "padded_bytes": self.padded_bytes,
         }
+
+    @contextlib.contextmanager
+    def scope(self):
+        """Isolate a region's transfer accounting, preserving outer totals.
+
+        On entry the counters reset to zero, so assertions inside the
+        block see only the block's own traffic; on exit the pre-entry
+        values are added back, so the process-level totals equal
+        outer + inner as if the scope had never existed.  Nests cleanly —
+        each level isolates its own deltas.  This replaces the old
+        reset-around-every-test fixture: a benchmark ENTRY or a test gets
+        clean counters without silently zeroing someone else's.
+        """
+        saved = self.snapshot()
+        self.reset()
+        try:
+            yield self
+        finally:
+            self.h2d_bytes += saved["h2d_bytes"]
+            self.h2d_calls += saved["h2d_calls"]
+            self.d2h_bytes += saved["d2h_bytes"]
+            self.padded_bytes += saved["padded_bytes"]
 
 
 TRANSFER = TransferStats()
@@ -123,6 +147,38 @@ def stream_chunks(
     return outs
 
 
+def double_buffer(items: Iterable, dispatch: Callable) -> float:
+    """Two-deep pipeline over a lazy producer: overlap ingest with compute.
+
+    ``dispatch(item)`` must *enqueue* device work and return without
+    blocking (JAX dispatch is asynchronous as long as nothing reads a
+    device value back).  While that work is in flight, the next item is
+    pulled from ``items`` — so a generator producer materializes chunk
+    ``i + 1`` on the host during chunk ``i``'s device compute, the same
+    pipeline shape as :func:`stream_chunks` but for callers that own
+    their dispatch (``repro.core.greedy.replicate_stream``).
+
+    Returns the host seconds of producer work that overlapped in-flight
+    device work (the pipeline's win over a strict pull-then-dispatch
+    loop); the first item's materialization has nothing to hide behind
+    and is not counted.
+    """
+    it = iter(items)
+    try:
+        cur = next(it)
+    except StopIteration:
+        return 0.0
+    overlap_s = 0.0
+    while True:
+        dispatch(cur)
+        t0 = time.perf_counter()
+        try:
+            cur = next(it)  # producer runs while the device computes
+        except StopIteration:
+            return overlap_s
+        overlap_s += time.perf_counter() - t0
+
+
 @dataclasses.dataclass
 class StreamStats:
     """Residency accounting of one :class:`PathStream` consumption."""
@@ -130,6 +186,9 @@ class StreamStats:
     total_paths: int = 0
     chunks: int = 0
     peak_resident_paths: int = 0
+    # host seconds of chunk materialization hidden behind device compute
+    # (filled by pipelined consumers; 0.0 for a strict pull-then-compute)
+    ingest_overlap_s: float = 0.0
 
 
 class PathStream:

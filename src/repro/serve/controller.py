@@ -58,6 +58,7 @@ from repro.core.reshard import ReshardingMap
 from repro.core.slo import SLOSpec, TenantSpec
 from repro.distsys.cluster import Cluster
 from repro.engine import LatencyEngine
+from repro.obs import attribute_burn
 
 
 @dataclasses.dataclass
@@ -117,6 +118,11 @@ class AdaptationReport:
     additions: tuple[np.ndarray, np.ndarray] = dataclasses.field(
         default=(np.zeros(0, np.int64), np.zeros(0, np.int64)), repr=False
     )
+    # why the repair triggered, per repaired tenant: burn rate over the
+    # traced window plus the per-server blame decomposition (which server's
+    # queues ate the violators' budgets) — present when observe() was
+    # handed the serving run's span trace
+    blame: dict | None = None
 
 
 @dataclasses.dataclass
@@ -297,6 +303,7 @@ class AdaptiveController:
         pathset: PathSet,
         latency_us: np.ndarray | None = None,
         slo: SLOSpec | None = None,
+        trace=None,
     ) -> AdaptationReport | None:
         """Feed one served batch; repair and return a report on violation.
 
@@ -304,7 +311,10 @@ class AdaptiveController:
         layer routed); ``latency_us`` the simulator's per-query sojourn
         times for the optional wall-clock SLO trigger; ``slo`` the batch's
         per-query budgets + tenant map (defaults to the config's scalar
-        ``t`` under a single "default" tenant).
+        ``t`` under a single "default" tenant); ``trace`` the serving
+        run's :class:`repro.obs.Tracer` — when given, a repair's report
+        carries ``blame``: per repaired tenant, the SLO burn rate and the
+        per-server decomposition of where the violators' budgets went.
         """
         self.step += 1
         slo = slo if slo is not None else self.config.default_slo(
@@ -395,7 +405,19 @@ class AdaptiveController:
             deferred = ()
         for name, _ in repair:
             self._deferred_since.pop(name, None)
-        return self._adapt(repair, deferred)
+        report = self._adapt(repair, deferred)
+        if trace is not None:
+            burn = attribute_burn(
+                trace,
+                tenant_names=tuple(ts.name for ts in slo.tenants),
+                allowed_frac=self.config.violation_frac,
+            )
+            report.blame = {
+                name: burn[name].summary()
+                for name in report.tenants
+                if name in burn.tenants
+            }
+        return report
 
     def _triggered_tenants(self) -> list[tuple[str, str]]:
         out = []

@@ -42,7 +42,15 @@ server, not from the RPC constants.  This module adds the time dimension:
   (queue-aware routing through ``Cluster.queue_depths``-style state);
   ``hedged`` launches both and keeps the first completion (the loser's
   stages still occupy servers — hedging's capacity price is modeled, not
-  assumed away).
+  assumed away);
+* **hop-level span tracing** — ``trace`` (a :class:`repro.obs.Tracer`)
+  records one span per served access: hop order, object, server,
+  local/remote, and the FIFO queue-wait vs service split, tail-biased
+  sampled (a query that violated its wall-clock t_Q budget is never
+  dropped).  Along a linear walk the span queue+service durations plus
+  the coordinator barrier sum exactly to the query's simulated latency,
+  so a violation decomposes into named hops on named servers — the input
+  to ``repro.obs.attribute_burn``'s per-tenant blame tables.
 
 At utilization -> 0 queueing delay vanishes and the simulator's mean
 latency converges to the closed-form model (same access counts, same
@@ -59,6 +67,7 @@ from collections import deque
 
 import numpy as np
 
+from repro import obs
 from repro.core.paths import PathSet
 from repro.distsys.cluster import Cluster
 from repro.distsys.executor import LatencyModel, _query_roots, trace_paths
@@ -197,8 +206,8 @@ def _build_variant(
     tree, Def 4.1); each shared access executes *once* and fans out — the
     same structure the closed-form model prices with its max-over-paths.
     Returns (trees_per_query, dead_per_query) where a tree is
-    ``(nodes, roots)``: ``nodes[i] = [server, base_service_us, children]``
-    and ``roots`` the indices dispatched at arrival.
+    ``(nodes, roots)``: ``nodes[i] = [server, base_service_us, object,
+    children]`` and ``roots`` the indices dispatched at arrival.
 
     ``policy``/``load`` route every remote hop through a
     ``repro.engine.routing`` policy against the given queue-depth
@@ -235,12 +244,12 @@ def _build_variant(
                     model.local_us if bool(local[p, x]) else model.remote_us
                 )
                 idx = len(nodes)
-                nodes.append([s, cost, []])
+                nodes.append([s, cost, int(objects[p, x]), []])
                 trie[prefix] = idx
                 if parent < 0:
                     roots.append(idx)
                 else:
-                    nodes[parent][2].append(idx)
+                    nodes[parent][3].append(idx)
             parent = idx
     return trees, dead
 
@@ -298,6 +307,7 @@ def simulate(
     hop_feedback: bool = False,
     clients: int | None = None,
     think_time_us: float = 0.0,
+    trace=None,
 ) -> SimReport:
     """Serve ``pathset``'s queries through per-server FIFO queues.
 
@@ -337,6 +347,13 @@ def simulate(
     queries) tags every job with its query's tenant, so the report carries
     per-tenant latency histograms (``summary()["per_tenant"]``) — the
     per-tenant p99s the multi-tenant controller monitors.
+
+    ``trace`` (a :class:`repro.obs.Tracer`) records a hop-level span per
+    served access — queue-wait vs service split on the serving server —
+    finalized per query in completion order against the tracer's
+    wall-clock ``budget_us``; violating queries' traces are always kept
+    (tail-biased sampling).  ``trace=None`` (the default) costs one
+    pointer check per access.
     """
     from repro.engine.routing import pick_holder_host, resolve_policy
 
@@ -446,11 +463,11 @@ def simulate(
     wait_us = 0.0
 
     # a "job" is one access-tree node instance of one (query, variant)
-    # launch: job = (query, variant, node_idx, server, base_service_us),
-    # with (server, base) resolved at dispatch time — from the
-    # precomputed tree in the static modes, from the live queue state
-    # under hop feedback; per-(query, variant) remaining-node counters
-    # decide completion (all accesses done = slowest chain done).
+    # launch: job = (query, variant, node_idx, server, base_service_us,
+    # object, t_dispatch), with (server, base) resolved at dispatch time —
+    # from the precomputed tree in the static modes, from the live queue
+    # state under hop feedback; per-(query, variant) remaining-node
+    # counters decide completion (all accesses done = slowest chain done).
     remaining: dict[tuple[int, int], int] = {}
 
     heap: list[tuple[float, int, str, object]] = []
@@ -466,7 +483,7 @@ def simulate(
         return rng.lognormal(0.0, model.jitter_sigma)
 
     def resolve(q, v, i, parent):
-        """(server, base_service_us) of one access.
+        """(server, base_service_us, object) of one access.
 
         ``parent`` is the landing server of the node's parent (-2 for a
         root).  Static modes read the precomputed tree node; hop
@@ -477,12 +494,12 @@ def simulate(
         nonlocal reroutes
         node = variants_trees[v][q][0][i]
         if not hop_feedback:
-            return node[0], node[1]
+            return node[0], node[1], node[2]
         obj = node[0]
         if parent == -2:
-            return int(fo_home[obj]), model.local_us
+            return int(fo_home[obj]), model.local_us, obj
         if parent >= 0 and mask_alive[obj, parent]:
-            return parent, model.local_us
+            return parent, model.local_us, obj
         live = np.asarray(
             [busy[s] + len(queues[s]) for s in range(S)], np.float64
         )
@@ -490,17 +507,31 @@ def simulate(
         return (
             pick_holder_host(mask_alive[obj], int(fo_home[obj]), live),
             model.remote_us,
+            obj,
         )
+
+    # span staging: a flat stride-3 list of job, t_start, t_end — the job
+    # tuple already carries (query, variant, node, server, base, object,
+    # t_dispatch), so recording a span is three appends of objects that
+    # already exist (zero allocation, zero garbage) through a pre-bound
+    # method; the Tracer groups, decodes, and samples lazily, off the
+    # run's clock
+    t_stage = trace.begin_run(nq).append if trace is not None else None
 
     def start_service(t, s, job):
         busy[s] += 1
         svc = job[4] * jitter()
         busy_us[s] += svc
-        push(t + svc, "done", (s, job))
+        te = t + svc
+        if t_stage is not None:
+            t_stage(job)
+            t_stage(t)
+            t_stage(te)
+        push(te, "done", (s, job))
 
     def dispatch(t, q, v, i, parent):
-        s, base = resolve(q, v, i, parent)
-        job = (q, v, i, s, base)
+        s, base, obj = resolve(q, v, i, parent)
+        job = (q, v, i, s, base, obj, t)
         if s < 0:
             # no alive copy anywhere: degraded completion, no queueing
             if hop_feedback:
@@ -527,7 +558,7 @@ def simulate(
             next_q += 1
 
     def advance(t, job):
-        q, v, i, s, _ = job
+        q, v, i, s = job[0], job[1], job[2], job[3]
         children = variants_trees[v][q][0][i][-1]
         for child in children:
             dispatch(t, q, v, child, s)
@@ -645,7 +676,14 @@ def simulate(
                 start_service(t, s, nxt)
             advance(t, job)
         else:  # "advance" (degraded hop completion)
-            advance(t, data)
+            job = data
+            if t_stage is not None and job[3] < 0:
+                # no alive copy: the hop "served" nowhere — the span keeps
+                # server -1 so the trace still accounts the lost time
+                t_stage(job)
+                t_stage(job[6])
+                t_stage(t)
+            advance(t, job)
 
     done = completion >= 0
     assert done.all(), "simulator leaked queries"
@@ -656,6 +694,23 @@ def simulate(
     for s in cluster.servers:
         s.queue_depth = int(live_depth[s.server_id])
         s.busy = int(live_busy[s.server_id])
+
+    if trace is not None:
+        trace.policy = hop_policy.name
+        # hand over the verdict arrays; decoding, per-query finalize, and
+        # head/ring/violator sampling all happen lazily on first access,
+        # so none of it is billed to the simulated run's wall clock
+        trace.end_run(arrivals_us, completion, tenant_of, failed,
+                      model.local_us)
+    if obs.enabled():
+        obs.REGISTRY.histogram("repro.serve.latency_us").record_many(
+            completion - arrivals_us
+        )
+        obs.REGISTRY.counter("repro.serve.queries").inc(nq)
+        obs.REGISTRY.counter("repro.serve.reroutes").inc(reroutes)
+        obs.REGISTRY.gauge("repro.serve.mean_queue_wait_us").set(
+            wait_us / n_waits if n_waits else 0.0
+        )
 
     return SimReport(
         latency_us=completion - arrivals_us,

@@ -19,6 +19,7 @@ from typing import Callable, Iterable, Iterator
 
 import numpy as np
 
+from repro import obs
 from repro.core.paths import PathSet
 
 PathBatchIter = Iterator[PathSet]
@@ -78,6 +79,13 @@ def workload_latency_summary(
             counts[int(v)] = counts.get(int(v), 0) + int(c)
         if len(pl):
             worst = max(worst, int(pl.max()))
+            if obs.enabled():
+                # mirror the exact int histogram into the shared plane so
+                # one registry snapshot names the workload's h-distribution
+                # next to every other subsystem's counters
+                obs.REGISTRY.histogram(
+                    "repro.workload.path_traversals"
+                ).record_many(pl)
         nq = ps.n_queries
         n_queries += nq
         if slo is not None and nq:

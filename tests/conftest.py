@@ -31,18 +31,18 @@ def pytest_collection_modifyitems(config, items):
 
 
 @pytest.fixture(autouse=True)
-def _reset_transfer_counters():
-    """Zero the engine's global transfer accounting around every test.
+def _transfer_scope():
+    """Scope the engine's global transfer accounting to each test.
 
-    ``repro.engine.TRANSFER`` is process-global; without this, a test
-    asserting on h2d/d2h byte counts would see traffic from whichever
-    tests happened to run before it.
+    ``repro.engine.TRANSFER`` is process-global; ``scope()`` zeroes the
+    counters on entry — so a test asserting on h2d/d2h byte counts sees
+    only its own traffic — and restores outer + inner totals on exit, so
+    nothing outside the test loses its accounting.
     """
     from repro.engine import TRANSFER
 
-    TRANSFER.reset()
-    yield
-    TRANSFER.reset()
+    with TRANSFER.scope():
+        yield
 
 
 @pytest.fixture
