@@ -21,8 +21,18 @@ rows via ``benchmarks.common``):
      the exact ``np.percentile`` (must agree within one log bucket), and
      the burn-rate blame decomposition of the drifted phase's violations
      (which server ate the violators' budgets).
+  5. **batched dispatch plane** — at saturation with a real per-dispatch
+     cost, ladder-batched dispatch must hold p99 at or below per-query
+     dispatch; deadline-aware admission at overload must improve the
+     *surviving* p99 (with the per-tenant shed fraction reported next to
+     it); SLO-driven hedging accounting; and the asyncio wall-clock
+     harness must reproduce the simulator's p50/p99 within the stated
+     <= 15% band at low load AND the batching win on a real clock.
 
-Usage: PYTHONPATH=src python -m benchmarks.serve_tail [out.json]
+Usage: PYTHONPATH=src python -m benchmarks.serve_tail [--smoke] [out.json]
+
+``--smoke`` shrinks the wall-clock harness runs (fewer queries, smaller
+time scale) for CI smoke passes; every assertion still fires.
 """
 from __future__ import annotations
 
@@ -101,7 +111,7 @@ def _serve_phase_with_controller(
     }
 
 
-def run(out_path: str = "BENCH_serve.json") -> dict:
+def run(out_path: str = "BENCH_serve.json", smoke: bool = False) -> dict:
     snb = snb_like(1, seed=0)
     f = snb.graph.object_sizes().astype(np.float32)
     shard = make_sharding("hash", snb.graph, N_SERVERS, seed=0)
@@ -303,6 +313,132 @@ def run(out_path: str = "BENCH_serve.json") -> dict:
         f"span tracing costs {overhead:.1%} — over the 2% budget"
     )
 
+    # ------------------------------------------------------------------ 5.
+    # the batched dispatch serving plane: ladder batching at saturation,
+    # deadline-aware admission at overload, SLO hedging accounting, and
+    # the wall-clock harness validation of all of it
+    from repro.core.slo import SLOSpec
+    from repro.serve import (
+        AdmissionConfig,
+        BatchingConfig,
+        HedgePolicy,
+        harness_simulate,
+    )
+
+    # 240 queries keeps the p99 estimate stable enough for the 15% band;
+    # the time scale stays at 5e-4 even in smoke runs — shrinking it
+    # pushes event-loop scheduling slop INTO the latencies being compared
+    n_val = 240 if smoke else 400
+    time_scale = 5e-4
+    batch_model = LatencyModel(dispatch_us=20.0)
+    val_ps = ps0.select_queries(0, min(n_val, ps0.n_queries))
+
+    # 5a. batching at saturation: scarce slots + a real per-dispatch cost
+    sat_kw = dict(rate_qps=120_000, model=batch_model, concurrency=2, seed=13)
+    pq = simulate(static_cluster, val_ps, **sat_kw)
+    bt = simulate(static_cluster, val_ps, batching=BatchingConfig(), **sat_kw)
+    batched_wins = bool(bt.p99_us <= pq.p99_us)
+    bsum = bt.batch_stats.summary()
+    emit("serve_tail", "p99_us", round(pq.p99_us, 1), dispatch="per_query")
+    emit("serve_tail", "p99_us", round(bt.p99_us, 1), dispatch="batched")
+    assert batched_wins, (
+        f"batched p99 {bt.p99_us:.1f} lost to per-query {pq.p99_us:.1f}"
+    )
+
+    # 5b. admission at overload: shed early, save the survivors' tail
+    adm_slo = SLOSpec.uniform(T, val_ps.n_queries)
+    adm_kw = dict(rate_qps=300_000, concurrency=2, seed=17, slo=adm_slo,
+                  model=model)
+    over = simulate(static_cluster, val_ps, **adm_kw)
+    shed = simulate(
+        static_cluster, val_ps, admission=AdmissionConfig(stretch=4.0),
+        **adm_kw,
+    )
+    surv = shed.surviving_latencies()
+    surv_p99 = float(np.percentile(surv, 99.0)) if surv.size else None
+    surviving_improves = bool(
+        surv_p99 is not None and 0.0 < shed.shed_frac < 1.0
+        and surv_p99 < over.p99_us
+    )
+    adm_sum = shed.summary()["admission"]
+    emit("serve_tail", "shed_frac", round(shed.shed_frac, 4))
+    assert surviving_improves, (
+        f"shedding did not improve surviving p99 "
+        f"({surv_p99} vs {over.p99_us:.1f} at shed {shed.shed_frac:.2f})"
+    )
+
+    # 5c. SLO-driven hedging: learned per-tenant threshold, cancellation
+    hed = simulate(
+        static_cluster, val_ps, rate_qps=30_000, concurrency=4, seed=19,
+        model=model, slo=adm_slo,
+        hedge=HedgePolicy(quantile=75.0, min_samples=32),
+    )
+    hed_sum = hed.summary().get("hedging", {})
+
+    # 5d. harness validation on a real clock: the stated <= 15% band at
+    # low load, and the batching win reproduced outside the simulator
+    har_kw = dict(rate_qps=20_000, concurrency=32, seed=23, model=model)
+    sim_lo = simulate(static_cluster, val_ps, **har_kw)
+    har_lo = harness_simulate(
+        static_cluster, val_ps, time_scale=time_scale, **har_kw
+    )
+    rel_err_p99 = abs(har_lo.p99_us - sim_lo.p99_us) / sim_lo.p99_us
+    rel_err_p50 = abs(har_lo.p50_us - sim_lo.p50_us) / sim_lo.p50_us
+    within_band = bool(rel_err_p99 <= 0.15 and rel_err_p50 <= 0.15)
+    emit("serve_tail", "harness_rel_err_p99", round(rel_err_p99, 4))
+    assert within_band, (
+        f"harness off the 15% band: p50 err {rel_err_p50:.3f}, "
+        f"p99 err {rel_err_p99:.3f}"
+    )
+    hpq = harness_simulate(
+        static_cluster, val_ps, time_scale=time_scale, **sat_kw
+    )
+    hbt = harness_simulate(
+        static_cluster, val_ps, time_scale=time_scale,
+        batching=BatchingConfig(), **sat_kw,
+    )
+    real_clock_win = bool(hbt.p99_us < hpq.p99_us)
+    emit("serve_tail", "harness_p99_us", round(hpq.p99_us, 1),
+         dispatch="per_query")
+    emit("serve_tail", "harness_p99_us", round(hbt.p99_us, 1),
+         dispatch="batched")
+    assert real_clock_win, (
+        f"batched harness p99 {hbt.p99_us:.1f} lost to per-query "
+        f"{hpq.p99_us:.1f} on the real clock"
+    )
+
+    result["batching"] = {
+        "n_queries": val_ps.n_queries,
+        "smoke": bool(smoke),
+        "saturation": {
+            "per_query_p99_us": round(pq.p99_us, 1),
+            "batched_p99_us": round(bt.p99_us, 1),
+            "batched_le_per_query": batched_wins,
+            **bsum,
+        },
+        "admission": {
+            "overloaded_p99_us": round(over.p99_us, 1),
+            "surviving_p99_us": round(surv_p99, 1),
+            "shed_frac": round(shed.shed_frac, 4),
+            "per_tenant_shed_frac": adm_sum["per_tenant_shed_frac"],
+            "surviving_improves": surviving_improves,
+        },
+        "hedging": hed_sum,
+        "harness": {
+            "sim_p50_us": round(sim_lo.p50_us, 1),
+            "sim_p99_us": round(sim_lo.p99_us, 1),
+            "harness_p50_us": round(har_lo.p50_us, 1),
+            "harness_p99_us": round(har_lo.p99_us, 1),
+            "rel_err_p50": round(rel_err_p50, 4),
+            "rel_err_p99": round(rel_err_p99, 4),
+            "within_band": within_band,
+            "per_query_p99_us": round(hpq.p99_us, 1),
+            "batched_p99_us": round(hbt.p99_us, 1),
+            "batched_wins_real_clock": real_clock_win,
+            "time_scale": time_scale,
+        },
+    }
+
     with open(out_path, "w") as fh:
         json.dump(result, fh, indent=2)
     print(f"# wrote {out_path}")
@@ -310,4 +446,7 @@ def run(out_path: str = "BENCH_serve.json") -> dict:
 
 
 if __name__ == "__main__":
-    run(sys.argv[1] if len(sys.argv) > 1 else "BENCH_serve.json")
+    argv = sys.argv[1:]
+    smoke = "--smoke" in argv
+    argv = [a for a in argv if a != "--smoke"]
+    run(argv[0] if argv else "BENCH_serve.json", smoke=smoke)

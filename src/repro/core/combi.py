@@ -58,6 +58,34 @@ def stacked_tables(H: int, t: int) -> tuple[np.ndarray, np.ndarray]:
     return tables, counts
 
 
+def iter_comb_rows(h: int, t: int, chunk_rows: int):
+    """Yield :func:`comb_table`'s rows in bounded chunks, lazily.
+
+    Same rows in the same order as ``comb_table(h, t)``, but the host only
+    ever materializes ``chunk_rows`` of them at once — the streamed table
+    construction for deep-path provisioning, where C(h, t) alone would
+    dwarf the per-chunk path residency :func:`~repro.core.greedy.replicate_stream`
+    otherwise bounds.  The combinations iterator is consumed on demand, so
+    producing chunk ``i + 1`` only starts after chunk ``i`` is handed off
+    (and, on device, scattered into the padded table and droppable).
+    """
+    if chunk_rows < 1:
+        raise ValueError("chunk_rows must be >= 1")
+    if h <= t:
+        yield np.ones((1, h + 1), dtype=bool)
+        return
+    it = itertools.combinations(range(1, h + 1), t)
+    while True:
+        block = list(itertools.islice(it, chunk_rows))
+        if not block:
+            return
+        chunk = np.zeros((len(block), h + 1), dtype=bool)
+        chunk[:, 0] = True
+        for r, subset in enumerate(block):
+            chunk[r, list(subset)] = True
+        yield chunk
+
+
 def n_candidates(h: int, t: int) -> int:
     if h <= t:
         return 1

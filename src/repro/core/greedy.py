@@ -324,6 +324,15 @@ class GreedyStats:
     # streamed ingestion: host seconds of chunk materialization hidden
     # behind in-flight device compute (the double-buffer pipeline's win)
     ingest_overlap_s: float = 0.0
+    # candidate-table residency: the largest host-resident block of
+    # C(h, t) selection rows ever built at once, and the total candidate
+    # rows shipped to device.  When a budget class's table would exceed
+    # ``_TABLE_STREAM_ROWS`` rows the construction streams through
+    # bounded chunks, so peak stays at the chunk size while total grows
+    # with C(H, t) — the residency contract replicate_stream surfaces in
+    # its StreamStats
+    table_peak_rows: int = 0
+    table_total_rows: int = 0
     # per-budget-class provisioning telemetry (obs-gated; None when the
     # telemetry plane is disabled): dicts of {budget, n_vec, n_seq,
     # n_candidates, routed_skips} in processing order
@@ -548,12 +557,60 @@ def _run_update_batches(
     return load, additions
 
 
+# host-residency bound on candidate-table construction: a budget class
+# whose padded C(h, t) table holds more rows than this is assembled on
+# device from streamed chunks instead of one host materialization
+_TABLE_STREAM_ROWS = 2048
+
+
+def _tables_to_device(H: int, b: int, stats: "GreedyStats | None" = None):
+    """Device candidate tables for budget b, streaming when they are big.
+
+    Small tables (padded row count <= ``_TABLE_STREAM_ROWS``) take the
+    cached :func:`combi.stacked_tables` host build — bit-identical to the
+    historical path.  Bigger tables are assembled *on device*: start from
+    ``jnp.ones`` (the same inert all-True padding the host build uses) and
+    scatter bounded row chunks from :func:`combi.iter_comb_rows` into
+    place, so host residency peaks at one chunk regardless of C(H, t).
+    The two constructions produce identical device arrays by design.
+    """
+    counts_np = np.array(
+        [combi.n_candidates(h, b) for h in range(H + 1)], np.int32
+    )
+    c_max = int(counts_np.max())
+    if c_max <= _TABLE_STREAM_ROWS:
+        tables_np, counts_full = combi.stacked_tables(H, b)
+        if stats is not None:
+            rows = (H + 1) * c_max  # the whole padded table is host-built
+            stats.table_peak_rows = max(stats.table_peak_rows, rows)
+            stats.table_total_rows += int(counts_np.sum())
+        return to_device(tables_np), to_device(counts_full)
+    tables = jnp.ones((H + 1, c_max, H + 1), dtype=bool)
+    peak = 0
+    total = 0
+    for h in range(H + 1):
+        r0 = 0
+        for chunk in combi.iter_comb_rows(h, b, _TABLE_STREAM_ROWS):
+            rows = chunk.shape[0]
+            tables = tables.at[h, r0 : r0 + rows, : h + 1].set(
+                to_device(chunk)
+            )
+            r0 += rows
+            peak = max(peak, rows)
+            total += rows
+    if stats is not None:
+        stats.table_peak_rows = max(stats.table_peak_rows, peak)
+        stats.table_total_rows += total
+    return tables, to_device(counts_np)
+
+
 def _budget_class_plan(
     ps: PathSet,
     t_path: np.ndarray,
     shard_j,
     max_candidates: int,
     skip_tables: bool = False,
+    stats: "GreedyStats | None" = None,
 ):
     """Bucket paths by distinct latency budget (ascending, tightest first).
 
@@ -586,8 +643,7 @@ def _budget_class_plan(
         if skip_tables:
             tables = counts = None
         else:
-            tables_np, counts_np = combi.stacked_tables(max(H_vec, b, 1), b)
-            tables, counts = to_device(tables_np), to_device(counts_np)
+            tables, counts = _tables_to_device(max(H_vec, b, 1), b, stats)
         plan.append((b, cls, vec_idx, seq_idx, h_all, tables, counts))
     return plan
 
@@ -693,7 +749,8 @@ def _routed_gate_fn(packed: PackedScheme, pol, backend: str, block: int = 128,
 
 
 def _routed_class_filter(
-    cls: PathSet, b: int, h_all: np.ndarray, routed_fn, max_candidates: int
+    cls: PathSet, b: int, h_all: np.ndarray, routed_fn, max_candidates: int,
+    stats: "GreedyStats | None" = None,
 ):
     """Rebuild one budget class's plan on the routed walk.
 
@@ -717,8 +774,8 @@ def _routed_class_filter(
     H_vec = combi.max_h_within_budget(b, max_candidates, H_needed)
     vec_idx = kept[h_all[kept] <= H_vec]
     seq_idx = kept[h_all[kept] > H_vec]
-    tables_np, counts_np = combi.stacked_tables(max(H_vec, b, 1), b)
-    return vec_idx, seq_idx, to_device(tables_np), to_device(counts_np), n_skipped
+    tables, counts = _tables_to_device(max(H_vec, b, 1), b, stats)
+    return vec_idx, seq_idx, tables, counts, n_skipped
 
 
 def _fused_setup(packed: PackedScheme, pol, load, fused: bool, mesh,
@@ -898,12 +955,12 @@ def replicate_workload(
         nonlocal srv_load
         for b, cls, vec_idx, seq_idx, h_all, tables, counts in _budget_class_plan(
             ps_run, t_run, shard_j, max_candidates,
-            skip_tables=routed_fn is not None,
+            skip_tables=routed_fn is not None, stats=stats,
         ):
             n_skip = 0
             if routed_fn is not None and cls.n_paths:
                 vec_idx, seq_idx, tables, counts, n_skip = _routed_class_filter(
-                    cls, b, h_all, routed_fn, max_candidates
+                    cls, b, h_all, routed_fn, max_candidates, stats=stats
                 )
                 stats.routed_skips += n_skip
             _obs_record_class(stats, b, len(vec_idx), len(seq_idx), counts, n_skip)
@@ -1107,12 +1164,12 @@ def replicate_delta(
         nonlocal srv_load, add_obj, add_srv
         for b, cls, vec_idx, seq_idx, h_all, tables, counts in _budget_class_plan(
             ps_run, t_run, shard_j, max_candidates,
-            skip_tables=routed_fn is not None,
+            skip_tables=routed_fn is not None, stats=stats,
         ):
             n_skip = 0
             if routed_fn is not None and cls.n_paths:
                 vec_idx, seq_idx, tables, counts, n_skip = _routed_class_filter(
-                    cls, b, h_all, routed_fn, max_candidates
+                    cls, b, h_all, routed_fn, max_candidates, stats=stats
                 )
                 stats.routed_skips += n_skip
             _obs_record_class(stats, b, len(vec_idx), len(seq_idx), counts, n_skip)
@@ -1314,6 +1371,10 @@ def replicate_stream(
         stats.fallback_paths += cstats.fallback_paths
         stats.routed_skips += cstats.routed_skips
         stats.routed_violations += cstats.routed_violations
+        stats.table_peak_rows = max(
+            stats.table_peak_rows, cstats.table_peak_rows
+        )
+        stats.table_total_rows += cstats.table_total_rows
         if cstats.timeline:
             stats.timeline = (stats.timeline or []) + cstats.timeline
 
@@ -1327,6 +1388,8 @@ def replicate_stream(
         scheme.mask = engine.packed.unpack()
     stats.replicas = scheme.replica_count()
     stats.peak_resident_paths = stream.stats.peak_resident_paths
+    stream.stats.peak_resident_table_rows = stats.table_peak_rows
+    stream.stats.total_table_rows = stats.table_total_rows
     stats.runtime_s = time.perf_counter() - t0
     if obs.enabled():
         obs.REGISTRY.gauge("repro.stream.ingest_overlap_s").set(overlap_s)

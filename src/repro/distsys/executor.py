@@ -53,6 +53,11 @@ class LatencyModel:
     remote_us: float = 60.0
     jitter_sigma: float = 0.15  # lognormal sigma on each term
     coordinator_us: float = 4.0  # result gathering / aggregation
+    # per-dispatch overhead (marshalling + engine/RPC launch): paid once
+    # per access in per-query serving, once per *batch* under the batched
+    # dispatch plane (repro.serve.batching) — the cost batching amortizes.
+    # 0.0 keeps every pre-batching number bit-identical.
+    dispatch_us: float = 0.0
 
     def sample(
         self, n_local: np.ndarray, n_remote: np.ndarray, rng: np.random.Generator
@@ -157,6 +162,66 @@ def trace_paths(
         **kw,
     )
     return np.asarray(servers), np.asarray(local)
+
+
+def trace_paths_batched(
+    pathset: PathSet,
+    scheme: ReplicationScheme,
+    alive: np.ndarray,
+    batches: list[tuple[np.ndarray, np.ndarray | None]],
+    policy=None,
+    load: np.ndarray | None = None,
+) -> list[tuple[np.ndarray, np.ndarray]]:
+    """One engine dispatch for MANY batches of paths (amortized launch).
+
+    ``batches`` is a list of ``(path_idx, start)`` pairs: the member path
+    rows of each batch and their optional per-path start servers (a
+    coordinator pick; ``None`` = home start).  The path subsets are
+    concatenated into a single ``access_trace`` call — one mask pack, one
+    device upload, one kernel launch — and the outputs are split back per
+    batch.  Row-for-row identical to calling :func:`trace_paths` once per
+    batch: the walk is per-path, so concatenation cannot change any row.
+
+    This is the engine entry point of the batched dispatch plane: the
+    serving layer coalesces same-window queries and pays the dispatch
+    overhead once per batch instead of once per query.
+    """
+    if not batches:
+        return []
+    objects = np.asarray(pathset.objects, np.int32)
+    lengths = np.asarray(pathset.lengths, np.int32)
+    idx_all = []
+    starts_all = []
+    any_start = any(st is not None for _, st in batches)
+    for idx, st in batches:
+        idx = np.asarray(idx, np.int64)
+        idx_all.append(idx)
+        if any_start:
+            starts_all.append(
+                np.full(len(idx), -1, np.int32)
+                if st is None
+                else np.asarray(st, np.int32)
+            )
+    cat = np.concatenate(idx_all)
+    sub = PathSet(
+        objects[cat],
+        lengths[cat],
+        np.arange(len(cat), dtype=np.int32),
+    )
+    start = np.concatenate(starts_all) if any_start else None
+    if start is not None and (start < 0).any():
+        # mixed home/coordinator starts: access_trace's start is all-or-
+        # nothing, so fill holes with the fail-over home of each root
+        home = failover_home(scheme, alive)
+        roots = np.maximum(objects[cat, 0], 0)
+        start = np.where(start >= 0, start, home[roots]).astype(np.int32)
+    servers, local = trace_paths(sub, scheme, alive, start, policy, load)
+    out = []
+    off = 0
+    for idx in idx_all:
+        out.append((servers[off: off + len(idx)], local[off: off + len(idx)]))
+        off += len(idx)
+    return out
 
 
 def _path_costs(

@@ -189,6 +189,12 @@ class StreamStats:
     # host seconds of chunk materialization hidden behind device compute
     # (filled by pipelined consumers; 0.0 for a strict pull-then-compute)
     ingest_overlap_s: float = 0.0
+    # candidate-table residency (filled by replicate_stream): the largest
+    # host block of C(h, t) selection rows ever materialized at once vs.
+    # the total rows shipped — peak < total proves the deep-path table
+    # construction streamed instead of landing whole on the host
+    peak_resident_table_rows: int = 0
+    total_table_rows: int = 0
 
 
 class PathStream:

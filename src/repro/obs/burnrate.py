@@ -39,6 +39,9 @@ class TenantBurn:
     tenant: str
     n_queries: int = 0
     n_violations: int = 0
+    # queries dropped by deadline-aware admission: shed != violated — a
+    # shed query failed fast by policy and never burned queue time
+    n_shed: int = 0
     allowed_frac: float = 0.01
     # per-server microseconds of queue wait inside violating queries —
     # the decomposition of where the burned budget actually went
@@ -52,6 +55,10 @@ class TenantBurn:
     @property
     def violation_frac(self) -> float:
         return self.n_violations / self.n_queries if self.n_queries else 0.0
+
+    @property
+    def shed_frac(self) -> float:
+        return self.n_shed / self.n_queries if self.n_queries else 0.0
 
     @property
     def burn_rate(self) -> float:
@@ -72,6 +79,8 @@ class TenantBurn:
         return {
             "n_queries": self.n_queries,
             "n_violations": self.n_violations,
+            "n_shed": self.n_shed,
+            "shed_frac": self.shed_frac,
             "violation_frac": self.violation_frac,
             "burn_rate": self.burn_rate,
             "top_server": top,
@@ -134,6 +143,11 @@ def attribute_burn(
     if len(tenants) <= 1 and tracer.n_completed:
         for tb in tenants.values():
             tb.n_queries = tracer.n_completed
+
+    # shed counts are exact (the tracer counts every finalize, sampled or
+    # not) — shed is reported NEXT TO violations, never folded into them
+    for tid, n in tracer.shed_counts.items():
+        tb_of(tid).n_shed += n
 
     for tr in tracer.violations:
         tb = tb_of(tr.tenant)

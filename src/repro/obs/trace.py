@@ -73,6 +73,10 @@ class QueryTrace:
     violated: bool               # latency > budget (always kept if True)
     failed: bool                 # hit an object with no alive copy
     policy: str
+    # deadline-aware admission dropped the query before serving it: a shed
+    # query is NOT a violation (it failed fast by design) — burn-rate
+    # attribution reports the two separately
+    shed: bool = False
     # raw access tuples (obj, server, local, t_enq, t_start, t_end, variant)
     # in dispatch order; Span objects are built lazily — the hot path never
     # allocates anything heavier than a tuple
@@ -134,6 +138,8 @@ class Tracer:
         self._n_completed = 0
         self._n_violations = 0
         self._n_spans = 0
+        self._n_shed = 0
+        self._shed_counts: dict[int, int] = {}  # tenant -> shed queries
         # deferred simulator run (begin_run/end_run): a flat raw-span list
         # plus the run's verdict arrays, folded in lazily by _materialize
         self._run_staging: list | None = None
@@ -169,15 +175,23 @@ class Tracer:
         return self._run_staging
 
     def end_run(
-        self, arrivals_us, completion_us, tenant_of, failed, local_us
+        self, arrivals_us, completion_us, tenant_of, failed, local_us,
+        shed=None,
     ) -> None:
-        """Close a simulator run: store the verdict arrays, defer the rest."""
+        """Close a simulator run: store the verdict arrays, defer the rest.
+
+        ``shed`` (bool [n_queries] or None) marks queries dropped by
+        deadline-aware admission: their traces carry ``shed=True`` and
+        are exempt from the violation verdict (fail-fast is the policy
+        working, not the SLO burning).
+        """
         self._run = (
             np.asarray(arrivals_us, np.float64),
             np.asarray(completion_us, np.float64),
             tenant_of,
             np.asarray(failed, bool),
             float(local_us),
+            np.asarray(shed, bool) if shed is not None else None,
         )
 
     def _materialize(self) -> None:
@@ -188,7 +202,7 @@ class Tracer:
         self._run_staging = self._run = None
         if run is None:  # begin_run without end_run: simulate() crashed
             return
-        arrivals, completion, tenant_of, failed, local_us = run
+        arrivals, completion, tenant_of, failed, local_us, shed = run
         per_q: list[list] = [[] for _ in range(self._run_n_queries)]
         # the flat stream is stride-3 (job, t_start, t_end): group by query
         for k in range(0, len(staging), 3):
@@ -210,6 +224,7 @@ class Tracer:
                 float(completion[q]),
                 int(tenant_of[q]) if tenant_of is not None else -1,
                 bool(failed[q]),
+                shed=bool(shed[q]) if shed is not None else False,
             )
 
     def budget_of(self, q: int) -> float | None:
@@ -227,11 +242,14 @@ class Tracer:
         completion_us: float,
         tenant: int = -1,
         failed: bool = False,
+        shed: bool = False,
     ) -> QueryTrace:
         """Close query ``q``'s trace and apply the sampling policy."""
         budget = self.budget_of(q)
         latency = completion_us - arrival_us
-        violated = budget is not None and latency > budget
+        # a shed query was never served: it cannot violate (fail-fast is
+        # the admission policy working), it is accounted separately
+        violated = not shed and budget is not None and latency > budget
         tr = QueryTrace(
             query=q,
             tenant=int(tenant),
@@ -241,9 +259,14 @@ class Tracer:
             violated=violated,
             failed=bool(failed),
             policy=self.policy,
+            shed=bool(shed),
             accesses=self._staging.pop(q, []),
         )
         self._n_completed += 1
+        if shed:
+            self._n_shed += 1
+            t = int(tenant)
+            self._shed_counts[t] = self._shed_counts.get(t, 0) + 1
         if violated:
             # tail bias: a violating query's trace is NEVER dropped
             self._n_violations += 1
@@ -277,6 +300,17 @@ class Tracer:
         return self._n_spans
 
     @property
+    def n_shed(self) -> int:
+        self._materialize()
+        return self._n_shed
+
+    @property
+    def shed_counts(self) -> dict[int, int]:
+        """Exact shed-query count per tenant id (-1: untagged run)."""
+        self._materialize()
+        return dict(self._shed_counts)
+
+    @property
     def traces(self) -> list[QueryTrace]:
         """Every kept trace (head + ring + all violators)."""
         self._materialize()
@@ -299,6 +333,8 @@ class Tracer:
         self._violations.clear()
         self._run_staging = self._run = None
         self._n_completed = self._n_violations = self._n_spans = 0
+        self._n_shed = 0
+        self._shed_counts.clear()
 
     def chrome_trace(self, path: str | None = None) -> dict:
         return chrome_trace(self.traces, path)

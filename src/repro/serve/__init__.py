@@ -18,7 +18,16 @@ traffic from millions of users").  Three pieces:
                 deferred), scheme deltas applied to the live Cluster,
                 RM-aware cold-replica eviction with demotion hysteresis
 """
+from repro.serve.batching import (
+    AdmissionConfig,
+    BatchLadder,
+    BatchStats,
+    BatchingConfig,
+    HedgePolicy,
+    derive_deadlines,
+)
 from repro.serve.simulator import SimReport, simulate
+from repro.serve.harness import harness_simulate
 from repro.serve.drift import (
     DriftPhase,
     PhaseDelta,
@@ -37,8 +46,15 @@ from repro.serve.controller import (
 )
 
 __all__ = [
+    "AdmissionConfig",
+    "BatchLadder",
+    "BatchStats",
+    "BatchingConfig",
+    "HedgePolicy",
+    "derive_deadlines",
     "SimReport",
     "simulate",
+    "harness_simulate",
     "DriftPhase",
     "PhaseDelta",
     "drift_stream",

@@ -73,6 +73,17 @@ class ControllerConfig:
     demote_after: int = 1                   # consecutive cold checks before
     #                                         a replica may be evicted
     tenants: tuple[TenantSpec, ...] = ()    # known tenants (budgets + SLOs)
+    # per-tenant cap on cumulative repair bytes: a scalar applies to every
+    # tenant, a dict maps tenant name -> cap (missing names are uncapped).
+    # The cap shapes *arbitration*, not repair itself: on a contended round
+    # a tenant over its quota ranks behind every under-quota competitor,
+    # so one tenant's runaway hotspot cannot monopolize the shared
+    # capacity/epsilon headroom round after round.  Aging still dominates —
+    # a tenant deferred for >= ``quota_grace`` consecutive steps is
+    # "starving" and wins the round outright even over quota, so a capped
+    # tenant with a persistent violation is delayed, never denied.
+    tenant_quota_bytes: float | dict | None = None
+    quota_grace: int = 3                    # deferred steps before starving
     # routing policy h is scored under for triggers / window re-checks
     # AND the policy repairs are priced under (replicate_delta(policy=)):
     # "home_first" (historical) or "nearest_copy" (the paper-faithful
@@ -262,6 +273,8 @@ class AdaptiveController:
         # deferred tenant wins the next contended round outright (oldest
         # first), so a persistently-cheap tenant can't starve the rest
         self._deferred_since: dict[str, int] = {}
+        # cumulative repair bytes attributed per tenant (quota accounting)
+        self._tenant_bytes: dict[str, float] = {}
         self.step = 0
         self.reports: list[AdaptationReport] = []
 
@@ -285,9 +298,24 @@ class AdaptiveController:
                 "p99_us": w.p99_us(),
                 "window_queries": w.n_queries,
                 "t_q": w.spec.t_q,
+                "repair_bytes": self._tenant_bytes.get(name, 0.0),
+                "quota_bytes": self._quota_of(name),
             }
             for name, w in self._tenants.items()
         }
+
+    def _quota_of(self, name: str) -> float | None:
+        q = self.config.tenant_quota_bytes
+        if q is None:
+            return None
+        if isinstance(q, dict):
+            v = q.get(name)
+            return None if v is None else float(v)
+        return float(q)
+
+    def _over_quota(self, name: str) -> bool:
+        cap = self._quota_of(name)
+        return cap is not None and self._tenant_bytes.get(name, 0.0) >= cap
 
     def _window_of(self, spec: TenantSpec) -> _TenantWindow:
         w = self._tenants.get(spec.name)
@@ -383,11 +411,20 @@ class AdaptiveController:
             # violation wins this round (estimated bytes / tenant weight,
             # so a paying tenant's violations buy proportionally more
             # bytes), everyone else is deferred (their windows still
-            # violate, so they re-trigger on a later observe()).  Aging
-            # breaks starvation: a tenant deferred on an earlier round
-            # outranks any weight or score on the next contended round.
+            # violate, so they re-trigger on a later observe()).  Quota
+            # caps rank an over-budget tenant behind every under-quota
+            # competitor; aging breaks starvation two ways: a *starving*
+            # tenant (deferred >= quota_grace consecutive steps) wins the
+            # round outright — even over quota — and among the rest an
+            # earlier deferral outranks any weight or score.
             scored = sorted(
                 (
+                    not (
+                        self.step
+                        - self._deferred_since.get(name, self.step)
+                        >= self.config.quota_grace
+                    ),
+                    self._over_quota(name),
                     self._deferred_since.get(name, self.step),
                     self._repair_score(name)
                     / self._tenants[name].spec.weight,
@@ -396,8 +433,8 @@ class AdaptiveController:
                 )
                 for name, trig in triggered
             )
-            repair = [(scored[0][2], scored[0][3])]
-            deferred = tuple(name for _, _, name, _ in scored[1:])
+            repair = [(scored[0][4], scored[0][5])]
+            deferred = tuple(name for *_, name, _ in scored[1:])
             for name in deferred:
                 self._deferred_since.setdefault(name, self.step)
         else:
@@ -584,6 +621,16 @@ class AdaptiveController:
             if self.f is None
             else self.f[add_obj]
         )
+        # quota accounting: the vector-budget pass does not attribute
+        # individual replicas to tenants, so a shared round splits its
+        # bytes evenly; contended rounds repair exactly one tenant, and
+        # there the attribution is exact
+        if len(add_obj) and repair:
+            share = float(np.sum(fv)) / len(repair)
+            for name, _ in repair:
+                self._tenant_bytes[name] = (
+                    self._tenant_bytes.get(name, 0.0) + share
+                )
         # re-evaluate every window against the repaired scheme: the stored
         # per-path latencies are stale and would re-trigger forever.  The
         # wall-clock latencies are dropped only for the REPAIRED tenants —

@@ -72,6 +72,12 @@ from repro.core.paths import PathSet
 from repro.distsys.cluster import Cluster
 from repro.distsys.executor import LatencyModel, _query_roots, trace_paths
 from repro.distsys.router import Router
+from repro.serve.batching import (
+    AdmissionConfig,
+    BatchingConfig,
+    BatchStats,
+    HedgePolicy,
+)
 
 
 @dataclasses.dataclass
@@ -99,9 +105,34 @@ class SimReport:
     # per-hop load feedback: remote-hop targets picked at dispatch time
     # against the queue state the batch itself built up
     hop_feedback: bool = False
+    # deadline-aware admission: True where the query was shed (fail-fast)
+    # instead of served; shed queries are excluded from surviving stats
+    query_shed: np.ndarray | None = None
+    # mixed open/closed-loop runs: True where the query was served by the
+    # closed-loop client pool (None for pure open/closed runs)
+    closed_mask: np.ndarray | None = None
+    # batched dispatch: ladder occupancy accounting (None = per-query)
+    batch_stats: BatchStats | None = None
+    # SLO-driven hedging accounting (slo_hedging marks the mode active)
+    slo_hedging: bool = False
+    hedges_fired: int = 0
+    hedge_wins: int = 0          # fired hedges whose backup completed first
+    hedges_cancelled: int = 0    # queued work skipped after first completion
 
     def percentile(self, q: float) -> float:
         return float(np.percentile(self.latency_us, q))
+
+    def surviving_latencies(self) -> np.ndarray:
+        """Latencies of queries that were actually served (not shed)."""
+        if self.query_shed is None:
+            return self.latency_us
+        return self.latency_us[~self.query_shed]
+
+    @property
+    def shed_frac(self) -> float:
+        if self.query_shed is None or not len(self.query_shed):
+            return 0.0
+        return float(self.query_shed.mean())
 
     def tenant_latencies(self, name: str) -> np.ndarray:
         """Sojourn latencies of one tenant's queries."""
@@ -175,6 +206,55 @@ class SimReport:
             out["hop_feedback"] = True
         if self.reroutes:
             out["reroutes"] = self.reroutes
+        if self.closed_mask is not None and 0 < self.closed_mask.sum() < len(
+            self.closed_mask
+        ):
+            # mixed run: split the latency distribution per loop so the
+            # closed-loop foreground's tail is visible against the
+            # open-loop background it contends with
+            out["mode"] = "mixed_loop"
+            for label, m in (
+                ("closed_loop_split", self.closed_mask),
+                ("open_loop_split", ~self.closed_mask),
+            ):
+                lat = self.latency_us[m]
+                out[label] = {
+                    "n_queries": int(lat.size),
+                    "p50_us": float(np.percentile(lat, 50.0)) if lat.size else None,
+                    "p99_us": float(np.percentile(lat, 99.0)) if lat.size else None,
+                }
+        if self.query_shed is not None:
+            surv = self.surviving_latencies()
+            adm = {
+                "n_shed": int(self.query_shed.sum()),
+                "shed_frac": self.shed_frac,
+                "surviving_p50_us": (
+                    float(np.percentile(surv, 50.0)) if surv.size else None
+                ),
+                "surviving_p99_us": (
+                    float(np.percentile(surv, 99.0)) if surv.size else None
+                ),
+            }
+            if self.tenant_of is not None:
+                adm["per_tenant_shed_frac"] = {
+                    name: float(self.query_shed[self.tenant_of == tid].mean())
+                    for tid, name in enumerate(self.tenant_names)
+                    if (self.tenant_of == tid).any()
+                }
+            out["admission"] = adm
+        if self.batch_stats is not None:
+            out["batching"] = self.batch_stats.summary()
+        if self.slo_hedging:
+            out["hedging"] = {
+                "fired": self.hedges_fired,
+                "wins": self.hedge_wins,
+                "cancelled": self.hedges_cancelled,
+                "hedge_frac": (
+                    self.hedges_fired / len(self.latency_us)
+                    if len(self.latency_us)
+                    else 0.0
+                ),
+            }
         if self.tenant_of is not None:
             per = {}
             for tid, name in enumerate(self.tenant_names):
@@ -292,6 +372,31 @@ def _build_dynamic_trees(pathset: PathSet):
     return trees
 
 
+def _tree_floors(trees) -> list[tuple[float, list[float]]]:
+    """Jitter-free critical-path floor per query and per tree node.
+
+    ``floors[q] = (root_floor, node_floors)`` where ``node_floors[i]`` is
+    the cost of node ``i``'s subtree critical path (its own access cost
+    plus the max over child subtrees) and ``root_floor`` the max over the
+    query's roots — the cheapest the query can possibly finish under the
+    active routing (excluding the coordinator barrier), the quantity
+    deadline-aware admission compares against the remaining slack.
+    Children are appended after their parent in ``_build_variant``, so one
+    reverse sweep resolves the recursion.
+    """
+    out: list[tuple[float, list[float]]] = []
+    for nodes, roots in trees:
+        nf = [0.0] * len(nodes)
+        for i in range(len(nodes) - 1, -1, -1):
+            best = 0.0
+            for c in nodes[i][3]:
+                if nf[c] > best:
+                    best = nf[c]
+            nf[i] = nodes[i][1] + best
+        out.append((max((nf[r] for r in roots), default=0.0), nf))
+    return out
+
+
 def simulate(
     cluster: Cluster,
     pathset: PathSet,
@@ -308,6 +413,10 @@ def simulate(
     clients: int | None = None,
     think_time_us: float = 0.0,
     trace=None,
+    batching: BatchingConfig | None = None,
+    admission: AdmissionConfig | None = None,
+    hedge: HedgePolicy | None = None,
+    closed_queries: np.ndarray | None = None,
 ) -> SimReport:
     """Serve ``pathset``'s queries through per-server FIFO queues.
 
@@ -354,6 +463,36 @@ def simulate(
     wall-clock ``budget_us``; violating queries' traces are always kept
     (tail-biased sampling).  ``trace=None`` (the default) costs one
     pointer check per access.
+
+    The batched dispatch plane (``repro.serve.batching``):
+
+    ``batching`` (a :class:`BatchingConfig`) coalesces accesses targeting
+    the same server within ``window_us`` into one dispatch of a
+    ladder-quantized size; the batch occupies a single concurrency slot
+    for the members' summed service time plus **one** ``dispatch_us``
+    (amortized engine-dispatch overhead — per-query mode pays it per
+    access).  Requires ``hop_feedback=False`` (batch members' routes are
+    fixed at collection time).
+
+    ``admission`` (an :class:`AdmissionConfig`) sheds queries whose
+    jitter-free floor under the active routing can no longer meet their
+    wall-clock deadline — at arrival, at every hop dispatch, and at FIFO
+    pop (elapsed queue wait counts against the slack).  Shed queries
+    complete degraded at the shed instant, are marked in
+    ``SimReport.query_shed``, and excluded from surviving-tail stats.
+
+    ``hedge`` (a :class:`HedgePolicy`, requires ``router=None``) races a
+    backup coordinator pick only for queries still incomplete when their
+    elapsed time crosses the tenant's learned latency quantile; the
+    first completion wins and the loser's queued work is skipped
+    (``hedges_cancelled``).  Completions feed the policy's per-tenant
+    histograms online, so thresholds adapt within the run.
+
+    ``closed_queries`` (requires ``clients=``) selects the subset of
+    query ids served by the closed-loop client pool while the rest
+    arrive open-loop at ``rate_qps`` — one run with an open-loop
+    background and a closed-loop foreground (interference studies);
+    ``summary()`` then splits per-loop percentiles.
     """
     from repro.engine.routing import pick_holder_host, resolve_policy
 
@@ -365,6 +504,43 @@ def simulate(
     hop_policy = resolve_policy(policy)
     hop_load = cluster.queue_depths() if hop_policy.uses_load else None
     closed = clients is not None
+    if batching is not None and hop_feedback:
+        raise ValueError(
+            "batching requires hop_feedback=False: batch members' routes "
+            "are fixed when the batch is collected"
+        )
+    if admission is not None and hop_feedback:
+        raise ValueError(
+            "admission requires hop_feedback=False: floor latencies need "
+            "precomputed access trees"
+        )
+    if hedge is not None:
+        if router is not None:
+            raise ValueError(
+                "hedge= requires router=None (the policy builds its own "
+                "primary/backup coordinator variants)"
+            )
+        if hop_feedback or reroute_every is not None:
+            raise ValueError(
+                "hedge= is incompatible with hop_feedback/reroute_every"
+            )
+    # mixed open/closed loop: closed_queries picks the client-pool subset
+    is_closed: np.ndarray | None = None
+    closed_ids: np.ndarray | None = None
+    if closed_queries is not None:
+        if not closed or int(clients) <= 0:
+            raise ValueError("closed_queries requires clients >= 1")
+        closed_ids = np.unique(np.asarray(closed_queries, np.int64))
+        if len(closed_ids) and (
+            closed_ids[0] < 0 or closed_ids[-1] >= nq
+        ):
+            raise ValueError("closed_queries out of range")
+        is_closed = np.zeros(nq, bool)
+        is_closed[closed_ids] = True
+    elif closed:
+        closed_ids = np.arange(nq, dtype=np.int64)
+        is_closed = np.ones(nq, bool)
+    mixed = is_closed is not None and 0 < len(closed_ids) < nq
     if hop_feedback:
         if router is not None:
             raise ValueError("hop_feedback requires router=None")
@@ -400,6 +576,11 @@ def simulate(
 
     # --- routing variants -------------------------------------------------
     coord_policy = router.policy if router is not None else "home"
+    if hedge is not None:
+        # SLO-driven hedging builds the same primary/backup variants as
+        # the router's unconditional hedged race, but launches the backup
+        # from a learned-quantile timer instead of at arrival
+        coord_policy = "hedge_slo"
     if hop_feedback:
         from repro.distsys.executor import failover_home
 
@@ -409,9 +590,12 @@ def simulate(
         variants_trees = [_build_dynamic_trees(pathset)]
         variants_dead = [np.zeros(nq, bool)]
         coords = [None]
-    elif router is not None and coord_policy in ("replica_lb", "hedged"):
+    elif coord_policy in ("replica_lb", "hedged", "hedge_slo"):
+        hrouter = (
+            router if router is not None else Router(cluster.scheme, "hedged")
+        )
         roots = _query_roots(pathset)
-        primary, backup = router.route_roots_hedged(roots, alive, seed=seed)
+        primary, backup = hrouter.route_roots_hedged(roots, alive, seed=seed)
         qids = np.asarray(pathset.query_ids)
         v1, d1 = _build_variant(
             pathset, cluster, model, alive, primary[qids],
@@ -444,7 +628,20 @@ def simulate(
             )
 
     # --- event loop -------------------------------------------------------
-    if closed:
+    if mixed:
+        # open-loop background keeps its schedule; the closed-loop
+        # foreground's times are filled at issue by the client pool
+        open_ids = np.nonzero(~is_closed)[0]
+        if arrivals_us is None:
+            arr = np.zeros(nq, np.float64)
+            arr[open_ids] = np.cumsum(
+                rng.exponential(1e6 / rate_qps, size=len(open_ids))
+            )
+            arrivals_us = arr
+        else:
+            arrivals_us = np.asarray(arrivals_us, np.float64).copy()
+            assert arrivals_us.shape == (nq,)
+    elif closed:
         arrivals_us = np.zeros(nq, np.float64)  # filled at issue time
     elif arrivals_us is None:
         arrivals_us = np.cumsum(
@@ -461,6 +658,27 @@ def simulate(
     failed = np.zeros(nq, bool)
     n_waits = 0
     wait_us = 0.0
+
+    # --- batched dispatch plane state ------------------------------------
+    # admission: per-variant jitter-free floors + wall-clock deadlines
+    query_shed = np.zeros(nq, bool) if admission is not None else None
+    deadlines = floors = None
+    if admission is not None:
+        deadlines = admission.deadlines(slo, model, pathset)
+        floors = [_tree_floors(v) for v in variants_trees]
+    # batching: per-server pending lists awaiting a window flush
+    pending: list[list] = [[] for _ in range(S)] if batching is not None else []
+    batch_stats = BatchStats() if batching is not None else None
+    obs_batch_hist = (
+        obs.REGISTRY.histogram("repro.serve.batch_occupancy")
+        if batching is not None and obs.enabled()
+        else None
+    )
+    # hedging: fired flags + win/cancel accounting
+    hedge_fired = np.zeros(nq, bool) if hedge is not None else None
+    hedges_fired = 0
+    hedge_wins = 0
+    hedges_cancelled = 0
 
     # a "job" is one access-tree node instance of one (query, variant)
     # launch: job = (query, variant, node_idx, server, base_service_us,
@@ -520,7 +738,21 @@ def simulate(
 
     def start_service(t, s, job):
         busy[s] += 1
-        svc = job[4] * jitter()
+        if job[0] == "batch":
+            # one concurrency slot serves the whole batch: the members'
+            # summed base cost plus a SINGLE amortized dispatch overhead
+            # (per-query mode pays dispatch_us once per access)
+            svc = job[3] * jitter()
+            busy_us[s] += svc
+            te = t + svc
+            if t_stage is not None:
+                for m in job[2]:
+                    t_stage(m)
+                    t_stage(t)
+                    t_stage(te)
+            push(te, "done", (s, job))
+            return
+        svc = (job[4] + model.dispatch_us) * jitter()
         busy_us[s] += svc
         te = t + svc
         if t_stage is not None:
@@ -530,6 +762,10 @@ def simulate(
         push(te, "done", (s, job))
 
     def dispatch(t, q, v, i, parent):
+        if query_shed is not None and query_shed[q]:
+            return
+        if hedge is not None and completion[q] >= 0:
+            return
         s, base, obj = resolve(q, v, i, parent)
         job = (q, v, i, s, base, obj, t)
         if s < 0:
@@ -538,48 +774,125 @@ def simulate(
                 failed[q] = True
             push(t + model.remote_us, "advance", job)
             return
+        if query_shed is not None and completion[q] < 0:
+            # remaining slack check at every hop: elapsed sojourn plus
+            # the subtree's jitter-free floor plus the barrier
+            if (
+                (t - arrivals_us[q]) + floors[v][q][1][i]
+                + model.coordinator_us > deadlines[q]
+            ):
+                shed_query(q, t)
+                return
+        if batching is not None:
+            pend = pending[s]
+            pend.append(job)
+            if len(pend) == 1:
+                # first pending access arms the server's window
+                push(t + batching.window_us, "flush", s)
+            return
         if busy[s] < concurrency:
             start_service(t, s, job)
         else:
             queues[s].append((t, job))
 
-    next_q = 0
+    next_ci = 0
     cur_variant = 0
     since_reroute = 0
     think = float(think_time_us)
 
-    def complete(q, t):
-        nonlocal next_q
-        completion[q] = t + model.coordinator_us
-        if closed and next_q < nq:
+    def client_next(q, t_free):
+        nonlocal next_ci
+        if closed and is_closed[q] and next_ci < len(closed_ids):
             # the freed client thinks, then issues the next query
             delay = rng.exponential(think) if think > 0 else 0.0
-            push(completion[q] + delay, "arrive", next_q)
-            next_q += 1
+            push(t_free + delay, "arrive", int(closed_ids[next_ci]))
+            next_ci += 1
+
+    def complete(q, t, v=0):
+        nonlocal hedge_wins
+        completion[q] = t + model.coordinator_us
+        if hedge is not None:
+            tid = int(tenant_of[q]) if tenant_of is not None else 0
+            hedge.observe(tid, completion[q] - arrivals_us[q])
+            if hedge_fired[q] and v == 1:
+                hedge_wins += 1
+        client_next(q, completion[q])
+
+    def shed_query(q, t):
+        # fail-fast: the query completes degraded at the shed instant;
+        # nothing below it dispatches, queued work is skipped at pop,
+        # and a closed-loop client is freed to issue its next query
+        query_shed[q] = True
+        completion[q] = t
+        client_next(q, t)
+
+    def skip_job(job, t):
+        """Lazily drop queued work that no longer needs serving."""
+        nonlocal hedges_cancelled
+        if job[0] == "batch":
+            return False  # batch cost was committed at flush time
+        q = job[0]
+        if query_shed is not None:
+            if query_shed[q]:
+                return True
+            if completion[q] < 0 and (
+                (t - arrivals_us[q]) + floors[job[1]][q][1][job[2]]
+                + model.coordinator_us > deadlines[q]
+            ):
+                # the FIFO wait ate the slack: shed at pop time
+                shed_query(q, t)
+                return True
+        if hedge is not None and completion[q] >= 0:
+            hedges_cancelled += 1
+            return True
+        return False
 
     def advance(t, job):
+        nonlocal hedges_cancelled
         q, v, i, s = job[0], job[1], job[2], job[3]
-        children = variants_trees[v][q][0][i][-1]
-        for child in children:
-            dispatch(t, q, v, child, s)
+        shed_q = query_shed is not None and query_shed[q]
+        won = hedge is not None and completion[q] >= 0 and not shed_q
+        if shed_q or won:
+            # cancellation-on-first-completion / fail-fast: the subtree
+            # below a dead attempt never dispatches (the router's
+            # unconditional ``hedged`` mode keeps racing both — hedging's
+            # capacity price — only the SLO-driven policy cancels)
+            if won:
+                hedges_cancelled += len(variants_trees[v][q][0][i][-1])
+        else:
+            for child in variants_trees[v][q][0][i][-1]:
+                dispatch(t, q, v, child, s)
         remaining[(q, v)] -= 1
         if remaining[(q, v)] == 0 and completion[q] < 0:
-            complete(q, t)
+            complete(q, t, v)
 
     def launch(t, q, v):
+        """Dispatch one (query, variant); False = refused by admission."""
+        if query_shed is not None:
+            if query_shed[q]:
+                return False
+            if completion[q] < 0 and (
+                (t - arrivals_us[q]) + floors[v][q][0]
+                + model.coordinator_us > deadlines[q]
+            ):
+                return False
         nodes, roots = variants_trees[v][q]
         remaining[(q, v)] = len(nodes)
         if not nodes:
             if completion[q] < 0:
-                complete(q, t)
-            return
+                complete(q, t, v)
+            return True
         for i in roots:
             dispatch(t, q, v, i, -2)
+        return True
 
     if closed:
-        for _ in range(min(int(clients), nq)):
-            push(0.0, "arrive", next_q)
-            next_q += 1
+        for _ in range(min(int(clients), len(closed_ids))):
+            push(0.0, "arrive", int(closed_ids[next_ci]))
+            next_ci += 1
+        if mixed:
+            for q in open_ids:
+                push(float(arrivals_us[q]), "arrive", int(q))
     else:
         for q in range(nq):
             push(float(arrivals_us[q]), "arrive", q)
@@ -615,13 +928,15 @@ def simulate(
                 vd[int(g)] = bool(vd_sub[li])
         variants_trees.append(vt)
         variants_dead.append(vd)
+        if floors is not None:
+            floors.append(_tree_floors(vt))
         return len(variants_trees) - 1
 
     while heap:
         t, _, kind, data = heapq.heappop(heap)
         if kind == "arrive":
             q = data
-            if closed:
+            if closed and is_closed[q]:
                 arrivals_us[q] = t
             arrivals_left -= 1
             if arrivals_left == 0:
@@ -646,11 +961,28 @@ def simulate(
             arrived_flag[q] = True
             if coord_policy == "hedged":
                 # race both coordinator picks; first completion wins
-                launch(t, q, 0)
-                failed[q] = variants_dead[0][q]
-                if coords[1][q] >= 0:
-                    launch(t, q, 1)
-                    failed[q] = failed[q] and variants_dead[1][q]
+                ok0 = launch(t, q, 0)
+                ok1 = launch(t, q, 1) if coords[1][q] >= 0 else False
+                if ok0 or ok1:
+                    d0 = bool(variants_dead[0][q]) if ok0 else True
+                    d1 = bool(variants_dead[1][q]) if ok1 else True
+                    failed[q] = d0 and d1
+                elif completion[q] < 0:
+                    shed_query(q, t)
+            elif coord_policy == "hedge_slo":
+                # primary only; the backup fires from a learned-quantile
+                # timer if the query is still incomplete by then
+                if launch(t, q, 0):
+                    failed[q] = variants_dead[0][q]
+                    if coords[1][q] >= 0:
+                        tid = (
+                            int(tenant_of[q]) if tenant_of is not None else 0
+                        )
+                        th = hedge.threshold_us(tid)
+                        if th is not None:
+                            push(t + th, "hedge", q)
+                elif completion[q] < 0:
+                    shed_query(q, t)
             elif coord_policy == "replica_lb":
                 # queue-aware: per arrival, the less-loaded coordinator
                 c1, c2 = int(coords[0][q]), int(coords[1][q])
@@ -659,22 +991,72 @@ def simulate(
                     l1 = busy[c1] + len(queues[c1])
                     l2 = busy[c2] + len(queues[c2])
                     v = 1 if l2 < l1 else 0
-                launch(t, q, v)
-                failed[q] = variants_dead[v][q]
+                if launch(t, q, v):
+                    failed[q] = variants_dead[v][q]
+                elif completion[q] < 0:
+                    shed_query(q, t)
             else:
-                launch(t, q, cur_variant)
-                # OR, not assignment: a hop-feedback launch may already
-                # have flagged the query dead at dispatch time
-                failed[q] = failed[q] or bool(variants_dead[cur_variant][q])
+                if launch(t, q, cur_variant):
+                    # OR, not assignment: a hop-feedback launch may already
+                    # have flagged the query dead at dispatch time
+                    failed[q] = failed[q] or bool(
+                        variants_dead[cur_variant][q]
+                    )
+                elif completion[q] < 0:
+                    shed_query(q, t)
         elif kind == "done":
             s, job = data
             busy[s] -= 1
-            if queues[s]:
+            while queues[s]:
                 t_enq, nxt = queues[s].popleft()
+                if skip_job(nxt, t):
+                    continue
                 n_waits += 1
                 wait_us += t - t_enq
                 start_service(t, s, nxt)
-            advance(t, job)
+                break
+            if job[0] == "batch":
+                for m in job[2]:
+                    advance(t, m)
+            else:
+                advance(t, job)
+        elif kind == "flush":
+            s = data
+            pend = pending[s]
+            if not pend:
+                continue
+            live = [j for j in pend if not skip_job(j, t)]
+            take = batching.ladder.pick(len(live)) if live else 0
+            members = live[:take]
+            pending[s] = live[take:]
+            if pending[s]:
+                # leftovers flush immediately at the next ladder rung —
+                # a deep backlog drains in rung-sized chunks without
+                # re-arming the collection window
+                push(t, "flush", s)
+            if not members:
+                continue
+            total = model.dispatch_us + sum(j[4] for j in members)
+            wrapper = ("batch", s, tuple(members), total)
+            batch_stats.observe(len(members))
+            if obs_batch_hist is not None:
+                obs_batch_hist.record(float(len(members)))
+            if busy[s] < concurrency:
+                start_service(t, s, wrapper)
+            else:
+                queues[s].append((t, wrapper))
+        elif kind == "hedge":
+            q = data
+            if completion[q] >= 0 or (
+                query_shed is not None and query_shed[q]
+            ):
+                continue  # completed (or shed) before the timer: no hedge
+            if hedges_fired >= hedge.max_hedges_frac * nq:
+                continue  # capacity guard
+            if launch(t, q, 1):
+                hedges_fired += 1
+                hedge_fired[q] = True
+                failed[q] = failed[q] and bool(variants_dead[1][q])
         else:  # "advance" (degraded hop completion)
             job = data
             if t_stage is not None and job[3] < 0:
@@ -701,7 +1083,7 @@ def simulate(
         # head/ring/violator sampling all happen lazily on first access,
         # so none of it is billed to the simulated run's wall clock
         trace.end_run(arrivals_us, completion, tenant_of, failed,
-                      model.local_us)
+                      model.local_us, shed=query_shed)
     if obs.enabled():
         obs.REGISTRY.histogram("repro.serve.latency_us").record_many(
             completion - arrivals_us
@@ -711,6 +1093,15 @@ def simulate(
         obs.REGISTRY.gauge("repro.serve.mean_queue_wait_us").set(
             wait_us / n_waits if n_waits else 0.0
         )
+        if query_shed is not None:
+            obs.REGISTRY.counter("repro.serve.shed").inc(
+                int(query_shed.sum())
+            )
+        if hedge is not None:
+            obs.REGISTRY.counter("repro.serve.hedges_fired").inc(
+                hedges_fired
+            )
+            obs.REGISTRY.counter("repro.serve.hedge_wins").inc(hedge_wins)
 
     return SimReport(
         latency_us=completion - arrivals_us,
@@ -728,4 +1119,11 @@ def simulate(
         policy=hop_policy.name,
         reroutes=reroutes,
         hop_feedback=hop_feedback,
+        query_shed=query_shed,
+        closed_mask=is_closed if mixed else None,
+        batch_stats=batch_stats,
+        slo_hedging=hedge is not None,
+        hedges_fired=hedges_fired,
+        hedge_wins=hedge_wins,
+        hedges_cancelled=hedges_cancelled,
     )

@@ -175,6 +175,39 @@ def test_stream_equals_chunked_deltas(rng):
     assert stream.stats.chunks == len(chunks)
 
 
+def test_stream_tables_bounded_residency(rng, monkeypatch):
+    """Deep-path candidate tables stream in bounded chunks, identically.
+
+    Forcing the stream threshold down makes every budget class take the
+    device-assembled construction; the resulting scheme must be
+    bit-identical to the host-stacked build, and the StreamStats must
+    show peak table residency pinned at the chunk size — strictly below
+    the total candidate rows shipped (a genuine stream, not a rename).
+    """
+    from repro.core import greedy as greedy_mod
+
+    ps, shard, n_srv, f = _case(rng, n_paths=120)
+    base, _ = replicate_workload(ps, shard, n_srv, t=2, f=f)
+    monkeypatch.setattr(greedy_mod, "_TABLE_STREAM_ROWS", 3)
+    forced, fstats = replicate_workload(ps, shard, n_srv, t=2, f=f)
+    assert np.array_equal(base.mask, forced.mask)
+    assert 0 < fstats.table_peak_rows <= 3
+    assert fstats.table_peak_rows < fstats.table_total_rows
+
+    chunk = 40
+    chunks = [ps.select(np.arange(i, min(i + chunk, ps.n_paths)))
+              for i in range(0, ps.n_paths, chunk)]
+    stream = PathStream(iter(chunks))
+    _, sstats = replicate_stream(stream, shard, n_srv, t=2, f=f, fused=True)
+    assert stream.stats.peak_resident_table_rows == sstats.table_peak_rows
+    assert stream.stats.total_table_rows == sstats.table_total_rows
+    assert 0 < stream.stats.peak_resident_table_rows <= 3
+    assert (
+        stream.stats.peak_resident_table_rows
+        < stream.stats.total_table_rows
+    )
+
+
 def test_stream_per_chunk_budgets_and_single_use(rng):
     ps, shard, n_srv, f = _case(rng, n_paths=60)
     a, b = ps.select(np.arange(30)), ps.select(np.arange(30, 60))

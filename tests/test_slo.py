@@ -421,3 +421,90 @@ def test_controller_low_weight_tenant_cannot_starve():
 def test_tenant_weight_must_be_positive():
     with pytest.raises(ValueError):
         TenantSpec("bad", 1, weight=0.0)
+
+
+# ---------------------------------------------------------------------------
+# per-tenant capacity quotas (PR 8)
+# ---------------------------------------------------------------------------
+def test_controller_quota_caps_arbitration_until_grace():
+    """A tenant over its repair-bytes quota loses contended rounds it
+    would otherwise win, until quota_grace deferred steps mark it starving
+    and it wins outright — delayed, never denied."""
+    from repro.core import ReplicationScheme
+
+    n_srv = 4
+    n_obj = 96
+    shard = (np.arange(n_obj) % n_srv).astype(np.int32)
+    tenants = (TenantSpec("hot", 0), TenantSpec("cold", 0))
+
+    def batch(offset, hot_only=False):
+        # hot: fresh 2-object crossings (1 marginal byte per violation);
+        # cold: fresh 4-object chains (3 marginal bytes per violation) —
+        # so absent a quota, "hot" always wins the contended round
+        hot = [[offset + i, offset + i + 1] for i in range(0, 6, 2)]
+        cold = [] if hot_only else [
+            [48 + offset + i + j for j in range(4)] for i in range(0, 8, 4)
+        ]
+        ps = PathSet.from_lists(
+            hot + cold, query_ids=list(range(len(hot) + len(cold)))
+        )
+        slo = SLOSpec.from_tenants(
+            tenants,
+            np.asarray([0] * len(hot) + [1] * len(cold), np.int32),
+        )
+        return ps, slo
+
+    scheme = ReplicationScheme.from_sharding(shard, n_srv)
+    ctl = AdaptiveController(
+        Cluster(scheme),
+        ControllerConfig(
+            tenants=tenants, window=256, min_queries=1,
+            capacity=float(n_obj),
+            tenant_quota_bytes={"hot": 1.0}, quota_grace=2,
+        ),
+    )
+    # round 1: only "hot" violates (uncontended) -> its repair lands and
+    # pushes its cumulative bytes over the 1.0 quota
+    ps1, slo1 = batch(0, hot_only=True)
+    r1 = ctl.observe(ps1, slo=slo1)
+    assert r1 is not None and r1.tenants == ("hot",)
+    assert ctl.tenant_stats()["hot"]["repair_bytes"] > 1.0
+    assert ctl.tenant_stats()["hot"]["quota_bytes"] == 1.0
+
+    # round 2: contended; "hot" has the cheaper score but is over quota,
+    # so "cold" wins the round it would otherwise lose
+    ps2, slo2 = batch(8)
+    r2 = ctl.observe(ps2, slo=slo2)
+    assert r2.tenants == ("cold",) and r2.deferred == ("hot",)
+
+    # round 3: still over quota, deferred only 1 step (< grace): capped
+    ps3, slo3 = batch(16)
+    r3 = ctl.observe(ps3, slo=slo3)
+    assert r3.tenants == ("cold",) and r3.deferred == ("hot",)
+
+    # round 4: deferred 2 steps >= quota_grace -> starving, wins outright
+    ps4, slo4 = batch(24)
+    r4 = ctl.observe(ps4, slo=slo4)
+    assert r4.tenants == ("hot",)
+    assert "cold" in r4.deferred
+
+
+def test_controller_scalar_quota_and_uncapped_default():
+    """A scalar quota applies to every tenant; no quota reproduces the
+    historical cheapest-byte arbitration bit-for-bit."""
+    from repro.core import ReplicationScheme
+
+    ps, shard, slo, n_obj, n_srv = _two_tenant_batch()
+    scheme = ReplicationScheme.from_sharding(shard, n_srv)
+    ctl = AdaptiveController(
+        Cluster(scheme),
+        ControllerConfig(
+            tenants=slo.tenants, window=64, min_queries=1,
+            capacity=float(n_obj), tenant_quota_bytes=1e9,
+        ),
+    )
+    # nobody is over a huge scalar quota: the historical winner holds
+    report = ctl.observe(ps, slo=slo)
+    assert report.tenants == ("cheap",)
+    assert report.deferred == ("costly",)
+    assert ctl.tenant_stats()["cheap"]["quota_bytes"] == 1e9
