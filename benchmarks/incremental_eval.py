@@ -1,0 +1,236 @@
+"""Incremental dirty-set evaluation benchmark: the controller drift-repair
+loop with and without the persistent latency cache.
+
+The scenario is the serve plane's steady state: a controller holds a
+sizable window of served paths (the resident workload), a drift phase
+flips, and ``replicate_delta`` ships a small repair — after which every
+windowed entry must be re-judged against the mutated scheme.  The full
+path re-evaluates the whole window; the incremental path
+(``path_latencies(..., incremental=True)``) re-walks only the paths
+touching the repair's objects — the exact dirty set of the engine's
+object->path index — as one gather-compacted block.
+
+Per drift family (the PR-5 trio: SNB hot-community flips, GNN sampled
+fan-outs, recsys user/item skew):
+
+  1. provision phase 0 from scratch (``replicate_workload``,
+     ``return_engine=True``) and tile the phase-0 paths into a
+     controller-scale window;
+  2. seed the incremental cache with one cold evaluation (checked
+     bit-identical to the direct evaluation);
+  3. for each later phase: repair the phase's delta paths
+     (``replicate_delta`` — its additions invalidate the cache through
+     ``engine.note_changed``), then time ``REPS`` window re-checks both
+     ways, re-dirtying the cache before each incremental rep so every
+     rep pays the real dirty re-walk, not a clean cache hit.
+
+Headline keys (asserted here, gated by ``check_regress``):
+
+  * ``bit_identical``       — every timed incremental result equals the
+                              full evaluation, all families, all phases;
+  * ``min_speedup``         — min over families of (full re-check time /
+                              incremental re-check time) >= 4x;
+  * ``mean_dirty_fraction`` — mean |dirty| / |window| across repairs
+                              (the locality the speedup is made of).
+
+Usage: PYTHONPATH=src python -m benchmarks.incremental_eval [--smoke] [out.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import replicate_delta, replicate_workload
+from repro.core.paths import PathSet
+from repro.engine import PathIndex
+from repro.serve import drift_stream, gnn_drift, recsys_drift, snb_drift
+
+N_SERVERS = 6
+T = 1
+# the routed policy the serve plane scores with: heavier per-path walks
+# than home_first, i.e. the evaluation cost the dirty set actually saves
+SCORE_POLICY = "nearest_copy"
+REPS = 5
+# wall-clock ceiling of default_grid_point() — the tier-1 guard
+# (tests/test_incremental.py) runs that one point and asserts this bound
+DEFAULT_BUDGET_S = 120.0
+
+
+def _families(smoke: bool):
+    """(name, drift phases, shard, f) per workload family (PR-5 trio)."""
+    from repro.graph import make_sharding, snb_like
+
+    q = 120 if smoke else 320
+    snb = snb_like(1, seed=0)
+    g = snb.graph
+    f_g = g.object_sizes().astype(np.float32)
+    shard_g = make_sharding("hash", g, N_SERVERS, seed=0)
+
+    yield (
+        "snb",
+        snb_drift(snb, n_phases=3, queries_per_phase=q, hot_prob=0.9, seed=0),
+        shard_g,
+        f_g,
+    )
+    yield (
+        "gnn",
+        gnn_drift(g, n_phases=3, queries_per_phase=max(q // 2, 60),
+                  fanouts=(5, 3), hot_prob=0.9, seed=0),
+        shard_g,
+        f_g,
+    )
+    n_users, n_items = 600, 4000
+    yield (
+        "recsys",
+        recsys_drift(n_users, n_items, n_phases=3, queries_per_phase=q,
+                     hot_prob=0.9, seed=0),
+        np.concatenate(
+            [np.arange(n_users) % N_SERVERS, np.arange(n_items) % N_SERVERS]
+        ).astype(np.int32),
+        np.ones(n_users + n_items, np.float32),
+    )
+
+
+def _tile(ps: PathSet, target_paths: int) -> PathSet:
+    """Controller-scale window: the phase's paths tiled up to
+    ``target_paths`` rows.
+
+    A sliding window holds every recently served batch, so the same hot
+    paths appear many times across entries; re-checking the window costs
+    the *total* path count.  Tiling reproduces that cost shape in one
+    PathSet (identical rows dirty together, so the dirty *fraction* is
+    unchanged — the speedup is not an artifact of the tiling), and
+    tiling every family to the same window size keeps the comparison
+    about dirty locality, not each generator's path yield.
+    """
+    k = max(1, -(-target_paths // max(ps.n_paths, 1)))
+    return PathSet.concatenate([ps] * k)
+
+
+def _bench_family(name, phases, shard, f, smoke, result):
+    deltas = list(drift_stream(phases))
+    window = _tile(deltas[0].pathset, 4000 if smoke else 12000)
+    _, _, eng = replicate_workload(
+        deltas[0].pathset, shard, N_SERVERS, t=T, f=f, return_engine=True,
+        policy=SCORE_POLICY, policy_prune=False,
+    )
+    n_obj = int(np.asarray(shard).shape[0])
+    index = PathIndex(np.asarray(window.objects), n_obj)
+
+    # cold seed: first incremental call = one full evaluation + cache fill
+    t0 = time.perf_counter()
+    h_cold = eng.path_latencies(window, policy=SCORE_POLICY, incremental=True)
+    cold_s = time.perf_counter() - t0
+    bit_identical = bool(np.array_equal(
+        h_cold, eng.path_latencies(window, policy=SCORE_POLICY)
+    ))
+
+    full_s = []
+    inc_s = []
+    dirty_fracs = []
+    for d in deltas[1:]:
+        if d.added.n_paths == 0:
+            continue
+        _, (ao, _) = replicate_delta(
+            d.added, eng, T, f=f, policy=SCORE_POLICY
+        )
+        if not len(ao):
+            continue
+        dirty_fracs.append(
+            len(index.dirty_paths(ao)) / max(window.n_paths, 1)
+        )
+        # warm both code paths once so neither arm pays first-trace jit
+        # compilation inside the timed region
+        eng.note_changed(ao)
+        h_inc = eng.path_latencies(
+            window, policy=SCORE_POLICY, incremental=True
+        )
+        h_full = eng.path_latencies(window, policy=SCORE_POLICY)
+        bit_identical = bit_identical and bool(np.array_equal(h_inc, h_full))
+
+        t0 = time.perf_counter()
+        for _ in range(REPS):
+            h_full = eng.path_latencies(window, policy=SCORE_POLICY)
+        full_s.append((time.perf_counter() - t0) / REPS)
+
+        t0 = time.perf_counter()
+        for _ in range(REPS):
+            # re-dirty the repair's rows: each rep pays the genuine
+            # invalidate -> gather -> re-walk -> scatter cycle
+            eng.note_changed(ao)
+            h_inc = eng.path_latencies(
+                window, policy=SCORE_POLICY, incremental=True
+            )
+        inc_s.append((time.perf_counter() - t0) / REPS)
+        bit_identical = bit_identical and bool(np.array_equal(h_inc, h_full))
+
+    speedup = float(np.sum(full_s) / max(np.sum(inc_s), 1e-9))
+    fam = {
+        "window_paths": window.n_paths,
+        "repairs": len(full_s),
+        "cold_eval_s": round(cold_s, 4),
+        "full_recheck_s": round(float(np.mean(full_s)), 5),
+        "inc_recheck_s": round(float(np.mean(inc_s)), 5),
+        "speedup": round(speedup, 2),
+        "dirty_fraction": round(float(np.mean(dirty_fracs)), 4),
+        "bit_identical": bit_identical,
+    }
+    result["families"][name] = fam
+    emit("incremental", "speedup", fam["speedup"], family=name)
+    emit("incremental", "dirty_fraction", fam["dirty_fraction"], family=name)
+    emit("incremental", "full_recheck_s", fam["full_recheck_s"], family=name)
+    emit("incremental", "inc_recheck_s", fam["inc_recheck_s"], family=name)
+    return fam
+
+
+def default_grid_point(smoke: bool = True) -> dict:
+    """The single (family x scale) cell the tier-1 wall-clock guard runs:
+    the SNB drift family at smoke scale (one provisioning pass, two
+    repairs, REPS timed re-checks each way)."""
+    result: dict = {"families": {}}
+    name, phases, shard, f = next(iter(_families(smoke)))
+    return _bench_family(name, phases, shard, f, smoke, result)
+
+
+def run(out_path: str = "BENCH_incremental.json", smoke: bool = False) -> dict:
+    result: dict = {
+        "t": T,
+        "score_policy": SCORE_POLICY,
+        "n_servers": N_SERVERS,
+        "reps": REPS,
+        "smoke": smoke,
+        "families": {},
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+    }
+    for name, phases, shard, f in _families(smoke):
+        _bench_family(name, phases, shard, f, smoke, result)
+
+    fams = result["families"].values()
+    result["bit_identical"] = bool(all(f["bit_identical"] for f in fams))
+    result["min_speedup"] = round(min(f["speedup"] for f in fams), 2)
+    result["mean_dirty_fraction"] = round(
+        float(np.mean([f["dirty_fraction"] for f in fams])), 4
+    )
+    assert result["bit_identical"], (
+        "incremental window re-checks diverged from full re-evaluation"
+    )
+    assert result["min_speedup"] >= 4.0, (
+        "incremental re-check must be >= 4x faster than the full window "
+        f"re-evaluation on every drift family (min {result['min_speedup']}x)"
+    )
+
+    with open(out_path, "w") as fh:
+        json.dump(result, fh, indent=2)
+    print(f"# wrote {out_path}")
+    return result
+
+
+if __name__ == "__main__":
+    args = [a for a in sys.argv[1:]]
+    smoke = "--smoke" in args
+    args = [a for a in args if a != "--smoke"]
+    run(args[0] if args else "BENCH_incremental.json", smoke=smoke)

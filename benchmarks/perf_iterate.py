@@ -100,6 +100,27 @@ def run_engine(ts=(0, 1, 2, 3), n_queries=1500) -> dict:
 
     assert resident_cdfs == legacy_cdfs  # identical results either way
     ratio = legacy["h2d_bytes"] / max(resident["h2d_bytes"], 1)
+
+    # incremental dirty-set re-check profile: after a small scheme delta,
+    # the cached path goes back over the bus with one compacted dirty-row
+    # index vector (TRANSFER.gathered_bytes) instead of the full path
+    # block a cold evaluation streams — the h2d savings satellite of the
+    # incremental engine, kept visible here so they never silently vanish
+    # from the accounting
+    TRANSFER.reset()
+    t_inc = ts[-1]
+    scheme, stats, eng = replicate_workload(
+        ps, shard, 6, t_inc, f=f, return_engine=True)
+    pl_cold = eng.path_latencies(ps, incremental=True)   # seeds the cache
+    cold = TRANSFER.snapshot()
+    TRANSFER.reset()
+    rng = np.random.default_rng(0)
+    delta_obj = rng.integers(0, shard.shape[0], 32)
+    eng.add_replicas(delta_obj, rng.integers(0, 6, 32))
+    pl_warm = eng.path_latencies(ps, incremental=True)   # dirty rows only
+    warm = TRANSFER.snapshot()
+    assert np.array_equal(pl_warm, eng.path_latencies(ps))  # bit-identical
+
     return {
         "paths": ps.n_paths,
         "objects": int(shard.shape[0]),
@@ -110,6 +131,12 @@ def run_engine(ts=(0, 1, 2, 3), n_queries=1500) -> dict:
         "legacy_h2d_calls": legacy["h2d_calls"],
         "h2d_ratio": round(ratio, 2),
         "meets_2x": bool(ratio >= 2.0),
+        "incremental_cold_h2d_bytes": cold["h2d_bytes"],
+        "incremental_warm_h2d_bytes": warm["h2d_bytes"],
+        "incremental_gathered_bytes": warm["gathered_bytes"],
+        "incremental_h2d_ratio": round(
+            cold["h2d_bytes"] / max(warm["h2d_bytes"], 1), 2
+        ),
     }
 
 

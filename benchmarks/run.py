@@ -20,6 +20,9 @@
   provisioning_scale    — fused UPDATE megakernel vs separate dispatch
                           (bit-identical, >= 5x) + servers x paths scale
                           grid with streamed ingestion
+  incremental_eval      — dirty-set window re-checks vs full re-eval on
+                          the controller drift-repair loop (bit-identical,
+                          >= 4x warm speedup, dirty-fraction accounting)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [module ...]
 Prints ``bench,metric,tags,value`` CSV.
@@ -43,7 +46,7 @@ MODULES = ["fig2_traversals", "fig6_latency_tradeoff", "fig7_sharding",
            "table4_runtime", "reshard_cost", "beyond_paper",
            "engine_backends", "perf_iterate", "serve_tail",
            "tenant_frontier", "routing_policies", "provisioning_policies",
-           "provisioning_scale"]
+           "provisioning_scale", "incremental_eval"]
 
 # zero-arg entry point per module when it isn't ``run`` (perf_iterate's
 # ``run`` is the arch-cell driver; its benchmark entry is ``run_engine``)

@@ -337,6 +337,11 @@ class GreedyStats:
     # telemetry plane is disabled): dicts of {budget, n_vec, n_seq,
     # n_candidates, routed_skips} in processing order
     timeline: list | None = None
+    # dirty-scoped revalidation: path rows the bounded routed-revalidation
+    # rounds did NOT have to re-walk (sum over rounds of
+    # n_paths - |dirty set|); 0 when revalidation never ran or fell back
+    # to full re-evaluation
+    revalidate_rows_saved: int = 0
 
 
 class DeviceStatsAcc:
@@ -659,7 +664,25 @@ def _routed_violation_idx(routed_fn, ps: PathSet, t_path: np.ndarray):
     return np.nonzero(h_rt > t_path)[0]
 
 
-def _revalidate_routed(routed_fn, ps, t_path, run_classes, stats) -> None:
+def _routed_eval_rows(routed_fn, ps, rows: np.ndarray) -> np.ndarray:
+    """Routed h for a compacted subset of ``ps``'s rows (128-row buckets).
+
+    Pads the gathered block up to a 128-row quantum (-1 objects / 0
+    lengths — empty paths, h = 0) so varying dirty-set sizes hit a
+    bounded set of jit traces, exactly the incremental evaluator's
+    padding discipline.
+    """
+    D = len(rows)
+    Db = -(-max(D, 1) // 128) * 128
+    o = np.full((Db, ps.objects.shape[1]), -1, np.int32)
+    ln = np.zeros(Db, np.int32)
+    o[:D] = np.asarray(ps.objects, np.int32)[rows]
+    ln[:D] = np.asarray(ps.lengths, np.int32)[rows]
+    return np.asarray(routed_fn(o, ln), np.int64)[:D]
+
+
+def _revalidate_routed(routed_fn, ps, t_path, run_classes, stats,
+                       index=None) -> None:
     """Bounded re-validation after a policy-aware pass.
 
     Receding-horizon walks are not monotone under foreign replica
@@ -668,13 +691,27 @@ def _revalidate_routed(routed_fn, ps, t_path, run_classes, stats) -> None:
     ``_POLICY_REVALIDATE`` rounds and record whatever residue survives in
     ``stats.routed_violations`` (0 = the scheme is routed-feasible for
     every processed path; callers must not assume feasibility otherwise).
+
+    With ``index`` (a :class:`~repro.engine.incremental.PathIndex` over
+    ``ps``) each round after an UPDATE re-walks only the *dirty* rows:
+    the UPDATE adds copies solely of objects on the paths it processed,
+    and a routed walk reads only its own objects' replica rows, so paths
+    outside ``index.dirty_paths(ps.objects[viol])`` provably kept their
+    latency — the per-round saving lands in
+    ``stats.revalidate_rows_saved``.
     """
     viol = _routed_violation_idx(routed_fn, ps, t_path)
     for _ in range(_POLICY_REVALIDATE):
         if not len(viol):
             break
         run_classes(ps.select(viol), t_path[viol])
-        viol = _routed_violation_idx(routed_fn, ps, t_path)
+        if index is not None:
+            cand = index.dirty_paths(np.asarray(ps.objects)[viol])
+            stats.revalidate_rows_saved += int(ps.n_paths - len(cand))
+            h = _routed_eval_rows(routed_fn, ps, cand)
+            viol = cand[h > t_path[cand]]
+        else:
+            viol = _routed_violation_idx(routed_fn, ps, t_path)
     stats.routed_violations = int(len(viol))
 
 
@@ -1021,7 +1058,12 @@ def replicate_workload(
 
     run_classes(ps, t_path)
     if routed_fn is not None:
-        _revalidate_routed(routed_fn, ps, t_path, run_classes, stats)
+        from repro.engine.incremental import PathIndex  # lazy: no cycle
+
+        _revalidate_routed(
+            routed_fn, ps, t_path, run_classes, stats,
+            index=PathIndex(np.asarray(ps.objects), packed.n_objects),
+        )
 
     # single host readback of the packed words (vs. per-batch bool mask);
     # fallback additions were replayed into the words, so the packed state
@@ -1260,7 +1302,22 @@ def replicate_delta(
 
     run_classes(ps, t_path)
     if routed_fn is not None:
-        _revalidate_routed(routed_fn, ps, t_path, run_classes, stats)
+        from repro.engine.incremental import PathIndex  # lazy: no cycle
+
+        _revalidate_routed(
+            routed_fn, ps, t_path, run_classes, stats,
+            index=PathIndex(np.asarray(ps.objects), packed.n_objects),
+        )
+
+    # the UPDATE loop scatter-ORs into packed.words inside jits, bypassing
+    # engine.add_replicas — report the touched objects so the engine's
+    # incremental latency cache invalidates its exact dirty set.  The
+    # additions are copies of objects on the processed paths, so with the
+    # per-batch readbacks off the conservative superset is all of them.
+    if collect_additions:
+        engine.note_changed(add_obj)
+    else:
+        engine.note_changed(np.asarray(ps.objects))
 
     if not collect_additions and sync_host and engine.scheme is not None:
         # keep the engine's host mirror consistent at return (the per-pair

@@ -367,18 +367,12 @@ def prune_scheme_replicas(
         else np.asarray(f, np.float64)
     )
 
-    # object -> rows of the paths that touch it (csr-style, built once)
-    valid = objects >= 0
-    flat_v = objects[valid].astype(np.int64)
-    flat_p = np.repeat(
-        np.arange(pathset.n_paths), objects.shape[1]
-    )[valid.ravel()]
-    sort = np.argsort(flat_v, kind="stable")
-    flat_v, flat_p = flat_v[sort], flat_p[sort]
-    starts = np.searchsorted(flat_v, np.arange(scheme.n_objects + 1))
+    # object -> rows of the paths that touch it (built once; same CSR the
+    # engine's incremental dirty-set cache uses)
+    from repro.engine.incremental import PathIndex  # lazy: no cycle
 
-    def affected(v: int) -> np.ndarray:
-        return np.unique(flat_p[starts[v] : starts[v + 1]])
+    index = PathIndex(objects, scheme.n_objects)
+    affected = index.paths_of
 
     L = objects.shape[1]
 

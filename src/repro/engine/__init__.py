@@ -22,8 +22,14 @@ analyzer, and every benchmark.
   PathStream     — streamed PathSet ingestion from a host generator with
                    peak-residency accounting (provisioning at scale);
                    consumed by ``repro.core.greedy.replicate_stream``
+  PathIndex      — CSR object->path inverted index; backs the engine's
+                   persistent dirty-set latency cache
+                   (``path_latencies(..., incremental=True)``) and the
+                   prune sweep's affected-path lookups
 """
 from repro.engine.engine import DevicePaths, LatencyEngine, RawScheme
+from repro.engine.incremental import IncrementalEval, PathIndex
+from repro.engine.sharding import round_up_rows
 from repro.engine.packed import PackedScheme, pack_bool_mask, unpack_words
 from repro.engine.routing import (
     POLICIES,
@@ -65,4 +71,7 @@ __all__ = [
     "QueueAware",
     "nearest_copy_dp",
     "resolve_policy",
+    "PathIndex",
+    "IncrementalEval",
+    "round_up_rows",
 ]

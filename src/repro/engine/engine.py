@@ -117,6 +117,8 @@ class LatencyEngine:
         self.packed: PackedScheme | None = packed
         if self.packed is None and self.resident:
             self.packed = PackedScheme.from_mask(scheme.mask, scheme.shard)
+        # lazy incremental dirty-set evaluation plane (engine.incremental)
+        self._inc = None
 
     # -- classmethods -----------------------------------------------------
     @classmethod
@@ -141,10 +143,39 @@ class LatencyEngine:
             return np.asarray(self.packed.shard)
         return np.asarray(self.scheme.shard, np.int32)
 
+    @property
+    def incremental(self):
+        """The engine's :class:`~repro.engine.incremental.IncrementalEval`.
+
+        Created on first use; scheme mutations routed through this engine
+        (:meth:`add_replicas` / :meth:`remove_replicas` /
+        :meth:`note_changed` / :meth:`refresh`) keep it exact.
+        """
+        if self._inc is None:
+            from repro.engine.incremental import IncrementalEval  # lazy
+
+            self._inc = IncrementalEval(self)
+        return self._inc
+
+    def note_changed(self, objects) -> None:
+        """Invalidate cached incremental latencies of paths touching
+        ``objects``.
+
+        :meth:`add_replicas` / :meth:`remove_replicas` call this
+        automatically; callers that mutate ``packed.words`` directly
+        (the fused greedy UPDATE jits) must call it themselves with the
+        objects they touched — a superset is safe, a miss is not.
+        """
+        if self._inc is not None:
+            self._inc.invalidate_objects(objects)
+
     def refresh(self) -> None:
         """Re-pack after the host scheme's mask was mutated directly."""
         if self.scheme is not None and self.resident:
             self.packed = PackedScheme.from_mask(self.scheme.mask, self.scheme.shard)
+        if self._inc is not None:
+            # no delta to reason about: drop every cached latency vector
+            self._inc.invalidate_all()
 
     def add_replicas(self, objects, servers) -> None:
         """Monotone additions, applied on device (and to the host scheme).
@@ -162,6 +193,7 @@ class LatencyEngine:
             self.packed.add(obj, srv)
         if self.scheme is not None:
             self.scheme.mask[obj, srv] = True
+        self.note_changed(obj)
 
     def remove_replicas(self, objects, servers) -> None:
         """Drop replicas, applied on device (and to the host scheme).
@@ -180,6 +212,7 @@ class LatencyEngine:
             self.packed.remove(obj, srv)
         if self.scheme is not None:
             self.scheme.mask[obj, srv] = False
+        self.note_changed(obj)
 
     def prepare(self, pathset) -> DevicePaths:
         """Pin a PathSet on device for repeated evaluation (one upload)."""
@@ -197,6 +230,7 @@ class LatencyEngine:
         chunk: int | None = None,
         policy=None,
         load: np.ndarray | None = None,
+        incremental: bool = False,
     ) -> np.ndarray:
         """h(p, r, rho) per path: #distributed traversals (Def 4.2).
 
@@ -206,10 +240,22 @@ class LatencyEngine:
         policy); ``nearest_copy``/``queue_aware`` pick remote-hop targets
         from the replica holders (``load`` ranks holders for the
         latter).  All three backends implement every policy.
+
+        ``incremental=True`` routes through the engine's persistent
+        per-path latency cache (:attr:`incremental`): the first call for
+        a PathSet evaluates fully, later calls re-walk only the paths
+        whose latency a scheme delta since then could have changed — the
+        exact dirty set of the object->path index.  Bit-identical to
+        ``incremental=False`` as long as every scheme mutation is routed
+        through the engine (or reported via :meth:`note_changed`).
         """
         pol = resolve_policy(policy)
         if pathset.n_paths == 0:
             return np.zeros((0,), dtype=np.int32)
+        if incremental and not isinstance(pathset, DevicePaths):
+            return self.incremental.path_latencies(
+                pathset, policy=pol, load=load
+            )
         if self.backend == "reference":
             if pol.name == "home_first":
                 return backends.reference_eval(
@@ -399,6 +445,7 @@ class LatencyEngine:
         path_lats: np.ndarray | None = None,
         policy=None,
         load: np.ndarray | None = None,
+        incremental: bool = False,
     ) -> np.ndarray:
         """t_Q - l_Q per query, computed on device (int32 [n_queries]).
 
@@ -410,9 +457,13 @@ class LatencyEngine:
         ``policy`` scores the walk under a hop-routing policy
         (``nearest_copy`` is the paper-faithful Eqn 1 reading and yields
         slack >= the ``home_first`` default wherever replicas help).
+        ``incremental=True`` sources the path latencies from the
+        persistent dirty-set cache (see :meth:`path_latencies`).
         """
         if path_lats is None:
-            path_lats = self.path_latencies(pathset, policy=policy, load=load)
+            path_lats = self.path_latencies(
+                pathset, policy=policy, load=load, incremental=incremental
+            )
         nq = pathset.n_queries
         t_q = _budget_vector(t, nq)
         if nq == 0:
@@ -431,6 +482,7 @@ class LatencyEngine:
         path_lats: np.ndarray | None = None,
         policy=None,
         load: np.ndarray | None = None,
+        incremental: bool = False,
     ) -> bool:
         """All queries within their own t_Q (Def 4.4).
 
@@ -438,10 +490,17 @@ class LatencyEngine:
         ``path_lats`` when given.  ``policy="nearest_copy"`` checks
         feasibility under the paper-faithful any-co-located-replica
         routing, a weaker (tighter-scoring) condition than the
-        ``home_first`` default.
+        ``home_first`` default.  ``incremental=True`` sources the path
+        latencies from the persistent dirty-set cache.
         """
         return bool(
-            np.all(self.query_slack(pathset, t, path_lats, policy, load) >= 0)
+            np.all(
+                self.query_slack(
+                    pathset, t, path_lats, policy, load,
+                    incremental=incremental,
+                )
+                >= 0
+            )
         )
 
     def margin_costs(

@@ -44,6 +44,22 @@ def device_count() -> int:
     return len(jax.devices())
 
 
+def round_up_rows(n: int, align: int = 128) -> int:
+    """Round a batch row count up to ``align`` x the visible device count.
+
+    The incremental dirty-set evaluator (``repro.engine.incremental``)
+    pads its compacted dirty blocks with this quantum: the ``align``
+    factor bounds how many jit shapes a varying dirty-set size can
+    produce (the same 128-row bucketing the prune sweep uses), and the
+    device factor keeps the padded block divisible across a path-sharded
+    mesh — a dirty batch that lands on 8 devices must carry a row
+    multiple of 8 x ``align`` or GSPMD pads it per device anyway, off the
+    books.  Always returns at least one full quantum.
+    """
+    q = max(1, int(align)) * max(1, device_count())
+    return max(q, -(-int(n) // q) * q)
+
+
 def provisioning_mesh(n_devices: int | None = None) -> Mesh:
     """1-D device mesh over the path axis (all visible devices by default)."""
     devs = jax.devices()

@@ -44,12 +44,18 @@ class TransferStats:
     # they cross the bus but carry no workload data (kept out of
     # h2d_bytes so the perf benchmarks' byte assertions stay exact)
     padded_bytes: int = 0
+    # bytes uploaded for incremental dirty-set evaluation (the compacted
+    # dirty-row index vectors of ``repro.engine.incremental``): a subset
+    # of h2d_bytes, broken out so the incremental path's transfer savings
+    # are visible next to what a full re-upload would have cost
+    gathered_bytes: int = 0
 
     def reset(self) -> None:
         self.h2d_bytes = 0
         self.h2d_calls = 0
         self.d2h_bytes = 0
         self.padded_bytes = 0
+        self.gathered_bytes = 0
 
     def snapshot(self) -> dict:
         return {
@@ -57,6 +63,7 @@ class TransferStats:
             "h2d_calls": self.h2d_calls,
             "d2h_bytes": self.d2h_bytes,
             "padded_bytes": self.padded_bytes,
+            "gathered_bytes": self.gathered_bytes,
         }
 
     @contextlib.contextmanager
@@ -80,6 +87,7 @@ class TransferStats:
             self.h2d_calls += saved["h2d_calls"]
             self.d2h_bytes += saved["d2h_bytes"]
             self.padded_bytes += saved["padded_bytes"]
+            self.gathered_bytes += saved["gathered_bytes"]
 
 
 TRANSFER = TransferStats()

@@ -90,6 +90,13 @@ class ControllerConfig:
     # any-co-located-replica reading — tighter, so fewer false triggers
     # and no bytes bought for paths the routed walk already serves)
     score_policy: str = "home_first"
+    # route window evaluations (observe() scoring + post-repair window
+    # re-checks) through the engine's persistent dirty-set cache
+    # (``path_latencies(incremental=True)``): after a repair, only the
+    # windowed paths touching the delta's objects are re-walked.
+    # Bit-identical to full re-evaluation; off reproduces the historical
+    # evaluate-everything profile
+    incremental_recheck: bool = True
 
     def __post_init__(self):
         if self.t is None and not self.tenants:
@@ -116,7 +123,7 @@ class AdaptationReport:
     """What one repair did (the benchmark's bytes-replicated accounting)."""
 
     step: int
-    trigger: str                   # "feasibility" | "p99_slo"
+    trigger: str                   # "feasibility" | "p99_slo" | "forecast"
     paths_repaired: int
     replicas_added: int
     bytes_added: float
@@ -332,6 +339,8 @@ class AdaptiveController:
         latency_us: np.ndarray | None = None,
         slo: SLOSpec | None = None,
         trace=None,
+        forecast: PathSet | None = None,
+        forecast_slo: SLOSpec | None = None,
     ) -> AdaptationReport | None:
         """Feed one served batch; repair and return a report on violation.
 
@@ -343,6 +352,18 @@ class AdaptiveController:
         run's :class:`repro.obs.Tracer` — when given, a repair's report
         carries ``blame``: per repaired tenant, the SLO burn rate and the
         per-server decomposition of where the violators' budgets went.
+
+        ``forecast`` is a PathSet delta the caller expects to start
+        serving soon (e.g. the next :class:`~repro.serve.drift.PhaseDelta`
+        observed upstream before its violations land): the controller
+        *pre-warms* a repair for the forecast paths that are already over
+        budget under the live scheme, so the phase flip arrives against a
+        scheme provisioned for it.  Cheap by construction — the forecast's
+        dirty set is small, and the warm-started delta pass prices only
+        its infeasible paths.  ``forecast_slo`` carries the forecast's
+        budgets (defaults like ``slo``).  A reactive repair, if one also
+        triggered this step, takes precedence in the returned report; the
+        forecast report is appended to :attr:`reports` either way.
         """
         self.step += 1
         slo = slo if slo is not None else self.config.default_slo(
@@ -350,7 +371,8 @@ class AdaptiveController:
         )
         assert slo.n_queries == pathset.n_queries
         pl = self.engine.path_latencies(
-            pathset, policy=self.config.score_policy
+            pathset, policy=self.config.score_policy,
+            incremental=self.config.incremental_recheck,
         )
         qids = np.asarray(pathset.query_ids)
         ql = self.engine.query_latencies(pathset, pl)
@@ -399,6 +421,8 @@ class AdaptiveController:
             k: v for k, v in self._deferred_since.items() if k in names
         }
         if not triggered:
+            if forecast is not None:
+                return self._prewarm(forecast, forecast_slo)
             return None
 
         contended = (
@@ -454,6 +478,11 @@ class AdaptiveController:
                 for name in report.tenants
                 if name in burn.tenants
             }
+        if forecast is not None:
+            # the reactive repair ran first; the pre-warm tops it up for
+            # the forecast paths it did not cover (and is a cheap no-op
+            # when the forecast is already feasible)
+            self._prewarm(forecast, forecast_slo)
         return report
 
     def _triggered_tenants(self) -> list[tuple[str, str]]:
@@ -527,6 +556,126 @@ class AdaptiveController:
         ]
         cat = np.concatenate(objs) if objs else np.zeros(0, np.int64)
         return np.unique(cat[cat >= 0])
+
+    def _reeval_windows(self, repaired_names: set) -> bool:
+        """Re-judge every windowed entry against the live scheme.
+
+        The stored per-path latencies are stale after any scheme change
+        and would re-trigger forever.  With ``incremental_recheck`` each
+        entry's evaluation goes through the engine's dirty-set cache, so
+        only the windowed paths touching the delta's objects are actually
+        re-walked — the steady-state cost of a repair round scales with
+        the delta, not the window.  Wall-clock latencies are dropped only
+        for REPAIRED tenants (theirs were measured against the pre-repair
+        scheme; a deferred tenant keeps its p99 evidence — it must win
+        the next arbitration round).  Returns whether every repaired
+        tenant's window is feasible after the change.
+        """
+        inc = self.config.incremental_recheck
+        feasible = True
+        for name, w in self._tenants.items():
+            for e in w.entries:
+                e.path_lats = self.engine.path_latencies(
+                    e.pathset, policy=self.config.score_policy,
+                    incremental=inc,
+                )
+                qids = np.asarray(e.pathset.query_ids)
+                if len(qids):
+                    ql = self.engine.query_latencies(e.pathset, e.path_lats)
+                    slack_bad = ql[qids] > e.path_budgets
+                    e.n_bad = int(np.unique(qids[slack_bad]).size)
+                else:
+                    e.n_bad = 0
+                if name in repaired_names:
+                    e.latency_us = None
+                    if e.n_bad:
+                        feasible = False
+            if name in repaired_names:
+                w.last_repair_step = self.step
+        return feasible
+
+    def _prewarm(
+        self, forecast: PathSet, forecast_slo: SLOSpec | None
+    ) -> AdaptationReport:
+        """Repair a *forecast* PathSet delta before its violations land.
+
+        Evaluates the forecast against the live scheme (through the
+        dirty-set cache when enabled — repeated forecasts of the same
+        PathSet cost only their dirty fraction), selects the paths
+        already over their budgets, and warm-starts the same
+        ``replicate_delta`` pass a reactive repair would run — so when
+        the drift phase actually flips, the scheme is already provisioned
+        for it and the violation window the reactive loop would have
+        served through never opens.  Feasible forecasts are near-free: a
+        gather-compacted evaluation plus no-op repair.
+        """
+        t0 = time.perf_counter()
+        slo = (
+            forecast_slo
+            if forecast_slo is not None
+            else self.config.default_slo(forecast.n_queries)
+        )
+        inc = self.config.incremental_recheck
+        pl = self.engine.path_latencies(
+            forecast, policy=self.config.score_policy, incremental=inc
+        )
+        qids = np.asarray(forecast.query_ids)
+        t_path = slo.t_q[qids] if len(qids) else np.zeros(0, np.int32)
+        idx = np.nonzero(pl > t_path)[0]
+        add_obj = np.zeros(0, np.int64)
+        add_srv = np.zeros(0, np.int64)
+        n_paths = int(len(idx))
+        if n_paths:
+            bad = forecast.select(idx)
+            tq_q = np.full(bad.n_queries, np.int32(0))
+            tq_q[np.asarray(bad.query_ids)] = t_path[idx]
+            bad_slo = SLOSpec(
+                tq_q,
+                np.zeros(bad.n_queries, np.int32),
+                (TenantSpec("forecast", 0),),
+            )
+            stats, (add_obj, add_srv) = replicate_delta(
+                bad,
+                self.engine,
+                bad_slo,
+                f=self.f,
+                capacity=self.config.capacity,
+                epsilon=self.config.epsilon,
+                track_rm=True,
+                policy=self.config.score_policy,
+            )
+            self.cluster.apply_scheme_delta(add_obj, add_srv)
+            for u, v, s in stats.rm or ():
+                self.rmap.rm.setdefault(int(u), set()).add(int(v))
+                self.rmap.rc[(int(v), int(s))] = (
+                    self.rmap.rc.get((int(v), int(s)), 0) + 1
+                )
+            # windows were scored against the pre-warm scheme: re-judge
+            # (dirty-scoped), without re-arming any tenant's repair state
+            self._reeval_windows(set())
+        fv = (
+            np.ones(len(add_obj)) if self.f is None else self.f[add_obj]
+        )
+        report = AdaptationReport(
+            step=self.step,
+            trigger="forecast",
+            paths_repaired=n_paths,
+            replicas_added=int(len(add_obj)),
+            bytes_added=float(np.sum(fv)) if len(add_obj) else 0.0,
+            replicas_evicted=0,
+            bytes_evicted=0.0,
+            feasible_after=bool(
+                self.engine.is_feasible(
+                    forecast, slo, policy=self.config.score_policy,
+                    incremental=inc,
+                )
+            ),
+            runtime_s=time.perf_counter() - t0,
+            tenants=("forecast",),
+            additions=(add_obj, add_srv),
+        )
+        self.reports.append(report)
+        return report
 
     def _update_cold_streaks(self, active_objects: np.ndarray) -> None:
         """Advance the per-replica cold streak counters (hysteresis).
@@ -641,25 +790,7 @@ class AdaptiveController:
         # was repaired for it, and wiping it would erase the very violation
         # that must win the next arbitration round.
         repaired_names = {name for name, _ in repair}
-        feasible = True
-        for name, w in self._tenants.items():
-            for e in w.entries:
-                e.path_lats = self.engine.path_latencies(
-                    e.pathset, policy=self.config.score_policy
-                )
-                qids = np.asarray(e.pathset.query_ids)
-                if len(qids):
-                    ql = self.engine.query_latencies(e.pathset, e.path_lats)
-                    slack_bad = ql[qids] > e.path_budgets
-                    e.n_bad = int(np.unique(qids[slack_bad]).size)
-                else:
-                    e.n_bad = 0
-                if name in repaired_names:
-                    e.latency_us = None
-                    if e.n_bad:
-                        feasible = False
-            if name in repaired_names:
-                w.last_repair_step = self.step
+        feasible = self._reeval_windows(repaired_names)
 
         triggers = [trig for _, trig in repair]
         report = AdaptationReport(

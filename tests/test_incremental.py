@@ -1,0 +1,407 @@
+"""Incremental dirty-set evaluation: index exactness, cache bit-identity,
+transfer accounting, greedy/controller threading, forecast pre-warm."""
+import numpy as np
+import pytest
+
+from repro.core import replicate_delta, replicate_workload
+from repro.core.paths import PathSet
+from repro.distsys import Cluster
+from repro.engine import (
+    TRANSFER,
+    LatencyEngine,
+    PathIndex,
+    nearest_copy_dp,
+    round_up_rows,
+)
+from repro.serve import AdaptiveController, ControllerConfig
+from tests.conftest import random_workload
+
+POLICIES = ("home_first", "nearest_copy", "queue_aware", nearest_copy_dp(2))
+BACKENDS = ("reference", "jnp", "pallas")
+
+
+def _engine(rng, backend, n_obj=100, n_srv=5, n_paths=120):
+    ps, shard = random_workload(
+        rng, n_obj=n_obj, n_srv=n_srv, n_paths=n_paths, n_queries=40
+    )
+    mask = np.zeros((n_obj, n_srv), bool)
+    mask[np.arange(n_obj), shard] = True
+    eng = LatencyEngine.from_arrays(mask, shard, backend=backend)
+    return eng, ps
+
+
+def _load_for(pol, rng, n_srv=5):
+    name = getattr(pol, "name", pol)
+    if name == "queue_aware":
+        return rng.random(n_srv).astype(np.float32)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# PathIndex
+# ---------------------------------------------------------------------------
+def test_path_index_matches_bruteforce(rng):
+    ps, shard = random_workload(rng, n_obj=60, n_paths=80)
+    objects = np.asarray(ps.objects)
+    idx = PathIndex(objects, 60)
+    for v in range(60):
+        expect = np.nonzero((objects == v).any(axis=1))[0]
+        assert np.array_equal(idx.paths_of(v), expect)
+    # multi-object union, with out-of-range ids ignored
+    changed = rng.integers(-5, 70, 25)
+    valid = changed[(changed >= 0) & (changed < 60)]
+    expect = (
+        np.unique(np.concatenate([idx.paths_of(int(v)) for v in valid]))
+        if valid.size
+        else np.zeros(0)
+    )
+    assert np.array_equal(idx.dirty_paths(changed), expect)
+    assert idx.dirty_paths([]).size == 0
+    assert idx.dirty_paths([-1, 65]).size == 0
+
+
+def test_round_up_rows_quantum():
+    from repro.engine.sharding import device_count
+
+    q = 128 * device_count()
+    assert round_up_rows(0) == q
+    assert round_up_rows(1) == q
+    assert round_up_rows(q) == q
+    assert round_up_rows(q + 1) == 2 * q
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: 4 policies x 3 backends x {add, remove, mixed}
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("pol", POLICIES, ids=lambda p: getattr(p, "name", p))
+def test_incremental_bit_identity(rng, backend, pol):
+    eng, ps = _engine(rng, backend)
+    load = _load_for(pol, rng)
+
+    def check():
+        inc = eng.path_latencies(ps, policy=pol, load=load, incremental=True)
+        full = eng.path_latencies(ps, policy=pol, load=load)
+        assert np.array_equal(inc, full)
+
+    check()  # cold seed
+    # add delta
+    eng.add_replicas(rng.integers(0, 100, 10), rng.integers(0, 5, 10))
+    check()
+    # remove delta (drop some of the replicas just added and some originals'
+    # copies; removals are where a stale cache would over-report feasibility)
+    ao = rng.integers(0, 100, 6)
+    eng.add_replicas(ao, (np.asarray(eng.host_shard())[ao] + 1) % 5)
+    eng.remove_replicas(ao[:3], (np.asarray(eng.host_shard())[ao[:3]] + 1) % 5)
+    check()
+    # mixed delta in one step
+    eng.add_replicas(rng.integers(0, 100, 5), rng.integers(0, 5, 5))
+    eng.remove_replicas(ao[3:], (np.asarray(eng.host_shard())[ao[3:]] + 1) % 5)
+    check()
+
+
+def test_incremental_slack_and_feasibility_budget_kinds(rng):
+    from repro.core.slo import SLOSpec
+
+    eng, ps = _engine(rng, "jnp")
+    eng.path_latencies(ps, incremental=True)
+    eng.add_replicas(rng.integers(0, 100, 8), rng.integers(0, 5, 8))
+    vec = rng.integers(0, 4, ps.n_queries).astype(np.int32)
+    slo = SLOSpec.uniform(2, ps.n_queries)
+    for t in (1, vec, slo):
+        s_inc = eng.query_slack(ps, t, incremental=True)
+        s_full = eng.query_slack(ps, t)
+        assert np.array_equal(s_inc, s_full)
+        assert eng.is_feasible(ps, t, incremental=True) == eng.is_feasible(
+            ps, t
+        )
+
+
+def test_queue_aware_load_gets_its_own_slot(rng):
+    """queue_aware h depends on the load vector: two load profiles must
+    not share a cached latency vector."""
+    eng, ps = _engine(rng, "jnp")
+    la = np.zeros(5, np.float32)
+    lb = np.asarray([9.0, 0.0, 0.0, 0.0, 0.0], np.float32)
+    eng.add_replicas(np.arange(100), np.full(100, 1))
+    for load in (la, lb, la):
+        inc = eng.path_latencies(
+            ps, policy="queue_aware", load=load, incremental=True
+        )
+        full = eng.path_latencies(ps, policy="queue_aware", load=load)
+        assert np.array_equal(inc, full)
+
+
+# ---------------------------------------------------------------------------
+# cache mechanics: no-op hits, transfer accounting, refresh
+# ---------------------------------------------------------------------------
+def test_empty_dirty_set_is_a_noop(rng):
+    eng, ps = _engine(rng, "jnp")
+    eng.path_latencies(ps, incremental=True)
+    with TRANSFER.scope():
+        h = eng.path_latencies(ps, incremental=True)  # clean hit
+        assert TRANSFER.h2d_bytes == 0
+        assert TRANSFER.gathered_bytes == 0
+    # invalidating objects no windowed path touches must not re-walk either
+    eng.note_changed([100_000])
+    with TRANSFER.scope():
+        h2 = eng.path_latencies(ps, incremental=True)
+        assert TRANSFER.gathered_bytes == 0
+    assert np.array_equal(h, h2)
+
+
+def test_dirty_rewalk_books_gathered_bytes(rng):
+    eng, ps = _engine(rng, "jnp")
+    eng.path_latencies(ps, incremental=True)
+    eng.add_replicas([int(np.asarray(ps.objects)[0, 0])], [0])
+    with TRANSFER.scope():
+        eng.path_latencies(ps, incremental=True)
+        assert TRANSFER.gathered_bytes > 0
+        # the compacted index vector is the payload: a subset of h2d
+        assert TRANSFER.gathered_bytes <= TRANSFER.h2d_bytes
+        # and far smaller than re-uploading the whole path block
+        assert TRANSFER.h2d_bytes < np.asarray(ps.objects, np.int32).nbytes
+
+
+def test_refresh_invalidates_everything(rng):
+    eng, ps = _engine(rng, "jnp")
+    eng.path_latencies(ps, incremental=True)
+    # mutate the host mask directly (bypassing add_replicas), then refresh
+    eng.scheme.mask[:, 2] = True
+    eng.refresh()
+    inc = eng.path_latencies(ps, incremental=True)
+    assert np.array_equal(inc, eng.path_latencies(ps))
+
+
+def test_dead_pathset_entries_are_purged(rng):
+    eng, ps = _engine(rng, "jnp")
+    eng.path_latencies(ps, incremental=True)
+    dead = PathSet.from_lists([[0, 1], [2, 3]])
+    eng.path_latencies(dead, incremental=True)
+    assert len(eng.incremental.caches) == 2
+    del dead
+    eng.note_changed([0])  # invalidation sweep drops the dead weakref
+    assert len(eng.incremental.caches) == 1
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: random delta sequences
+# ---------------------------------------------------------------------------
+def test_random_delta_sequences_stay_identical(rng):
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings, strategies as st
+
+    eng_rng = np.random.default_rng(7)
+    eng, ps = _engine(eng_rng, "jnp", n_obj=50, n_srv=4, n_paths=60)
+    mask0 = eng.host_mask().copy()
+
+    @settings(
+        max_examples=20,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    @given(
+        ops=st.lists(
+            st.tuples(
+                st.booleans(),  # True = add, False = remove
+                st.integers(0, 49),
+                st.integers(0, 3),
+            ),
+            min_size=1,
+            max_size=8,
+        ),
+        pol=st.sampled_from(["home_first", "nearest_copy"]),
+    )
+    def step(ops, pol):
+        for add, v, s in ops:
+            if add:
+                eng.add_replicas([v], [s])
+            elif eng.host_shard()[v] != s:  # never drop an original
+                eng.remove_replicas([v], [s])
+        inc = eng.path_latencies(ps, policy=pol, incremental=True)
+        assert np.array_equal(inc, eng.path_latencies(ps, policy=pol))
+
+    step()
+    # restore (hypothesis mutated shared state by design: the cache must
+    # have tracked every mutation, which is exactly what was asserted)
+    eng.scheme.mask[:] = mask0
+    eng.refresh()
+
+
+# ---------------------------------------------------------------------------
+# greedy threading
+# ---------------------------------------------------------------------------
+def test_replicate_delta_notifies_engine_cache(rng):
+    ps, shard = random_workload(rng, n_obj=150, n_srv=5, n_paths=150)
+    scheme, _, eng = replicate_workload(
+        ps, shard, 5, t=2, return_engine=True
+    )
+    eng.path_latencies(ps, incremental=True)  # seed against the t=2 scheme
+    extra, _ = random_workload(
+        np.random.default_rng(3), n_obj=150, n_srv=5, n_paths=60
+    )
+    replicate_delta(extra, eng, 1)  # mutates packed.words inside jits
+    inc = eng.path_latencies(ps, incremental=True)
+    assert np.array_equal(inc, eng.path_latencies(ps))
+    inc_x = eng.path_latencies(extra, incremental=True)
+    assert np.array_equal(inc_x, eng.path_latencies(extra))
+
+
+def test_routed_revalidation_dirty_scoped_matches_full(rng):
+    from repro.core.greedy import (
+        GreedyStats,
+        _revalidate_routed,
+        _routed_gate_fn,
+    )
+    from repro.engine.packed import PackedScheme
+    from repro.engine.routing import resolve_policy
+
+    # many objects / few paths: the violating paths' objects are rare
+    # elsewhere, so the dirty set is a genuine subset of the workload
+    n_obj = 400
+    ps, shard = random_workload(rng, n_obj=n_obj, n_srv=4, n_paths=100)
+    mask = np.zeros((n_obj, 4), bool)
+    mask[np.arange(n_obj), shard] = True
+    pol = resolve_policy("nearest_copy")
+    # only the first 5 paths are over budget (t=0 vs a generous 10)
+    t_path = np.full(ps.n_paths, 10, np.int64)
+    t_path[:5] = 0
+
+    def fake_update(packed):
+        # fake UPDATE: replicate every object of the violating paths
+        # everywhere (guaranteed repair; touches only those objects)
+        def run_classes(sub, tp):
+            o = np.asarray(sub.objects)
+            o = o[o >= 0]
+            for s in range(4):
+                packed.add(o, np.full(len(o), s))
+
+        return run_classes
+
+    packed = PackedScheme.from_mask(mask, shard)
+    fn = _routed_gate_fn(packed, pol, "jnp")
+    assert (np.asarray(fn(
+        np.asarray(ps.objects, np.int32), np.asarray(ps.lengths, np.int32)
+    ))[:5] > 0).any()  # revalidation has something to do
+
+    s_full = GreedyStats()
+    _revalidate_routed(
+        fn, ps, t_path, fake_update(packed), s_full, index=None
+    )
+
+    packed2 = PackedScheme.from_mask(mask, shard)
+    fn2 = _routed_gate_fn(packed2, pol, "jnp")
+    s_dirty = GreedyStats()
+    _revalidate_routed(
+        fn2, ps, t_path, fake_update(packed2), s_dirty,
+        index=PathIndex(np.asarray(ps.objects), n_obj),
+    )
+    assert s_full.routed_violations == s_dirty.routed_violations == 0
+    assert np.array_equal(packed.unpack(), packed2.unpack())
+    assert s_dirty.revalidate_rows_saved > 0
+    assert s_full.revalidate_rows_saved == 0
+
+
+# ---------------------------------------------------------------------------
+# controller threading + forecast pre-warm
+# ---------------------------------------------------------------------------
+def _drifted_setup(seed=0, n_obj=300, n_srv=5, queries=150):
+    from tests.test_serve import synthetic_phases
+
+    phases = synthetic_phases(
+        n_phases=2, n_obj=n_obj, n_srv=n_srv, queries=queries, seed=seed
+    )
+    rng = np.random.default_rng(seed)
+    shard = rng.integers(0, n_srv, n_obj).astype(np.int32)
+    scheme, _, eng = replicate_workload(
+        phases[0].pathset, shard, n_srv, t=1, return_engine=True
+    )
+    return phases, scheme, eng
+
+
+def test_controller_incremental_recheck_is_bit_identical():
+    """The controller's whole report stream must be unchanged by the
+    dirty-set cache (same triggers, same bytes, same feasibility)."""
+    outs = []
+    for inc in (False, True):
+        phases, scheme, eng = _drifted_setup(seed=5)
+        ctl = AdaptiveController(
+            Cluster(scheme),
+            ControllerConfig(
+                t=1, window=300, min_queries=20, incremental_recheck=inc
+            ),
+            engine=eng,
+        )
+        reports = []
+        for _ in range(3):
+            reports.append(ctl.observe(phases[1].pathset))
+        outs.append(
+            [
+                (
+                    r.trigger, r.paths_repaired, r.replicas_added,
+                    r.bytes_added, r.feasible_after,
+                )
+                if r is not None
+                else None
+                for r in reports
+            ]
+        )
+    assert outs[0] == outs[1]
+
+
+def test_forecast_prewarm_shrinks_violation_window():
+    """Satellite: feeding the next PhaseDelta as a forecast repairs ahead
+    of the flip, so the violations a reactive-only controller serves
+    through never land."""
+    # reactive-only: the flip lands on the stale scheme and violates
+    phases, scheme, eng = _drifted_setup(seed=9)
+    flip = phases[1].pathset
+    ctl = AdaptiveController(
+        Cluster(scheme), ControllerConfig(t=1, window=400, min_queries=20),
+        engine=eng,
+    )
+    pl = eng.path_latencies(flip, policy="home_first")
+    ql = eng.query_latencies(flip, pl)
+    reactive_bad = int((ql > 1).sum())
+    assert reactive_bad > 0  # drift actually violates pre-repair
+    r = ctl.observe(flip)
+    assert r is not None and r.trigger == "feasibility"
+
+    # forecast-fed: same starting point, but the delta is announced while
+    # phase 0 is still being served
+    phases, scheme, eng = _drifted_setup(seed=9)
+    ctl = AdaptiveController(
+        Cluster(scheme), ControllerConfig(t=1, window=400, min_queries=20),
+        engine=eng,
+    )
+    r0 = ctl.observe(phases[0].pathset, forecast=flip)
+    assert r0 is not None and r0.trigger == "forecast"
+    assert r0.replicas_added > 0 and r0.feasible_after
+    # the flip arrives against the pre-warmed scheme: no violations land
+    ql = eng.query_latencies(flip, eng.path_latencies(flip))
+    forecast_bad = int((ql > 1).sum())
+    assert forecast_bad == 0 < reactive_bad
+    # and the reactive loop stays quiet (nothing to repair)
+    assert ctl.observe(flip) is None
+    # a feasible forecast is a cheap no-op, not a repair
+    r2 = ctl.observe(phases[0].pathset, forecast=flip)
+    assert r2 is not None and r2.trigger == "forecast"
+    assert r2.replicas_added == 0
+
+
+# ---------------------------------------------------------------------------
+# benchmark wall-clock guard (tier-1 runs the default grid point)
+# ---------------------------------------------------------------------------
+def test_default_grid_point_within_budget():
+    import time
+
+    from benchmarks.incremental_eval import DEFAULT_BUDGET_S, default_grid_point
+
+    t0 = time.perf_counter()
+    fam = default_grid_point(smoke=True)
+    secs = time.perf_counter() - t0
+    assert fam["bit_identical"]
+    assert fam["repairs"] >= 1
+    assert secs < DEFAULT_BUDGET_S, (
+        f"default grid point took {secs:.1f}s (budget {DEFAULT_BUDGET_S}s)"
+    )
