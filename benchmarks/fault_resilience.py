@@ -1,0 +1,270 @@
+"""Fault-resilience benchmark: k-resilient provisioning vs single-server
+loss, chaos kill/revive windows, and client-side routing tables.
+
+Three sections, one per layer of the fault path:
+
+  1. **resilience** — provision the same workload twice (plain ``t`` vs
+     ``resilience=KResilient(k=1)``) and evaluate both schemes under
+     EVERY single-server loss case exhaustively: the k=1 scheme must
+     stay within budget in all S cases while the k=0 scheme violates in
+     at least one, and the replication overhead the guarantee costs is
+     reported (the paper's Fig 6 trade-off, extended to loss cases).
+     The k=1 scheme is built on all three engine backends
+     (reference | jnp | pallas) and must agree bit-for-bit.
+
+  2. **chaos** — a mid-run kill/revive injected into the serving
+     simulator.  The static scheme rides the outage through an SLO
+     violation window; the AdaptiveController's liveness reaction
+     (k-resilient ``replicate_delta`` over the dead set) provisions
+     survivors so the same chaos timeline closes strictly shorter
+     windows.  Reported: total violation-window length and
+     time-to-repair for both arms.
+
+  3. **routing** — the same serving run with and without a client-side
+     :class:`RoutingTable`: direct-to-shard dispatch skips the root
+     coordinator hop, so mean latency drops by the coordinator barrier
+     at a ~100% direct-hit rate on a fresh table; under chaos the table
+     degrades to fallbacks + force-refreshes instead of misrouting.
+
+Headline keys (asserted here, gated by ``check_regress``):
+
+  * ``resilience.k1_feasible_all_losses`` — true (all S cases pass);
+  * ``resilience.k0_violates``            — true (the guarantee is not
+                                            vacuous for this workload);
+  * ``parity.bit_identical``              — 3-backend scheme agreement;
+  * ``chaos.controller_shrinks_window``   — controller arm strictly
+                                            shorter than the static arm.
+
+Usage: PYTHONPATH=src python -m benchmarks.fault_resilience [--smoke] [out.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import replicate_workload
+from repro.core.paths import PathSet
+from repro.distsys import ChaosEvent, Cluster, LatencyModel, RoutingTable
+from repro.distsys.faults import time_to_repair, violation_windows
+from repro.engine import KResilient, LatencyEngine
+from repro.serve import simulate
+from repro.serve.controller import AdaptiveController, ControllerConfig
+
+N_SERVERS = 6
+T = 2
+SEED = 11
+BACKENDS = ("reference", "jnp", "pallas")
+
+
+def _workload(smoke: bool):
+    rng = np.random.default_rng(SEED)
+    n_obj = 120 if smoke else 400
+    n_paths = 160 if smoke else 600
+    paths = [
+        rng.integers(0, n_obj, rng.integers(1, 8)).tolist()
+        for _ in range(n_paths)
+    ]
+    shard = rng.integers(0, N_SERVERS, n_obj).astype(np.int32)
+    return PathSet.from_lists(paths), shard
+
+
+def _loss_case_table(eng: LatencyEngine, ps: PathSet, t_q, res) -> dict:
+    """Worst per-query latency under each single loss case, exhaustively."""
+    h = eng.resilient_path_latencies(ps, res)  # [D, P]
+    qids = np.asarray(ps.query_ids)
+    per_case = []
+    for d in range(h.shape[0]):
+        lq = np.zeros(ps.n_queries, np.int64)
+        np.maximum.at(lq, qids, h[d])
+        per_case.append(
+            {"case": d, "max_l_q": int(lq.max()),
+             "violations": int((lq > t_q).sum())}
+        )
+    return {
+        "cases": per_case,
+        "feasible_all": bool(all(c["violations"] == 0 for c in per_case)),
+        "total_violations": int(sum(c["violations"] for c in per_case)),
+    }
+
+
+def _bench_resilience(ps, shard, result):
+    t_q = np.full(ps.n_queries, T, np.int32)
+    res = KResilient(k=1)
+
+    k0, s0 = replicate_workload(ps, shard.copy(), N_SERVERS, T)
+    k0_table = _loss_case_table(LatencyEngine(k0), ps, t_q, res)
+
+    masks = {}
+    k1 = stats = None
+    for b in BACKENDS:
+        scheme, st = replicate_workload(
+            ps, shard.copy(), N_SERVERS, T, resilience=res, policy_backend=b)
+        masks[b] = scheme.mask
+        if b == "jnp":
+            k1, stats = scheme, st
+    bit_identical = bool(
+        np.array_equal(masks["reference"], masks["jnp"])
+        and np.array_equal(masks["reference"], masks["pallas"])
+    )
+    k1_table = _loss_case_table(LatencyEngine(k1), ps, t_q, res)
+
+    result["resilience"] = {
+        "n_loss_cases": len(k1_table["cases"]),
+        "k0_replicas": int(s0.replicas),
+        "k1_replicas": int(stats.replicas),
+        "resilience_overhead_replicas": int(stats.replicas - s0.replicas),
+        "resilience_rounds": int(stats.resilience_rounds),
+        "residual_violations": int(stats.resilient_violations),
+        "k0_loss_cases": k0_table,
+        "k1_loss_cases": k1_table,
+        "k0_violates": bool(not k0_table["feasible_all"]),
+        "k1_feasible_all_losses": bool(k1_table["feasible_all"]),
+    }
+    result["parity"] = {"backends": list(BACKENDS),
+                        "bit_identical": bit_identical}
+    emit("faults", "k1_feasible_all_losses",
+         result["resilience"]["k1_feasible_all_losses"])
+    emit("faults", "k0_violates", result["resilience"]["k0_violates"])
+    emit("faults", "overhead_replicas",
+         result["resilience"]["resilience_overhead_replicas"])
+    emit("faults", "parity_bit_identical", bit_identical)
+    return k1
+
+
+def _bench_chaos(ps, shard, result, smoke):
+    scheme, _ = replicate_workload(ps, shard.copy(), N_SERVERS, T)
+    model = LatencyModel()
+    kill_t, revive_t = 30_000.0, 70_000.0
+    chaos = [ChaosEvent(kill_t, "kill", 2), ChaosEvent(revive_t, "revive", 2)]
+    rate = 2_000.0
+
+    def sim(scm, **kw):
+        return simulate(Cluster(scm.copy()), ps, rate_qps=rate, model=model,
+                        seed=5, concurrency=8, **kw)
+
+    calm = sim(scheme)
+    thr = 1.3 * float(np.percentile(calm.latency_us, 99))
+
+    def windows(rep):
+        fin = rep.arrival_us + rep.latency_us
+        return violation_windows(fin, rep.latency_us > thr)
+
+    static = sim(scheme, chaos=chaos)
+    w_static = windows(static)
+
+    cluster = Cluster(scheme.copy())
+    ctl = AdaptiveController(
+        cluster, ControllerConfig(t=T),
+        engine=LatencyEngine(cluster.scheme, backend="jnp"))
+    cluster.fail_server(2)
+    t0 = time.perf_counter()
+    rep = ctl.on_liveness_change(ps)
+    repair_s = time.perf_counter() - t0
+    cluster.recover_server(2)
+    reactive = sim(cluster.scheme, chaos=chaos)
+    w_react = windows(reactive)
+
+    total = lambda w: float(sum(hi - lo for lo, hi in w))  # noqa: E731
+    result["chaos"] = {
+        "slo_threshold_us": round(thr, 2),
+        "kill_us": kill_t,
+        "revive_us": revive_t,
+        "static_window_us": total(w_static),
+        "static_windows": w_static,
+        "static_time_to_repair_us": time_to_repair(w_static, kill_t),
+        "controller_window_us": total(w_react),
+        "controller_windows": w_react,
+        "controller_time_to_repair_us": time_to_repair(w_react, kill_t),
+        "controller_replicas_added": int(rep.replicas_added),
+        "controller_repair_s": round(repair_s, 3),
+        "controller_feasible_after": bool(rep.feasible_after),
+        "controller_shrinks_window": total(w_react) < total(w_static),
+    }
+    emit("faults", "static_window_us", result["chaos"]["static_window_us"])
+    emit("faults", "controller_window_us",
+         result["chaos"]["controller_window_us"])
+    emit("faults", "controller_shrinks_window",
+         result["chaos"]["controller_shrinks_window"])
+
+
+def _bench_routing(ps, shard, result):
+    scheme, _ = replicate_workload(ps, shard.copy(), N_SERVERS, T)
+    model = LatencyModel()
+
+    base = simulate(Cluster(scheme.copy()), ps, rate_qps=500.0, model=model,
+                    seed=3, concurrency=4)
+    cl = Cluster(scheme.copy())
+    direct = simulate(cl, ps, rate_qps=500.0, model=model, seed=3,
+                      concurrency=4, routing_table=RoutingTable(cl))
+
+    # under chaos the snapshot misses instead of misrouting
+    cl2 = Cluster(scheme.copy())
+    chaos = [ChaosEvent(30_000.0, "kill", 1),
+             ChaosEvent(70_000.0, "revive", 1)]
+    stale = simulate(cl2, ps, rate_qps=500.0, model=model, seed=3,
+                     concurrency=4, chaos=chaos,
+                     routing_table=RoutingTable(cl2, max_age_us=1e12))
+
+    result["routing"] = {
+        "coordinator_us": model.coordinator_us,
+        "mean_latency_coordinator_us": round(float(np.mean(base.latency_us)), 3),
+        "mean_latency_direct_us": round(float(np.mean(direct.latency_us)), 3),
+        "saved_us_per_query": round(
+            float(np.mean(base.latency_us) - np.mean(direct.latency_us)), 3),
+        "direct_hit_rate": direct.routing["direct_hit_rate"],
+        "chaos_direct_hit_rate": stale.routing["direct_hit_rate"],
+        "chaos_fallbacks": stale.routing["fallbacks"],
+        "chaos_refreshes": stale.routing["refreshes"],
+    }
+    emit("faults", "direct_hit_rate", result["routing"]["direct_hit_rate"])
+    emit("faults", "saved_us_per_query",
+         result["routing"]["saved_us_per_query"])
+    emit("faults", "chaos_fallbacks", result["routing"]["chaos_fallbacks"])
+
+
+def run(out_path: str = "BENCH_faults.json", smoke: bool = False) -> dict:
+    result: dict = {
+        "t": T,
+        "n_servers": N_SERVERS,
+        "seed": SEED,
+        "smoke": smoke,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+    }
+    ps, shard = _workload(smoke)
+    result["workload"] = {"n_objects": int(len(shard)),
+                          "n_paths": ps.n_paths,
+                          "n_queries": ps.n_queries}
+    _bench_resilience(ps, shard, result)
+    _bench_chaos(ps, shard, result, smoke)
+    _bench_routing(ps, shard, result)
+
+    assert result["resilience"]["k1_feasible_all_losses"], (
+        "k=1 scheme violated under some single-server loss"
+    )
+    assert result["resilience"]["k0_violates"], (
+        "k=0 scheme survived every loss: the workload does not exercise "
+        "the resilience guarantee"
+    )
+    assert result["parity"]["bit_identical"], (
+        "k-resilient gate diverged across backends"
+    )
+    assert result["chaos"]["controller_shrinks_window"], (
+        "controller-on chaos violation window must be strictly shorter "
+        "than the static scheme's"
+    )
+
+    with open(out_path, "w") as fh:
+        json.dump(result, fh, indent=2)
+    print(f"# wrote {out_path}")
+    return result
+
+
+if __name__ == "__main__":
+    args = [a for a in sys.argv[1:]]
+    smoke = "--smoke" in args
+    args = [a for a in args if a != "--smoke"]
+    run(args[0] if args else "BENCH_faults.json", smoke=smoke)

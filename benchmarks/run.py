@@ -23,6 +23,10 @@
   incremental_eval      — dirty-set window re-checks vs full re-eval on
                           the controller drift-repair loop (bit-identical,
                           >= 4x warm speedup, dirty-fraction accounting)
+  fault_resilience      — k-resilient provisioning vs exhaustive
+                          single-server loss (3-backend parity), chaos
+                          kill/revive violation windows static vs
+                          controller-on, routing-table coordinator savings
 
 Usage: PYTHONPATH=src python -m benchmarks.run [module ...]
 Prints ``bench,metric,tags,value`` CSV.
@@ -46,7 +50,7 @@ MODULES = ["fig2_traversals", "fig6_latency_tradeoff", "fig7_sharding",
            "table4_runtime", "reshard_cost", "beyond_paper",
            "engine_backends", "perf_iterate", "serve_tail",
            "tenant_frontier", "routing_policies", "provisioning_policies",
-           "provisioning_scale", "incremental_eval"]
+           "provisioning_scale", "incremental_eval", "fault_resilience"]
 
 # zero-arg entry point per module when it isn't ``run`` (perf_iterate's
 # ``run`` is the arch-cell driver; its benchmark entry is ``run_engine``)

@@ -13,7 +13,10 @@ Public API:
         (backend-dispatched: reference | jnp | pallas; device-resident
         packed bitmask)
   replicate_workload          — vectorized greedy Alg 1 + Alg 2 (the UPDATE
-        loop bit-tests and scatter-ORs the engine's packed device state)
+        loop bit-tests and scatter-ORs the engine's packed device state);
+        ``resilience=KResilient(k=...)`` adds the k-resilience gate
+        (feasible under the loss of any k fault domains, repaired via
+        batched masked re-walks under rotation-failover homes)
   replicate_workload_exact    — faithful sequential Alg 1 + Alg 2
   single_site_oracle          — Fig 2d baseline
   dangling_edge_replication   — Table 3 baseline
@@ -33,6 +36,7 @@ from repro.core.replication import (
     subpath_structure,
 )
 from repro.core.slo import SLOSpec, TenantSpec
+from repro.engine.resilience import KResilient
 from repro.core.greedy import (
     GreedyStats,
     replicate_delta,
@@ -80,6 +84,7 @@ __all__ = [
     "prune_scheme_replicas",
     "subpath_structure",
     "GreedyStats",
+    "KResilient",
     "replicate_delta",
     "replicate_stream",
     "replicate_workload",

@@ -342,6 +342,12 @@ class GreedyStats:
     # n_paths - |dirty set|); 0 when revalidation never ran or fell back
     # to full re-evaluation
     revalidate_rows_saved: int = 0
+    # k-resilience enforcement (replicate_workload(resilience=...)):
+    # (loss case, path) pairs still over budget after the bounded repair
+    # rounds — 0 means the returned scheme survives every loss case —
+    # and the number of masked repair rounds that actually ran
+    resilient_violations: int = 0
+    resilience_rounds: int = 0
 
 
 class DeviceStatsAcc:
@@ -862,6 +868,290 @@ def _capacity_arrays(n_servers: int, capacity, epsilon):
 # touches the violating paths)
 _POLICY_REVALIDATE = 2
 
+# masked-repair rounds for the k-resilience gate: with rotation-failover
+# homes the home_first masked walk is monotone per loss case (one round
+# closes each case for good — Thm 5.3 applies case-by-case), so extra
+# rounds only serve the receding-horizon policies, mirroring
+# _POLICY_REVALIDATE
+_RESILIENCE_ROUNDS = 3
+
+
+def _resilient_eval(packed: PackedScheme, ps: PathSet, cases, homes,
+                    pol, policy_backend: str, load) -> np.ndarray:
+    """h per (loss case, path) against ``packed``'s current words.
+
+    The gate's masked re-walk: loss case d clears its servers' holder
+    bits and walks under the rotation-failover homes ``homes[d]``.
+    ``policy_backend`` keeps the three-way parity discipline — the jnp
+    path batches all cases into one vmapped dispatch, pallas lowers each
+    case to the routed-walk kernels, reference loops the pure-python
+    oracle over per-case host masks.
+    """
+    objects = np.asarray(ps.objects, np.int32)
+    lengths = np.asarray(ps.lengths, np.int32)
+    if policy_backend == "reference":
+        from repro.core.reference import (  # lazy: no cycle at import
+            path_latencies_reference,
+            routed_path_latencies_reference,
+        )
+
+        mask = packed.unpack()
+        rows = []
+        for c, fs in zip(cases, homes):
+            m = mask.copy()
+            m[:, np.asarray(c)] = False
+            if pol is None:
+                rows.append(path_latencies_reference(objects, lengths, m, fs))
+            else:
+                rows.append(routed_path_latencies_reference(
+                    objects, lengths, m, fs, policy=pol, load=load
+                ))
+        return np.stack(rows).astype(np.int64)
+    from repro.engine import backends as _backends  # lazy: no cycle
+    from repro.engine.resilience import case_word_mask  # lazy: no cycle
+
+    W = int(packed.words.shape[1])
+    case_masks = np.stack([case_word_mask(c, W) for c in cases])
+    out = _backends.resilient_counts(
+        to_device(objects),
+        to_device(lengths),
+        packed.words,
+        to_device(case_masks),
+        to_device(np.stack(homes).astype(np.int32)),
+        policy=pol,
+        load=load,
+        backend=policy_backend,
+    )
+    return np.asarray(out).astype(np.int64)
+
+
+def _repair_loss_case(
+    packed: PackedScheme,
+    sub_ps: PathSet,
+    t_sub: np.ndarray,
+    fshard: np.ndarray,
+    cmask_words: np.ndarray,
+    orphans: np.ndarray,
+    pol,
+    policy_backend: str,
+    f_arr: np.ndarray,
+    f_j,
+    capacity,
+    epsilon,
+    cap_j,
+    eps_j,
+    check_capacity: bool,
+    batch_size: int,
+    max_candidates: int,
+    stats: GreedyStats,
+    load,
+    fused: bool,
+    track_rm: bool,
+):
+    """One masked UPDATE pass: provision ``sub_ps`` as if the loss case
+    had already happened.
+
+    Builds a temporary :class:`PackedScheme` view — the live words with
+    the lost servers' holder bits cleared, sharded by the case's
+    rotation-failover homes — and runs the same batched UPDATE machinery
+    (routed gate included) against it.  ``orphans`` are the violating
+    paths' objects whose home the case took down and whose failover home
+    holds no copy yet: they are **re-homed first** (a copy provisioned at
+    the rotation target), because the UPDATE's closed-form cost model
+    prices every object as free at its own home — an assumption the
+    masked scheme breaks exactly at the orphans (and the assumption a
+    real system restores by resharding off a dead server; re-homing is
+    also what makes the data itself survive the case).  Every candidate
+    server is a failover home, hence alive under the case by
+    construction; capacity is checked on the masked load, which equals
+    the live load on every surviving server.  Returns the applied
+    (object, server) additions — orphan re-homes included — for the
+    caller to replay into the live scheme (Thm 5.3: replaying them can
+    only lower latencies of the unmasked walk too).
+    """
+    from repro.engine.backends import mask_case_words  # lazy: no cycle
+
+    masked = PackedScheme(
+        words=mask_case_words(packed.words, to_device(cmask_words)),
+        shard=to_device(np.asarray(fshard, np.int32)),
+        n_servers=packed.n_servers,
+    )
+    if len(orphans):
+        masked.add(orphans, np.asarray(fshard)[orphans])
+    routed_fn = _routed_gate_fn(masked, pol, policy_backend, load=load)
+    fused_c = fused and policy_backend != "reference"
+    use_pallas = fused_c and policy_backend == "pallas"
+    rank, put, bsz = _fused_setup(masked, pol, load, fused_c, None, batch_size)
+    srv_load = jnp.asarray(masked.storage_per_server(f_arr).astype(np.float32))
+    host_scheme: ReplicationScheme | None = None
+    add_obj: list[np.ndarray] = []
+    add_srv: list[np.ndarray] = []
+    if len(orphans):
+        add_obj.append(np.asarray(orphans, np.int64))
+        add_srv.append(np.asarray(fshard, np.int64)[orphans])
+    for b, cls, vec_idx, seq_idx, h_all, tables, counts in _budget_class_plan(
+        sub_ps, t_sub, masked.shard, max_candidates,
+        skip_tables=routed_fn is not None, stats=stats,
+    ):
+        if routed_fn is not None and cls.n_paths:
+            vec_idx, seq_idx, tables, counts, n_skip = _routed_class_filter(
+                cls, b, h_all, routed_fn, max_candidates, stats=stats
+            )
+            stats.routed_skips += n_skip
+        srv_load, additions = _run_update_batches(
+            masked,
+            cls.objects[vec_idx],
+            cls.lengths[vec_idx],
+            masked.shard,
+            f_arr,
+            f_j,
+            tables,
+            counts,
+            np.full(len(vec_idx), b, np.int32),
+            srv_load,
+            cap_j,
+            eps_j,
+            check_capacity,
+            bsz,
+            stats,
+            track_rm,
+            collect_additions=True,
+            routed_fn=None if fused_c else routed_fn,
+            fused=fused_c,
+            pol=pol,
+            rank=rank,
+            use_pallas=use_pallas,
+            put=put,
+        )
+        add_obj.append(additions[0])
+        add_srv.append(additions[1])
+        if len(seq_idx):
+            # exact fallback against the masked host view; additions are
+            # replayed into the masked words so later classes see them
+            if host_scheme is None:
+                host_scheme = ReplicationScheme(
+                    masked.unpack(), np.asarray(fshard, np.int32)
+                )
+            else:
+                host_scheme.mask = masked.unpack()
+            fb_obj: list[int] = []
+            fb_srv: list[int] = []
+            for i in seq_idx:
+                res = update_exact(
+                    host_scheme, cls.path(int(i)), b, f_arr, capacity,
+                    epsilon, policy=pol, load=load,
+                )
+                stats.fallback_paths += 1
+                if res.feasible:
+                    stats.total_cost += res.cost
+                    fb_obj.extend(v for v, _ in res.additions)
+                    fb_srv.extend(s for _, s in res.additions)
+                    if track_rm:
+                        stats.rm.extend(res.rm_entries)
+                else:
+                    stats.failed_paths += 1
+            if fb_obj:
+                masked.add(np.asarray(fb_obj), np.asarray(fb_srv))
+                add_obj.append(np.asarray(fb_obj, np.int64))
+                add_srv.append(np.asarray(fb_srv, np.int64))
+                if check_capacity:
+                    srv_load = jnp.asarray(
+                        masked.storage_per_server(f_arr).astype(np.float32)
+                    )
+    return (
+        np.concatenate(add_obj) if add_obj else np.zeros(0, np.int64),
+        np.concatenate(add_srv) if add_srv else np.zeros(0, np.int64),
+    )
+
+
+def _enforce_resilience(
+    packed: PackedScheme,
+    ps: PathSet,
+    t_path: np.ndarray,
+    res,
+    pol,
+    policy_backend: str,
+    f_arr: np.ndarray,
+    f_j,
+    capacity,
+    epsilon,
+    cap_j,
+    eps_j,
+    check_capacity: bool,
+    batch_size: int,
+    max_candidates: int,
+    stats: GreedyStats,
+    load,
+    fused: bool,
+    track_rm: bool,
+):
+    """The k-resilience gate: repair every loss case until none violates.
+
+    Per bounded round: evaluate h under every loss case of ``res`` (one
+    batched masked re-walk), then for each violating case run the masked
+    UPDATE over its violating paths and scatter-OR the chosen additions
+    into the LIVE words — so later cases and rounds price against them.
+    The surviving (case, path) violations land in
+    ``stats.resilient_violations``; 0 means the returned scheme stays
+    latency-feasible under the loss of any single server / fault domain
+    combination the constraint names.  Returns the applied (object,
+    server) additions.
+    """
+    from repro.engine.resilience import (  # lazy: no cycle at import
+        case_word_mask,
+        failover_shard,
+    )
+
+    n_servers = packed.n_servers
+    shard_host = np.asarray(packed.shard)
+    cases = res.loss_cases(n_servers)
+    homes = [failover_shard(shard_host, c, n_servers) for c in cases]
+    W = int(packed.words.shape[1])
+    all_obj: list[np.ndarray] = []
+    all_srv: list[np.ndarray] = []
+    for rnd in range(_RESILIENCE_ROUNDS + 1):
+        h_cases = _resilient_eval(
+            packed, ps, cases, homes, pol, policy_backend, load
+        )
+        viol = h_cases > t_path[None, :]
+        total = int(viol.sum())
+        if total == 0 or rnd == _RESILIENCE_ROUNDS:
+            stats.resilient_violations = total
+            break
+        stats.resilience_rounds += 1
+        mask_host = packed.unpack()
+        for d, c in enumerate(cases):
+            idx = np.nonzero(viol[d])[0]
+            if not len(idx):
+                continue
+            # objects the case orphans: homed on a lost server, no copy
+            # at the rotation failover home yet — re-homed by the repair
+            vobj = np.unique(np.asarray(ps.objects)[idx])
+            vobj = vobj[vobj >= 0]
+            dead = np.zeros(n_servers, bool)
+            dead[np.asarray(c)] = True
+            orphans = vobj[
+                dead[shard_host[vobj]] & ~mask_host[vobj, homes[d][vobj]]
+            ]
+            obj, srv = _repair_loss_case(
+                packed, ps.select(idx), t_path[idx], homes[d],
+                case_word_mask(c, W), orphans, pol, policy_backend,
+                f_arr, f_j, capacity, epsilon, cap_j, eps_j,
+                check_capacity, batch_size, max_candidates, stats, load,
+                fused, track_rm,
+            )
+            if len(obj):
+                # replay into the live scheme: monotone adds, all targets
+                # alive under the case (failover homes by construction)
+                packed.add(obj, srv)
+                mask_host[obj, srv] = True  # keep later cases' orphan filter exact
+                all_obj.append(obj)
+                all_srv.append(srv)
+    return (
+        np.concatenate(all_obj) if all_obj else np.zeros(0, np.int64),
+        np.concatenate(all_srv) if all_srv else np.zeros(0, np.int64),
+    )
+
 
 def replicate_workload(
     pathset: PathSet,
@@ -882,6 +1172,7 @@ def replicate_workload(
     load: np.ndarray | None = None,
     fused: bool = False,
     mesh=None,
+    resilience=None,
 ):
     """Alg 1 over a workload with the vectorized batched UPDATE.
 
@@ -947,14 +1238,29 @@ def replicate_workload(
     from ``repro.engine.sharding.provisioning_mesh``) additionally shards
     every batch across devices on the path axis while the packed words
     stay replicated (requires ``fused=True``).
+
+    ``resilience`` (int k | :class:`~repro.engine.KResilient` | None)
+    adds the k-resilience gate: after the ordinary pass (and the policy
+    prune — pruning decides on the non-resilient criterion, so it must
+    not run after the resilience replicas land) every loss case of the
+    constraint is evaluated as a masked re-walk — the lost servers'
+    holder bits cleared, homes remapped by rotation failover — batched
+    across cases in the same fused UPDATE machinery, and each violating
+    (case, path) pair is re-run through UPDATE against the masked
+    snapshot.  The additions are replayed into the live scheme (sound by
+    Thm 5.3).  ``stats.resilient_violations == 0`` certifies the
+    returned scheme stays latency-feasible under the loss of any single
+    server / any k fault domains.
     """
     from repro.core.slo import normalize_path_budgets  # local: no cycle at import
+    from repro.engine.resilience import resolve_resilience  # local: no cycle
     from repro.engine.routing import resolve_policy  # local: no cycle at import
 
     t0 = time.perf_counter()
     n = shard.shape[0]
     pol = resolve_policy(policy)
     pol = None if pol.name == "home_first" else pol
+    res = resolve_resilience(resilience)
     t_path = normalize_path_budgets(t, pathset)
     if prune:
         # the budget joins the §5.3 dedup key: a tight-budget path must not
@@ -1082,6 +1388,14 @@ def replicate_workload(
             # removals are not monotone: the packed words are stale
             packed = PackedScheme.from_mask(scheme.mask, scheme.shard)
 
+    if res is not None and ps.n_paths:
+        _enforce_resilience(
+            packed, ps, t_path, res, pol, policy_backend, f_arr, f_j,
+            capacity, epsilon, cap_j, eps_j, check_capacity, batch_size,
+            max_candidates, stats, load, fused, track_rm,
+        )
+        scheme.mask = packed.unpack()
+
     stats.replicas = scheme.replica_count()
     stats.runtime_s = time.perf_counter() - t0
     if return_engine:
@@ -1108,6 +1422,7 @@ def replicate_delta(
     collect_additions: bool = True,
     stats_acc: DeviceStatsAcc | None = None,
     sync_host: bool = True,
+    resilience=None,
 ):
     """Warm-start incremental UPDATE over *delta* paths (online serving).
 
@@ -1156,8 +1471,15 @@ def replicate_delta(
     per-call sync point).  Together they make a fused, non-policy call
     fully asynchronous — what :func:`replicate_stream`'s double-buffered
     pipeline needs to overlap chunk ingestion with device compute.
+
+    ``resilience`` mirrors :func:`replicate_workload`: after the delta
+    pass the loss cases are re-walked over the delta paths and repaired;
+    the resilience additions join the returned delta (a controller
+    repairing a failure passes the dead set as a one-domain
+    ``KResilient`` to provision survivable copies in the same call).
     """
     from repro.core.slo import normalize_path_budgets  # local: no cycle at import
+    from repro.engine.resilience import resolve_resilience  # local: no cycle
     from repro.engine.routing import resolve_policy  # local: no cycle at import
 
     t0 = time.perf_counter()
@@ -1171,6 +1493,7 @@ def replicate_delta(
     n_servers = packed.n_servers
     pol = resolve_policy(policy)
     pol = None if pol.name == "home_first" else pol
+    res = resolve_resilience(resilience)
     t_path = normalize_path_budgets(t, pathset)
     if prune:
         ps, keep = pathset.prune_redundant(
@@ -1308,6 +1631,18 @@ def replicate_delta(
             routed_fn, ps, t_path, run_classes, stats,
             index=PathIndex(np.asarray(ps.objects), packed.n_objects),
         )
+
+    if res is not None:
+        r_obj, r_srv = _enforce_resilience(
+            packed, ps, t_path, res, pol, policy_backend, f_arr, f_j,
+            capacity, epsilon, cap_j, eps_j, check_capacity, batch_size,
+            max_candidates, stats, load, fused, track_rm,
+        )
+        if len(r_obj):
+            if engine.scheme is not None:
+                engine.scheme.mask[r_obj, r_srv] = True
+            add_obj = np.concatenate([add_obj, r_obj])
+            add_srv = np.concatenate([add_srv, r_srv])
 
     # the UPDATE loop scatter-ORs into packed.words inside jits, bypassing
     # engine.add_replicas — report the touched objects so the engine's

@@ -8,8 +8,18 @@ from repro.distsys.executor import (
     trace_paths,
 )
 from repro.distsys.router import Router
+from repro.distsys.routing_table import RoutingTable
 from repro.distsys.checkpoint import CheckpointManager
-from repro.distsys.faults import Event, apply_event, event_schedule, run_schedule
+from repro.distsys.faults import (
+    ChaosEvent,
+    Event,
+    apply_event,
+    chaos_schedule,
+    event_schedule,
+    run_schedule,
+    time_to_repair,
+    violation_windows,
+)
 
 __all__ = [
     "Cluster",
@@ -20,9 +30,14 @@ __all__ = [
     "failover_home",
     "trace_paths",
     "Router",
+    "RoutingTable",
     "CheckpointManager",
+    "ChaosEvent",
     "Event",
     "apply_event",
+    "chaos_schedule",
     "event_schedule",
     "run_schedule",
+    "time_to_repair",
+    "violation_windows",
 ]

@@ -26,9 +26,20 @@ analyzer, and every benchmark.
                    persistent dirty-set latency cache
                    (``path_latencies(..., incremental=True)``) and the
                    prune sweep's affected-path lookups
+  KResilient     — k-resilience constraint (loss cases over servers or
+                   fault domains); consumed by
+                   ``LatencyEngine.resilient_path_latencies`` /
+                   ``is_resilient_feasible`` and the greedy gate
+                   (``replicate_workload(resilience=...)``)
 """
 from repro.engine.engine import DevicePaths, LatencyEngine, RawScheme
 from repro.engine.incremental import IncrementalEval, PathIndex
+from repro.engine.resilience import (
+    KResilient,
+    case_word_mask,
+    failover_shard,
+    resolve_resilience,
+)
 from repro.engine.sharding import round_up_rows
 from repro.engine.packed import PackedScheme, pack_bool_mask, unpack_words
 from repro.engine.routing import (
@@ -74,4 +85,8 @@ __all__ = [
     "PathIndex",
     "IncrementalEval",
     "round_up_rows",
+    "KResilient",
+    "case_word_mask",
+    "failover_shard",
+    "resolve_resilience",
 ]

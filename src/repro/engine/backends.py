@@ -545,6 +545,93 @@ def gate_counts(objects, lengths, words, shard, pol, rank, backend="jnp",
     )
 
 
+# ---------------------------------------------------------------------------
+# k-resilient evaluation: the masked re-walk over every loss case.
+# ---------------------------------------------------------------------------
+@jax.jit
+def mask_case_words(words, case_mask):
+    """Clear one loss case's holder bits: ``words & ~case_mask`` per row."""
+    return words & ~case_mask[None, :]
+
+
+@jax.jit
+def _resilient_home_vmap(objects, lengths, words, case_masks, case_homes):
+    def one(cmask, home):
+        return words_scan(objects, lengths, words & ~cmask[None, :], home)
+
+    return jax.vmap(one)(case_masks, case_homes)
+
+
+@functools.partial(jax.jit, static_argnames=("lookahead",))
+def _resilient_routed_vmap(
+    objects, lengths, words, case_masks, case_homes, load, lookahead
+):
+    def one(cmask, home):
+        w = words & ~cmask[None, :]
+        return _routed_counts_impl(
+            objects, lengths, w, home, _root_home(objects, home), load,
+            lookahead=lookahead,
+        )
+
+    return jax.vmap(one)(case_masks, case_homes)
+
+
+@functools.partial(jax.jit, static_argnames=("depth",))
+def _resilient_dp_vmap(objects, lengths, words, case_masks, case_homes, depth):
+    def one(cmask, home):
+        w = words & ~cmask[None, :]
+        return _dp_counts_impl(
+            objects, lengths, w, home, _root_home(objects, home), depth=depth
+        )
+
+    return jax.vmap(one)(case_masks, case_homes)
+
+
+def resilient_counts(
+    objects, lengths, words, case_masks, case_homes, policy=None, load=None,
+    backend: str = "jnp", block: int = 128,
+):
+    """h(p, r - case, rho; policy) per (loss case, path): int32 [D, P].
+
+    The k-resilience gate's masked re-walk, batched across loss cases:
+    for each case the lost servers' holder bits are cleared from the
+    packed words (``case_masks`` uint32 [D, W]) and the walk runs under
+    the case's rotation-failover homes (``case_homes`` int32 [D, n]) —
+    see ``repro.engine.resilience``.  The ``jnp`` backend vmaps all D
+    cases into one dispatch; ``pallas`` lowers each case's walk to the
+    existing path-latency / routed-walk kernels over the masked words
+    (the masking itself is one trivial AND, so kernel parity is inherited
+    rather than re-implemented).  The reference oracle loops live in
+    ``LatencyEngine.resilient_path_latencies`` (they need the host mask).
+    """
+    pol = resolve_policy(policy)
+    if backend == "pallas":
+        outs = []
+        for d in range(case_masks.shape[0]):
+            w = mask_case_words(words, case_masks[d])
+            if pol.name == "home_first":
+                outs.append(pallas_eval(objects, lengths, w, case_homes[d],
+                                        block=block))
+            else:
+                outs.append(pallas_routed_eval(objects, lengths, w,
+                                               case_homes[d], pol, load=load,
+                                               block=block))
+        return jnp.stack(outs)
+    if backend != "jnp":
+        raise ValueError(f"resilient_counts backend must be jnp | pallas, got {backend!r}")
+    if pol.name == "home_first":
+        return _resilient_home_vmap(objects, lengths, words, case_masks, case_homes)
+    if pol.name == "nearest_copy_dp":
+        return _resilient_dp_vmap(
+            objects, lengths, words, case_masks, case_homes, depth=_dp_depth(pol)
+        )
+    return _resilient_routed_vmap(
+        objects, lengths, words, case_masks, case_homes,
+        _load_vector(load if pol.uses_load else None, words),
+        lookahead=pol.lookahead,
+    )
+
+
 def pallas_routed_trace(
     objects, lengths, words, shard, policy, load=None, block: int = 128,
     start=None,

@@ -169,13 +169,23 @@ class LatencyEngine:
         if self._inc is not None:
             self._inc.invalidate_objects(objects)
 
-    def refresh(self) -> None:
-        """Re-pack after the host scheme's mask was mutated directly."""
+    def refresh(self, objects=None) -> None:
+        """Re-pack after the host scheme's mask was mutated directly.
+
+        ``objects`` — when the caller knows the exact set of objects whose
+        replica rows changed (a §5.4 drain's dirty set) — invalidates only
+        the cached latencies of paths touching them, keeping the rest of
+        the incremental cache warm; without it every cached vector is
+        dropped (the safe call for layout changes like scale-out).
+        """
         if self.scheme is not None and self.resident:
             self.packed = PackedScheme.from_mask(self.scheme.mask, self.scheme.shard)
         if self._inc is not None:
-            # no delta to reason about: drop every cached latency vector
-            self._inc.invalidate_all()
+            if objects is None:
+                # no delta to reason about: drop every cached latency vector
+                self._inc.invalidate_all()
+            else:
+                self._inc.invalidate_objects(objects)
 
     def add_replicas(self, objects, servers) -> None:
         """Monotone additions, applied on device (and to the host scheme).
@@ -502,6 +512,102 @@ class LatencyEngine:
                 >= 0
             )
         )
+
+    def resilient_path_latencies(
+        self,
+        pathset,
+        resilience,
+        policy=None,
+        load: np.ndarray | None = None,
+    ) -> np.ndarray:
+        """h per (loss case, path) under ``resilience``: int32 [D, P].
+
+        Row d is the policy walk with loss case d's servers down — their
+        holder bits cleared from the packed words and every lost home
+        remapped by rotation failover (``repro.engine.resilience``).  A
+        path is k-resilient iff every row keeps it within budget; the
+        max over rows is the resilient latency the greedy gate enforces.
+        All three backends implement the masked re-walk (the ``jnp``
+        path batches all D cases into one vmapped dispatch).
+        """
+        from repro.engine.resilience import (
+            case_word_mask,
+            failover_shard,
+            resolve_resilience,
+        )
+
+        res = resolve_resilience(resilience)
+        if res is None:
+            raise ValueError("resilient_path_latencies needs a resilience spec")
+        S = self.n_servers
+        cases = res.loss_cases(S)
+        P = pathset.n_paths
+        if P == 0:
+            return np.zeros((len(cases), 0), np.int32)
+        pol = resolve_policy(policy)
+        shard_host = self.host_shard()
+        homes = np.stack([failover_shard(shard_host, c, S) for c in cases])
+        if self.backend == "reference":
+            from repro.core.reference import (  # lazy: no cycle
+                path_latencies_reference,
+                routed_path_latencies_reference,
+            )
+
+            mask = self.host_mask()
+            objects = np.asarray(pathset.objects)
+            lengths = np.asarray(pathset.lengths)
+            rows = []
+            for c, fs in zip(cases, homes):
+                m = mask.copy()
+                m[:, c] = False
+                if pol.name == "home_first":
+                    rows.append(path_latencies_reference(objects, lengths, m, fs))
+                else:
+                    rows.append(routed_path_latencies_reference(
+                        objects, lengths, m, fs, policy=pol, load=load
+                    ))
+            return np.stack(rows).astype(np.int32)
+        words, _ = self._device_words()
+        W = int(words.shape[1])
+        case_masks = np.stack([case_word_mask(c, W) for c in cases])
+        out = backends.resilient_counts(
+            to_device(np.asarray(pathset.objects, np.int32)),
+            to_device(np.asarray(pathset.lengths, np.int32)),
+            words,
+            to_device(case_masks),
+            to_device(homes.astype(np.int32)),
+            policy=pol,
+            load=load,
+            backend=self.backend,
+            block=self.block,
+        )
+        return np.asarray(out).astype(np.int32)
+
+    def is_resilient_feasible(
+        self,
+        pathset,
+        t,
+        resilience,
+        policy=None,
+        load: np.ndarray | None = None,
+    ) -> bool:
+        """Every query within its t_Q under EVERY loss case (Def 4.4 + k).
+
+        The resilient strengthening of :meth:`is_feasible`: the per-query
+        latency is maxed over the query's paths *and* over all loss cases
+        of ``resilience`` before the budget comparison.
+        """
+        h = self.resilient_path_latencies(
+            pathset, resilience, policy=policy, load=load
+        )
+        if h.shape[1] == 0:
+            return True
+        t_q = _budget_vector(t, pathset.n_queries)
+        qids = np.asarray(pathset.query_ids)
+        worst = h.max(axis=0)  # [P] max over loss cases
+        lq = np.zeros(pathset.n_queries, np.int32)
+        np.maximum.at(lq, qids, worst)
+        return bool(np.all(lq <= t_q))
 
     def margin_costs(
         self, objects, servers, f: np.ndarray | None = None

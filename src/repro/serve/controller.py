@@ -57,7 +57,7 @@ from repro.core.paths import PathSet
 from repro.core.reshard import ReshardingMap
 from repro.core.slo import SLOSpec, TenantSpec
 from repro.distsys.cluster import Cluster
-from repro.engine import LatencyEngine
+from repro.engine import KResilient, LatencyEngine
 from repro.obs import attribute_burn
 
 
@@ -123,7 +123,7 @@ class AdaptationReport:
     """What one repair did (the benchmark's bytes-replicated accounting)."""
 
     step: int
-    trigger: str                   # "feasibility" | "p99_slo" | "forecast"
+    trigger: str          # "feasibility" | "p99_slo" | "forecast" | "liveness"
     paths_repaired: int
     replicas_added: int
     bytes_added: float
@@ -807,6 +807,79 @@ class AdaptiveController:
             runtime_s=time.perf_counter() - t0,
             tenants=tuple(name for name, _ in repair),
             deferred=deferred,
+            additions=(add_obj, add_srv),
+        )
+        self.reports.append(report)
+        return report
+
+    def on_liveness_change(
+        self, pathset: PathSet, slo: SLOSpec | None = None
+    ) -> AdaptationReport | None:
+        """React to a liveness change: provision around the dead set.
+
+        The serving layer routes around dead servers (``failover_home``),
+        but routed-around queries pay extra distributed traversals the
+        greedy bound never priced — the chaos violation window.  This
+        closes it proactively: the currently-dead servers become a single
+        loss case (``KResilient(k=1, domains=(dead,))``), and one
+        ``replicate_delta`` pass provisions replicas *on survivors* until
+        every path meets its budget with the dead set masked out — the
+        same masked re-walk machinery the k-resilient gate uses at
+        provisioning time, warm-started from the live scheme.
+
+        No-op (returns None) when every server is alive; safe to call on
+        every kill *and* revive — a revive shrinks the dead set, and the
+        remaining dead servers still get their loss case repaired.  The
+        additions are monotone, so a later revive never invalidates them
+        (Thm 5.3); they simply become standing k-resilience headroom.
+        """
+        t0 = time.perf_counter()
+        alive = np.asarray([s.alive for s in self.cluster.servers], bool)
+        dead = np.nonzero(~alive)[0]
+        if not len(dead):
+            return None
+        slo = (
+            slo if slo is not None
+            else self.config.default_slo(pathset.n_queries)
+        )
+        res = KResilient(k=1, domains=(tuple(int(s) for s in dead),))
+        stats, (add_obj, add_srv) = replicate_delta(
+            pathset,
+            self.engine,
+            slo,
+            f=self.f,
+            capacity=self.config.capacity,
+            epsilon=self.config.epsilon,
+            track_rm=True,
+            policy=self.config.score_policy,
+            resilience=res,
+        )
+        self.cluster.apply_scheme_delta(add_obj, add_srv)
+        for u, v, s in stats.rm or ():
+            self.rmap.rm.setdefault(int(u), set()).add(int(v))
+            self.rmap.rc[(int(v), int(s))] = (
+                self.rmap.rc.get((int(v), int(s)), 0) + 1
+            )
+        # windows were scored against the pre-repair scheme: re-judge
+        # (dirty-scoped), without re-arming any tenant's repair state
+        self._reeval_windows(set())
+        fv = np.ones(len(add_obj)) if self.f is None else self.f[add_obj]
+        report = AdaptationReport(
+            step=self.step,
+            trigger="liveness",
+            paths_repaired=pathset.n_paths,
+            replicas_added=int(len(add_obj)),
+            bytes_added=float(np.sum(fv)) if len(add_obj) else 0.0,
+            replicas_evicted=0,
+            bytes_evicted=0.0,
+            feasible_after=bool(
+                self.engine.is_resilient_feasible(
+                    pathset, slo.t_q, res,
+                    policy=self.config.score_policy,
+                )
+            ),
+            runtime_s=time.perf_counter() - t0,
+            tenants=("liveness",),
             additions=(add_obj, add_srv),
         )
         self.reports.append(report)

@@ -118,6 +118,12 @@ class SimReport:
     hedges_fired: int = 0
     hedge_wins: int = 0          # fired hedges whose backup completed first
     hedges_cancelled: int = 0    # queued work skipped after first completion
+    # chaos injection: the (t_us, kind, server) liveness flips applied
+    # mid-run (empty for chaos-free runs)
+    chaos_events: list = dataclasses.field(default_factory=list)
+    # client-side routing table: direct-vs-fallback counters (None when
+    # every query took the coordinator path)
+    routing: dict | None = None
 
     def percentile(self, q: float) -> float:
         return float(np.percentile(self.latency_us, q))
@@ -244,6 +250,16 @@ class SimReport:
             out["admission"] = adm
         if self.batch_stats is not None:
             out["batching"] = self.batch_stats.summary()
+        if self.chaos_events:
+            out["chaos"] = {
+                "events": [
+                    {"at_us": t, "kind": k, "server": s}
+                    for t, k, s in self.chaos_events
+                ],
+                "kills": sum(1 for _, k, _ in self.chaos_events if k == "kill"),
+            }
+        if self.routing is not None:
+            out["routing_table"] = self.routing
         if self.slo_hedging:
             out["hedging"] = {
                 "fired": self.hedges_fired,
@@ -417,6 +433,8 @@ def simulate(
     admission: AdmissionConfig | None = None,
     hedge: HedgePolicy | None = None,
     closed_queries: np.ndarray | None = None,
+    chaos=None,
+    routing_table=None,
 ) -> SimReport:
     """Serve ``pathset``'s queries through per-server FIFO queues.
 
@@ -493,6 +511,30 @@ def simulate(
     arrive open-loop at ``rate_qps`` — one run with an open-loop
     background and a closed-loop foreground (interference studies);
     ``summary()`` then splits per-loop percentiles.
+
+    ``chaos`` (a list of :class:`repro.distsys.faults.ChaosEvent`,
+    requires ``router=None`` and ``hedge=None``) kills and revives
+    servers mid-run: at each event's ``at_us`` the server's liveness
+    flips (mirrored into ``cluster.servers``, so a controller observing
+    between segments sees it), hop targets are re-resolved for every
+    query that has NOT arrived yet (``reroute_pending`` — in-flight
+    queries keep their old routes and a killed server drains its queue
+    gracefully, modeling a crash whose in-flight RPCs time out on the
+    old routes), and under ``hop_feedback`` the liveness-masked holder
+    arrays are recomputed so the very next dispatch routes around the
+    loss.  A killed server's replicas stay on disk and serve again on
+    revive.  ``SimReport.chaos_events`` logs the applied flips; feed the
+    report to ``repro.distsys.faults.violation_windows`` to score the
+    outage.
+
+    ``routing_table`` (a :class:`repro.distsys.RoutingTable` over this
+    cluster) models coordinator-free client routing: per arrival the
+    query's root is looked up in the client's cached snapshot; a
+    live-valid pick goes **direct-to-shard** and skips the
+    ``coordinator_us`` barrier, a miss (stale snapshot: target dead or
+    replica moved) pays the coordinator hop and force-refreshes the
+    table.  ``SimReport.routing`` carries the hit/fallback/refresh
+    counters.
     """
     from repro.engine.routing import pick_holder_host, resolve_policy
 
@@ -524,6 +566,12 @@ def simulate(
             raise ValueError(
                 "hedge= is incompatible with hop_feedback/reroute_every"
             )
+    if chaos and (router is not None or hedge is not None):
+        raise ValueError(
+            "chaos= requires router=None and hedge=None: coordinator "
+            "variants are built once at entry and would go stale across "
+            "liveness flips"
+        )
     # mixed open/closed loop: closed_queries picks the client-pool subset
     is_closed: np.ndarray | None = None
     closed_ids: np.ndarray | None = None
@@ -658,6 +706,11 @@ def simulate(
     failed = np.zeros(nq, bool)
     n_waits = 0
     wait_us = 0.0
+
+    # per-query coordinator barrier: a routing-table direct hit skips it
+    coord_barrier = np.full(nq, model.coordinator_us, np.float64)
+    roots_all = _query_roots(pathset) if routing_table is not None else None
+    chaos_log: list[tuple[float, str, int]] = []
 
     # --- batched dispatch plane state ------------------------------------
     # admission: per-variant jitter-free floors + wall-clock deadlines
@@ -810,7 +863,7 @@ def simulate(
 
     def complete(q, t, v=0):
         nonlocal hedge_wins
-        completion[q] = t + model.coordinator_us
+        completion[q] = t + coord_barrier[q]
         if hedge is not None:
             tid = int(tenant_of[q]) if tenant_of is not None else 0
             hedge.observe(tid, completion[q] - arrivals_us[q])
@@ -896,6 +949,9 @@ def simulate(
     else:
         for q in range(nq):
             push(float(arrivals_us[q]), "arrive", q)
+    if chaos:
+        for ev in chaos:
+            push(float(ev.at_us), "chaos", ev)
 
     arrivals_left = nq
     arrived_flag = np.zeros(nq, bool)
@@ -959,6 +1015,12 @@ def simulate(
                     )
                     cur_variant = reroute_pending(live)
             arrived_flag[q] = True
+            if routing_table is not None:
+                # client-side snapshot lookup: a live-valid pick goes
+                # direct-to-shard and skips the coordinator barrier
+                _, direct = routing_table.lookup(int(roots_all[q]), t)
+                if direct:
+                    coord_barrier[q] = 0.0
             if coord_policy == "hedged":
                 # race both coordinator picks; first completion wins
                 ok0 = launch(t, q, 0)
@@ -1057,6 +1119,25 @@ def simulate(
                 hedges_fired += 1
                 hedge_fired[q] = True
                 failed[q] = failed[q] and bool(variants_dead[1][q])
+        elif kind == "chaos":
+            ev = data
+            want = ev.kind == "revive"
+            if alive[ev.server] != want:
+                alive[ev.server] = want
+                cluster.servers[ev.server].alive = want
+                chaos_log.append((t, ev.kind, ev.server))
+                if hop_feedback:
+                    # next dispatch routes around the loss immediately
+                    mask_alive = cluster.scheme.mask & alive[None, :]
+                    fo_home = failover_home(cluster.scheme, alive)
+                else:
+                    # pending (not-yet-arrived) queries re-trace against
+                    # the new liveness; in-flight work keeps its routes
+                    live = np.asarray(
+                        [busy[s] + len(queues[s]) for s in range(S)],
+                        np.int64,
+                    )
+                    cur_variant = reroute_pending(live)
         else:  # "advance" (degraded hop completion)
             job = data
             if t_stage is not None and job[3] < 0:
@@ -1126,4 +1207,6 @@ def simulate(
         hedges_fired=hedges_fired,
         hedge_wins=hedge_wins,
         hedges_cancelled=hedges_cancelled,
+        chaos_events=chaos_log,
+        routing=routing_table.summary() if routing_table is not None else None,
     )

